@@ -1,0 +1,30 @@
+"""Fig. 12: effect of update batch size on cofactor-maintenance throughput
+(Retailer schema, F-IVM)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import IVMEngine
+from repro.core.apps import regression
+
+from .common import (RETAILER_DOMS, RETAILER_RELATIONS, emit, retailer_vo,
+                     run_engine_stream, synth_db, update_stream)
+
+
+def run(batches=(16, 64, 256, 1024), n_batches: int = 8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    q = regression.cofactor_query(RETAILER_RELATIONS, RETAILER_DOMS)
+    db = synth_db(RETAILER_RELATIONS, RETAILER_DOMS, q.ring, rng)
+    rows = []
+    for b in batches:
+        eng = IVMEngine.build(q, db, var_order=retailer_vo(), strategy="fivm")
+        stream = update_stream(RETAILER_RELATIONS, RETAILER_DOMS, q.ring, rng,
+                               b, n_batches)
+        tps, dt = run_engine_stream(eng, stream)
+        rows.append((f"batch_size/retailer/b={b}",
+                     round(dt / n_batches * 1e6, 1), f"tuples_per_s={tps:.0f}"))
+    return emit(rows, ("name", "us_per_call", "derived"))
+
+
+if __name__ == "__main__":
+    run()

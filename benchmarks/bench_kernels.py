@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks (XLA path on CPU; the Pallas variants target TPU
+and are validated in interpret mode by tests/test_kernels.py)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import emit
+
+
+def _time(fn, reps=5):
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    B, m = 4096, 32
+    x = rng.standard_normal((B, m)).astype(np.float32)
+    w = rng.standard_normal((B,)).astype(np.float32)
+    t = _time(lambda: ops.cofactor_update(x, w, backend="jnp"))
+    flops = 2 * B * m * m
+    rows.append(("kernels/cofactor_update/4096x32", round(t * 1e6, 1),
+                 f"gflops={flops/t/1e9:.2f}"))
+
+    K, mm = 256, 32
+    a = [rng.standard_normal(s).astype(np.float32)
+         for s in ((K,), (K, mm), (K, mm, mm))]
+    b = [rng.standard_normal(s).astype(np.float32)
+         for s in ((K,), (K, mm), (K, mm, mm))]
+    t = _time(lambda: ops.ring_mul(*a, *b, backend="jnp"))
+    rows.append((f"kernels/ring_mul/{K}x{mm}", round(t * 1e6, 1), ""))
+
+    v = rng.standard_normal((8192, 64)).astype(np.float32)
+    ids = rng.integers(0, 128, size=(8192,)).astype(np.int32)
+    t = _time(lambda: ops.segment_ring_sum(v, ids, 128, backend="jnp"))
+    rows.append(("kernels/segment_ring_sum/8192x64->128", round(t * 1e6, 1), ""))
+
+    n = 1024
+    A1 = rng.standard_normal((n, n)).astype(np.float32)
+    A3 = rng.standard_normal((n, n)).astype(np.float32)
+    u = rng.standard_normal((n,)).astype(np.float32)
+    vv = rng.standard_normal((n,)).astype(np.float32)
+    V = rng.standard_normal((n, n)).astype(np.float32)
+    t = _time(lambda: ops.rank1_chain_update(A1, u, vv, A3, V, backend="jnp"))
+    t_full = _time(lambda: (A1 @ (np.outer(u, vv)) @ A3))
+    rows.append((f"kernels/rank1_chain/n={n}", round(t * 1e6, 1),
+                 f"dense_chain_us={t_full*1e6:.0f}"))
+
+    q = rng.standard_normal((1, 8, 1024, 64)).astype(np.float32)
+    k = rng.standard_normal((1, 2, 1024, 64)).astype(np.float32)
+    vv = rng.standard_normal((1, 2, 1024, 64)).astype(np.float32)
+    t = _time(lambda: ops.flash_attention(q, k, vv, causal=True, backend="jnp"),
+              reps=3)
+    rows.append(("kernels/flash_attention/1x8x1024x64", round(t * 1e6, 1), ""))
+    return emit(rows, ("name", "us_per_call", "derived"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Fig. 8: sum-aggregate maintenance throughput — F-IVM vs 1-IVM vs DBT vs
+reevaluation, Retailer (snowflake) and Housing (star) schemas."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import IVMEngine, Query, sum_ring
+
+from .common import (HOUSING_DOMS_BIG, HOUSING_RELATIONS, RETAILER_DOMS_BIG,
+                     RETAILER_RELATIONS, emit, housing_vo, retailer_vo,
+                     run_engine_stream, synth_db, update_stream)
+
+
+def _sum_query(relations, doms, sum_var):
+    return Query(relations=relations, free_vars=(), ring=sum_ring(),
+                 domains=doms, lifts={sum_var: ("value",)})
+
+
+def run(batch: int = 256, n_batches: int = 12, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for dataset, relations, doms, vo, sum_var in (
+        ("retailer", RETAILER_RELATIONS, RETAILER_DOMS_BIG, retailer_vo(), "units"),
+        ("housing", HOUSING_RELATIONS, HOUSING_DOMS_BIG, housing_vo(), "pc"),
+    ):
+        ring = sum_ring()
+        q = _sum_query(relations, doms, sum_var)
+        db = synth_db(relations, doms, ring, rng)
+        stream = update_stream(relations, doms, ring, rng, batch, n_batches)
+        for strategy in ("fivm", "dbt", "fivm_1", "reeval"):
+            eng = IVMEngine.build(q, db, var_order=vo, strategy=strategy)
+            tps, dt = run_engine_stream(eng, stream)
+            rows.append((f"sum_agg/{dataset}/{strategy}",
+                         round(dt / n_batches * 1e6, 1),
+                         f"tuples_per_s={tps:.0f};views={eng.num_materialized()}"))
+    return emit(rows, ("name", "us_per_call", "derived"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,148 @@
+"""Shared benchmark utilities: schemas modeled on the paper's datasets,
+timing, and CSV emission.
+
+Absolute numbers on this 1-core CPU container are not comparable to the
+paper's Azure DS14; the *relative* gaps between strategies are the
+reproduction target (EXPERIMENTS.md cites both).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DenseRelation, Query, chain, sum_ring
+
+# ---------------------------------------------------------------------------
+# Retailer-like snowflake (scaled-down dictionary domains)
+# ---------------------------------------------------------------------------
+RETAILER_RELATIONS = {
+    "Inventory": ("locn", "dateid", "ksn", "units"),
+    "Item": ("ksn", "cat", "price"),
+    "Weather": ("locn", "dateid", "temp"),
+    "Location": ("locn", "zip", "rgn"),
+    "Census": ("zip", "pop"),
+}
+RETAILER_DOMS = dict(locn=24, dateid=24, ksn=32, units=8, cat=6, price=8,
+                     temp=8, zip=12, rgn=4, pop=8)
+# larger dictionary domains for scalar-payload benches (reevaluation cost
+# must reflect |D|, not dispatch overhead; degree-m benches keep the small
+# domains since payloads carry m×m matrices per key)
+RETAILER_DOMS_BIG = dict(locn=96, dateid=96, ksn=128, units=8, cat=6, price=8,
+                         temp=8, zip=32, rgn=4, pop=8)
+HOUSING_DOMS_BIG = dict(pc=65536, h1=8, h2=8, s1=8, i1=8, r1=8, d1=8, t1=8)
+
+
+def retailer_vo():
+    """Paper Sec. 8.1: join variables ordered locn { dateid { ksn }, zip };
+    each relation's own variables hang below its lowest join variable."""
+    from repro.core import chain
+    return chain(
+        ["locn", "dateid", "ksn"],
+        {"locn": [["zip"]],
+         "zip": [["rgn"], ["pop"]],
+         "dateid": [["temp"]],
+         "ksn": [["units"], ["cat", "price"]]},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Housing-like star schema (join on postcode)
+# ---------------------------------------------------------------------------
+HOUSING_RELATIONS = {
+    "House": ("pc", "h1", "h2"),
+    "Shop": ("pc", "s1"),
+    "Institution": ("pc", "i1"),
+    "Restaurant": ("pc", "r1"),
+    "Demographics": ("pc", "d1"),
+    "Transport": ("pc", "t1"),
+}
+HOUSING_DOMS = dict(pc=4096, h1=8, h2=8, s1=8, i1=8, r1=8, d1=8, t1=8)
+
+
+def housing_vo():
+    from repro.core import chain
+    return chain(["pc"], {"pc": [["h1", "h2"], ["s1"], ["i1"], ["r1"],
+                                 ["d1"], ["t1"]]})
+
+
+# ---------------------------------------------------------------------------
+# Database + update-stream synthesis
+# ---------------------------------------------------------------------------
+def synth_db(relations, doms, ring, rng, density=0.3, scale=1.0):
+    db = {}
+    for name, sch in relations.items():
+        shape = tuple(doms[v] for v in sch)
+        mult = (rng.random(size=shape) < density * scale).astype(np.float32)
+        if set(ring.components) == {"v"}:
+            db[name] = DenseRelation(tuple(sch), ring, {"v": jnp.asarray(mult)})
+        else:  # degree-m ring: multiplicity in c
+            payload = {**ring.ones(shape)}
+            payload["c"] = jnp.asarray(mult)
+            db[name] = DenseRelation(tuple(sch), ring, payload)
+    return db
+
+
+def update_stream(relations, doms, ring, rng, batch: int, n_batches: int):
+    """Round-robin batched inserts/deletes over all relations (Sec. 8.1)."""
+    from repro.core import COOUpdate
+
+    names = list(relations)
+    out = []
+    for i in range(n_batches):
+        rel = names[i % len(names)]
+        sch = relations[rel]
+        keys = np.stack([rng.integers(0, doms[v], size=batch) for v in sch],
+                        axis=1).astype(np.int32)
+        vals = rng.choice([-1.0, 1.0, 1.0, 1.0], size=batch).astype(np.float32)
+        if set(ring.components) == {"v"}:
+            payload = {"v": jnp.asarray(vals)}
+        else:
+            payload = {**ring.zeros((batch,)), "c": jnp.asarray(vals)}
+        out.append((rel, COOUpdate(tuple(sch), jnp.asarray(keys), payload)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Timing + reporting
+# ---------------------------------------------------------------------------
+def run_engine_stream(engine, stream, warmup: int = 1):
+    """Apply a pre-built stream through jitted triggers; returns tuples/s.
+
+    Triggers donate their state, so the state threads linearly through
+    warmup (compile) and the timed loop.
+    """
+    triggers = {}
+    for rel, upd in stream:
+        if rel not in triggers:
+            triggers[rel] = engine.make_trigger(rel)
+    # deep-copy: triggers donate their input state, and the engine's state
+    # shares base-relation buffers with the caller's database
+    state = jax.tree.map(lambda x: x.copy() if hasattr(x, "copy") else x,
+                         engine.state)
+    for _pass in range(2):  # two passes: absorb the weak-type retrace
+        seen = set()
+        for rel, upd in stream:
+            if rel in seen:
+                continue
+            state = triggers[rel](state, upd)
+            seen.add(rel)
+    jax.block_until_ready(jax.tree.leaves(state)[0])
+    t0 = time.perf_counter()
+    n_tuples = 0
+    for rel, upd in stream:
+        state = triggers[rel](state, upd)
+        n_tuples += upd.batch
+    jax.block_until_ready(jax.tree.leaves(state)[0])
+    dt = time.perf_counter() - t0
+    engine.set_state(state)
+    return n_tuples / dt, dt
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

@@ -1,0 +1,64 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(result_dir="results/dryrun"):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        recs.append(json.load(open(fn)))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(recs, mesh):
+    rows = ["| arch | shape | status | compile_s | peak GiB/dev | HLO TFLOPs/dev | HBM GiB/dev | coll GiB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh and r.get("status") != "skipped":
+            continue
+        if r.get("status") == "skipped":
+            if mesh == "16x16":
+                rows.append(f"| {r['arch']} | {r['shape']} | SKIP (full-attn @500k) | — | — | — | — | — |")
+            continue
+        coll = sum(r.get("collective_bytes", {}).values())
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} | "
+            f"{r.get('compile_s', '—')} | "
+            f"{fmt_bytes(r.get('peak_bytes_per_device', 0))} | "
+            f"{r.get('hlo_dot_flops', 0)/1e12:.2f} | "
+            f"{fmt_bytes(r.get('hlo_bytes', 0))} | {fmt_bytes(coll)} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | compute s | memory s | collective s | bottleneck | roofline frac | useful FLOP ratio |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != "16x16" or r.get("status") != "compiled":
+            continue
+        ct, mt, lt = (r.get("compute_term_s", 0), r.get("memory_term_s", 0),
+                      r.get("collective_term_s", 0))
+        dom = max(ct, mt, lt, 1e-30)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {ct:.3e} | {mt:.3e} | {lt:.3e} | "
+            f"{r['bottleneck']} | {ct/dom:.3f} | "
+            f"{r.get('useful_flop_ratio', 0):.3f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    print("## Single-pod (16x16)\n")
+    print(dryrun_table(recs, "16x16"))
+    print("\n## Multi-pod (2x16x16)\n")
+    print(dryrun_table(recs, "2x16x16"))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(recs))

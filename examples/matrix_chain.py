@@ -1,0 +1,77 @@
+"""Incremental matrix chain multiplication with factorized updates
+(paper Sec. 7.1 / Fig. 9, generalizing LINVIEW).
+
+Maintains A = A1·A2·A3·A4 under rank-1 and rank-r updates to A2 in O(p²)
+per rank instead of O(p³) re-multiplication.
+
+Run:  PYTHONPATH=src python examples/matrix_chain.py
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.apps import matrix_chain
+
+rng = np.random.default_rng(0)
+n = 384
+mats = [jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+        for _ in range(4)]
+
+engine = matrix_chain.build_chain_engine(mats, updatable=("A2",))
+ring = engine.query.ring
+A = matrix_chain.result_matrix(engine)
+expect = np.linalg.multi_dot([np.asarray(m) for m in mats])
+print(f"static chain OK: max err = {np.abs(np.asarray(A) - expect).max():.2e}")
+
+# --- rank-1 row update (Fig. 9 left) ----------------------------------------
+trigger = engine.make_trigger("A2")
+# triggers donate their state (in-place view maintenance); copy so the
+# engine's leaf views stop aliasing our `mats`
+state = jax.tree.map(lambda x: x.copy(), engine.state)
+row, delta = 5, jnp.asarray(rng.standard_normal(n).astype(np.float32))
+upd = matrix_chain.row_update(2, row, delta, n, ring)
+state = trigger(state, upd)  # compile
+t0 = time.perf_counter()
+for _ in range(5):
+    state = trigger(state, upd)
+jax.block_until_ready(jax.tree.leaves(state)[0])
+t_fivm = (time.perf_counter() - t0) / 5
+
+f_re = jax.jit(lambda ms: ms[0] @ ms[1] @ ms[2] @ ms[3])
+f_re(mats)
+t0 = time.perf_counter()
+for _ in range(5):
+    out = f_re(mats)
+jax.block_until_ready(out)
+t_re = (time.perf_counter() - t0) / 5
+print(f"rank-1 row update: F-IVM {t_fivm*1e3:.2f}ms vs reevaluation "
+      f"{t_re*1e3:.2f}ms  ({t_re/t_fivm:.1f}x)")
+
+# --- rank-r via SVD decomposition (Sec. 5 / Fig. 9 right) --------------------
+big_delta = rng.standard_normal((n, n)).astype(np.float32)
+big_delta = (big_delta[:, :8] @ big_delta[:8, :]).astype(np.float32)  # rank 8
+t0 = time.perf_counter()
+for u, v in matrix_chain.decompose_rank_r(jnp.asarray(big_delta), 8):
+    state = trigger(state, matrix_chain.rank1_update(2, u, v, ring))
+jax.block_until_ready(jax.tree.leaves(state)[0])
+t_r8 = time.perf_counter() - t0
+engine.set_state(state)
+print(f"rank-8 update via 8 factorized deltas: {t_r8*1e3:.1f}ms "
+      f"(reeval {t_re*1e3:.2f}ms)")
+
+# verify
+m2 = np.asarray(mats[1]).copy()
+m2[row] += 6 * np.asarray(delta)  # 1 compile + 5 timed
+m2 += big_delta
+expect = np.linalg.multi_dot([np.asarray(mats[0]), m2, np.asarray(mats[2]),
+                              np.asarray(mats[3])])
+got = np.asarray(matrix_chain.result_matrix(engine))
+rel_err = np.abs(got - expect).max() / np.abs(expect).max()
+print(f"incremental result relative err = {rel_err:.2e}")
+assert rel_err < 1e-4  # fp32 accumulation over n=384 chains
+print("OK")

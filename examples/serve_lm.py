@@ -1,0 +1,42 @@
+"""Batched serving with F-IVM adapter maintenance (integration point #2).
+
+Serves a reduced LM with batched greedy generation, then hot-swaps a
+rank-1 adapter delta onto a projection weight in O(p²) — the paper's
+factorizable-update lock applied to the serving path — and keeps serving
+without a re-merge or server restart.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.configs.base import get_config
+from repro.launch.serve import Server
+
+
+def main():
+    cfg = get_config("llama3_2_1b").reduced()
+    server = Server(cfg, cache_len=64, seed=0)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 24)), jnp.int32)
+    res = server.generate({"tokens": prompts}, 24)
+    print(f"base model : prefill {res.prefill_s*1e3:.0f}ms, "
+          f"{res.tokens_per_s:.0f} tok/s")
+    print("completions:", res.tokens[:2, :10])
+
+    # rank-1 adapter delta on the embedding (O(p²), no re-merge)
+    u = jnp.zeros((cfg.padded_vocab,)).at[:64].set(0.3)
+    v = jnp.asarray(rng.standard_normal(cfg.d_model).astype(np.float32)) * 0.1
+    server.swap_adapter_rank_r(("embed",), u, v)
+    res2 = server.generate({"tokens": prompts}, 24)
+    print(f"after swap : prefill {res2.prefill_s*1e3:.0f}ms, "
+          f"{res2.tokens_per_s:.0f} tok/s")
+    changed = (res.tokens != res2.tokens).mean()
+    print(f"fraction of generated tokens changed by adapter: {changed:.2f}")
+
+
+if __name__ == "__main__":
+    main()

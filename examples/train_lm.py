@@ -1,0 +1,97 @@
+"""End-to-end LM training driver with F-IVM-maintained data statistics.
+
+Trains a ~100M-param llama-family model for a few hundred steps on the
+synthetic stream (reduced further with --tiny for CPU smoke), with:
+  * checkpoint/restart (kill it mid-run; rerun resumes),
+  * straggler surfacing,
+  * streaming (c, s, Q) statistics over token features via the degree-m
+    ring (integration point #1 — drives the data-quality monitor).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --tiny
+      PYTHONPATH=src python examples/train_lm.py          # ~100M config
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.configs.base import ArchConfig
+from repro.data.stats import RunningCofactor
+from repro.launch.train import run_training
+
+
+def lm_100m() -> ArchConfig:
+    return ArchConfig(
+        name="llama-100m", family="dense", n_layers=8, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32768,
+        rope_theta=10000.0, tie_embeddings=True, optimizer="adamw",
+        remat="full", act_dtype="float32", param_dtype="float32")
+
+
+def lm_tiny() -> ArchConfig:
+    return dataclasses.replace(lm_100m(), name="llama-tiny", n_layers=2,
+                               d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                               vocab_size=512)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    cfg = lm_tiny() if args.tiny else lm_100m()
+    steps = args.steps or (60 if args.tiny else 300)
+    seq = 32 if args.tiny else 512
+    batch = 4 if args.tiny else 8
+
+    from repro.models import registry
+    api = registry.build(cfg)
+    print(f"training {cfg.name}: {api.n_params()/1e6:.1f}M params, "
+          f"{steps} steps, batch {batch} x seq {seq}")
+
+    # streaming data statistics (F-IVM degree-m ring) over token features:
+    # [position_frac, token_id_frac, is_rare, bigram_delta]
+    stats = RunningCofactor.init(4)
+
+    from repro.data.lm_data import synthetic_lm_batches
+    from repro.configs.base import ShapeSpec
+
+    shape = ShapeSpec("train", seq, batch, "train")
+    base_iter = synthetic_lm_batches(cfg, shape, seed=0)
+
+    def monitored():
+        nonlocal stats
+        for b in base_iter:
+            toks = np.asarray(b["tokens"]).astype(np.float32)
+            B, S = toks.shape
+            feats = np.stack([
+                np.tile(np.arange(S) / S, (B, 1)).ravel(),
+                (toks / cfg.vocab_size).ravel(),
+                (toks > 0.9 * cfg.vocab_size).astype(np.float32).ravel(),
+                np.abs(np.diff(toks, axis=1, append=toks[:, -1:])).ravel()
+                / cfg.vocab_size,
+            ], axis=1)
+            stats = stats.update(jnp.asarray(feats))
+            yield b
+
+    params, history = run_training(
+        cfg, steps=steps, batch_size=batch, seq_len=seq,
+        checkpoint_dir=args.ckpt, checkpoint_every=50,
+        log_every=10 if args.tiny else 20, data_iter=monitored(),
+        step_deadline_s=60.0)
+
+    print(f"\nfinal loss: {history[-1]['loss']:.4f} "
+          f"(start {history[0]['loss']:.4f})")
+    print(f"stream stats after {float(stats.c):.0f} token-rows: "
+          f"feature means {np.asarray(stats.mean()).round(3)}")
+    corr = np.asarray(stats.correlation()).round(2)
+    print(f"token feature correlations (from maintained Q):\n{corr}")
+
+
+if __name__ == "__main__":
+    main()

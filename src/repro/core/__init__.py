@@ -1,0 +1,34 @@
+"""F-IVM core: factorized incremental view maintenance over rings."""
+from .contraction import BatchedDelta, contract_dense, lift_relation, marginalize_dense
+from .delta import propagate_coo, propagate_factorized
+from .indicators import IndicatorState, add_indicators, gyo_residual, indicator_of, is_acyclic
+from .ivm import IVMEngine
+from .materialize import choose_materialized, views_on_path
+from .query import Query
+from .relations import COOUpdate, DenseRelation, FactorizedUpdate, PyRelation
+from .rings import (
+    DegreeMRing,
+    MatrixRing,
+    PyDegreeMRing,
+    PyNumberRing,
+    PyRelationalRing,
+    Ring,
+    ScalarRing,
+    TupleRing,
+    count_ring,
+    sum_ring,
+)
+from .variable_orders import VariableOrder, VONode, chain, heuristic_order
+from .view_tree import ViewNode, build_view_tree, evaluate_view
+
+__all__ = [
+    "BatchedDelta", "COOUpdate", "DegreeMRing", "DenseRelation",
+    "FactorizedUpdate", "IVMEngine", "IndicatorState", "MatrixRing",
+    "PyDegreeMRing", "PyNumberRing", "PyRelation", "PyRelationalRing",
+    "Query", "Ring", "ScalarRing", "TupleRing", "VariableOrder", "VONode",
+    "ViewNode", "add_indicators", "build_view_tree", "chain",
+    "choose_materialized", "contract_dense", "count_ring", "evaluate_view",
+    "gyo_residual", "heuristic_order", "indicator_of", "is_acyclic",
+    "lift_relation", "marginalize_dense", "propagate_coo",
+    "propagate_factorized", "sum_ring", "views_on_path",
+]

@@ -1,0 +1,193 @@
+"""Gradient computation for linear regression over joins (Sec. 7.2).
+
+The cofactor triple (c, s, Q) over the join of the database relations is
+maintained incrementally with the degree-m matrix ring; batch gradient
+descent then iterates θ := θ − α·G(θ) entirely on the maintained
+statistics, in O(m²) per step, independent of the data size — the paper's
+central ML application.
+
+Conventions (paper footnote 1): variables X_1..X_m are indexed by the
+query's ``all_vars`` order; we learn f(features) ≈ label by fixing
+θ_label := −1 and minimizing  ½‖Mθ‖²  over the remaining coordinates,
+with an explicit bias term handled via the count c and sums s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ivm import IVMEngine
+from ..query import Query
+from ..relations import DenseRelation
+from ..rings import DegreeMRing, ScalarRing, sum_ring
+from ..variable_orders import VariableOrder
+
+
+def cofactor_query(
+    relations: Mapping[str, tuple[str, ...]],
+    domains: Mapping[str, int],
+    domain_values: Mapping[str, jnp.ndarray] | None = None,
+    free_vars: tuple[str, ...] = (),
+    dtype=jnp.float32,
+) -> Query:
+    """Degree-m query computing (c, s, Q) over the natural join (Ex. 7.3)."""
+    all_vars: list[str] = []
+    for sch in relations.values():
+        for v in sch:
+            if v not in all_vars:
+                all_vars.append(v)
+    m = len(all_vars)
+    ring = DegreeMRing(m, dtype=dtype)
+    lifts = {v: ("degree", i) for i, v in enumerate(all_vars) if v not in free_vars}
+    return Query(
+        relations=relations,
+        free_vars=free_vars,
+        ring=ring,
+        domains=domains,
+        lifts=lifts,
+        domain_values=domain_values or {},
+    )
+
+
+def relation_from_multiplicities(
+    schema: tuple[str, ...], ring: DegreeMRing, mult: jnp.ndarray
+) -> DenseRelation:
+    """Base relations map tuples to multiplicity · 1 (identity payload)."""
+    payload = ring.ones(mult.shape)
+    payload = {
+        "c": jnp.asarray(mult, ring.dtype),
+        "s": payload["s"],
+        "Q": payload["Q"],
+    }
+    return DenseRelation(schema, ring, payload)
+
+
+# ---------------------------------------------------------------------------
+# Learning on top of the maintained triple
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CofactorStats:
+    """(c, s, Q) with an explicit homogeneous (bias) coordinate.
+
+    Σ = [[c, sᵀ], [s, Q]]  is the (m+1)×(m+1) moment matrix of the design
+    matrix extended with a constant-1 column.
+    """
+
+    c: jnp.ndarray  # scalar
+    s: jnp.ndarray  # [m]
+    Q: jnp.ndarray  # [m, m]
+
+    @property
+    def m(self) -> int:
+        return self.s.shape[-1]
+
+    def sigma(self) -> jnp.ndarray:
+        top = jnp.concatenate([self.c[None], self.s])[None, :]
+        bot = jnp.concatenate([self.s[:, None], self.Q], axis=1)
+        return jnp.concatenate([top, bot], axis=0)
+
+
+def gradient(stats: CofactorStats, theta: jnp.ndarray) -> jnp.ndarray:
+    """∇(½‖Mθ‖²)/c = Σθ / c  over the homogeneous coordinates."""
+    return stats.sigma() @ theta / jnp.maximum(stats.c, 1.0)
+
+
+def learn_linear_model(
+    stats: CofactorStats,
+    label: int,
+    features: Sequence[int],
+    lr: float = 0.1,
+    steps: int = 500,
+) -> jnp.ndarray:
+    """Batch GD on the maintained statistics (paper: θ := θ − α MᵀM θ).
+
+    ``label``/``features`` index the query variables (0-based).  Returns the
+    homogeneous parameter vector θ over [bias, *all m variables] with
+    θ_label = −1 fixed and non-feature coordinates zero.
+    """
+    m = stats.m
+    idx = jnp.array([0] + [1 + f for f in features])  # bias + features
+    mask = jnp.zeros(m + 1).at[idx].set(1.0)
+    theta0 = jnp.zeros(m + 1).at[0].set(0.0).at[1 + label].set(-1.0)
+
+    def step(theta, _):
+        g = gradient(stats, theta) * mask
+        return theta - lr * g, None
+
+    theta, _ = jax.lax.scan(step, theta0, None, length=steps)
+    return theta
+
+
+def solve_linear_model(
+    stats: CofactorStats, label: int, features: Sequence[int], ridge: float = 1e-6
+) -> jnp.ndarray:
+    """Closed-form normal-equations solve (validation reference)."""
+    sigma = stats.sigma()
+    idx = np.array([0] + [1 + f for f in features])
+    A = sigma[np.ix_(idx, idx)] + ridge * jnp.eye(len(idx))
+    b = sigma[idx, 1 + label]
+    w = jnp.linalg.solve(A, b)
+    theta = jnp.zeros(stats.m + 1).at[jnp.asarray(idx)].set(w).at[1 + label].set(-1.0)
+    return theta
+
+
+def stats_of_result(result: DenseRelation) -> CofactorStats:
+    """Extract the triple from a scalar-keyed root view."""
+    p = result.payload
+    return CofactorStats(c=p["c"].reshape(()), s=p["s"].reshape(-1),
+                         Q=p["Q"].reshape(p["s"].size, p["s"].size))
+
+
+# ---------------------------------------------------------------------------
+# Scalar-aggregate baselines (DBT / 1-IVM in Sec. 8.4): one view tree per
+# aggregate, no sharing across the 1 + m + m(m+1)/2 aggregates.
+# ---------------------------------------------------------------------------
+def scalar_aggregate_queries(
+    relations: Mapping[str, tuple[str, ...]],
+    domains: Mapping[str, int],
+    domain_values: Mapping[str, jnp.ndarray] | None = None,
+    dtype=jnp.float32,
+) -> list[Query]:
+    """All cofactor aggregates as separate scalar queries:
+    SUM(1), SUM(X_i), SUM(X_i·X_j) for i ≤ j.
+
+    NOTE on SUM(X_i²): with scalar payloads the lift of a single variable is
+    applied once per marginalization, so X_i² needs a dedicated 'square'
+    lift; we extend the scalar lift spec with ("square",).
+    """
+    all_vars: list[str] = []
+    for sch in relations.values():
+        for v in sch:
+            if v not in all_vars:
+                all_vars.append(v)
+    ring = sum_ring(dtype)
+    out: list[Query] = []
+
+    def mk(lifts):
+        return Query(
+            relations=relations,
+            free_vars=(),
+            ring=ring,
+            domains=domains,
+            lifts=lifts,
+            domain_values=domain_values or {},
+        )
+
+    out.append(mk({}))  # SUM(1)
+    for i, v in enumerate(all_vars):
+        out.append(mk({v: ("value",)}))  # SUM(X_i)
+    for i, v in enumerate(all_vars):
+        for w in all_vars[i:]:
+            if v == w:
+                out.append(mk({v: ("square",)}))  # SUM(X_i^2)
+            else:
+                out.append(mk({v: ("value",), w: ("value",)}))  # SUM(X_i X_j)
+    return out
+
+
+def count_views(engine: IVMEngine) -> int:
+    return engine.num_materialized()

@@ -1,0 +1,226 @@
+"""Delta propagation (Sec. 4) with factorized-update optimization (Sec. 5).
+
+For an update δR, the delta tree replaces the views on the leaf-to-root path
+with delta views (Fig. 4):
+
+    δ(V1 ⊎ V2) = δV1 ⊎ δV2
+    δ(V1 ⊗ V2) = (δV1 ⊗ V2) ⊎ (V1 ⊗ δV2) ⊎ (δV1 ⊗ δV2)
+    δ(⊕_X V)   = ⊕_X δV
+
+Only one child changes per path node, so the product rule degenerates to
+δV ⊗ (materialized siblings).  Deltas are carried as BatchedDelta (COO over
+update-bound variables × dense over sibling-contributed ones) or, when the
+update is factorizable, as a product of per-group factors that marginalize
+independently (the paper's Optimize; Example 5.2 / 7.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax.numpy as jnp
+
+from .contraction import BatchedDelta, contract_dense
+from .query import Query
+from .materialize import views_on_path
+from .relations import COOUpdate, DenseRelation, FactorizedUpdate
+from .view_tree import ViewNode
+
+
+@dataclasses.dataclass
+class PropagationResult:
+    """Deltas per affected view name (leaf-to-root order) + updated views."""
+
+    deltas: dict[str, BatchedDelta | FactorizedUpdate]
+    updated: dict[str, DenseRelation]
+
+
+def propagate_coo(
+    tree: ViewNode,
+    materialized: Mapping[str, DenseRelation],
+    query: Query,
+    rel: str,
+    upd: COOUpdate,
+    indicators: Mapping[str, DenseRelation] | None = None,
+) -> PropagationResult:
+    """Propagate a COO batch update along the delta tree, updating every
+    materialized view on the path.  ``indicators`` maps node names to
+    maintained ∃-projection denses (Sec. 6)."""
+    ring = query.ring
+    path = views_on_path(tree, rel)
+    if _should_densify(path, upd, query):
+        # Bulk updates that don't bind the whole path: propagate ONE dense
+        # delta relation instead of B per-row deltas ("δR can be a relation",
+        # Sec. 4) — O(|D|) instead of O(B·|D|) for dimension-table batches.
+        delta = _densified_delta(query, rel, upd)
+    else:
+        delta = BatchedDelta.from_coo(ring, upd)
+    deltas: dict[str, BatchedDelta | FactorizedUpdate] = {}
+    updated: dict[str, DenseRelation] = {}
+
+    # leaf: δ(leaf) = δR ; update the stored base relation if materialized
+    leaf = path[0]
+    deltas[leaf.name] = delta
+    if leaf.name in materialized:
+        updated[leaf.name] = delta.apply_to(materialized[leaf.name])
+
+    child = leaf
+    for node in path[1:]:
+        # join with materialized siblings
+        for sib in node.children:
+            if sib is child:
+                continue
+            assert sib.name in materialized, (
+                f"sibling {sib.name} of delta path must be materialized "
+                f"(μ guarantees this for updatable {rel})"
+            )
+            delta = delta.join_dense(materialized[sib.name])
+        if node.indicator is not None:
+            assert indicators is not None and node.name in indicators, (
+                f"maintained indicator for {node.name} required"
+            )
+            delta = delta.join_dense(indicators[node.name])
+        wname = f"W:{node.name}"
+        if wname in materialized:  # factorized result representation (Sec. 7.3)
+            updated[wname] = delta.apply_to(materialized[wname])
+        for v in node.marg_vars:
+            delta = delta.marginalize(v, _lift_or_none(query, v))
+        deltas[node.name] = delta
+        if node.name in materialized:
+            updated[node.name] = delta.apply_to(materialized[node.name])
+        child = node
+    return PropagationResult(deltas, updated)
+
+
+def propagate_factorized(
+    tree: ViewNode,
+    materialized: Mapping[str, DenseRelation],
+    query: Query,
+    rel: str,
+    upd: FactorizedUpdate,
+    indicators: Mapping[str, DenseRelation] | None = None,
+) -> PropagationResult:
+    """Sec. 5 Optimize: keep the delta as a product of factors over disjoint
+    variable groups; marginalization and sibling joins touch only the factor
+    containing the variable, so a rank-1 update to a p×p 'relation' costs
+    O(p²) instead of O(p³) (Example 7.1)."""
+    ring = query.ring
+    path = views_on_path(tree, rel)
+    factors: list[DenseRelation] = list(upd.factors)
+    deltas: dict[str, BatchedDelta | FactorizedUpdate] = {}
+    updated: dict[str, DenseRelation] = {}
+
+    def current(schema_hint: tuple[str, ...]) -> FactorizedUpdate:
+        sch = tuple(v for f in factors for v in f.schema)
+        return FactorizedUpdate(sch, tuple(factors))
+
+    leaf = path[0]
+    deltas[leaf.name] = current(leaf.schema)
+    if leaf.name in materialized:
+        updated[leaf.name] = _apply_factorized(materialized[leaf.name], factors, ring)
+
+    child = leaf
+    for node in path[1:]:
+        for sib in node.children:
+            if sib is child:
+                continue
+            assert sib.name in materialized, f"sibling {sib.name} not materialized"
+            _absorb(factors, materialized[sib.name], ring)
+        if node.indicator is not None:
+            assert indicators is not None and node.name in indicators
+            _absorb(factors, indicators[node.name], ring)
+        wname = f"W:{node.name}"
+        if wname in materialized:
+            updated[wname] = _apply_factorized(materialized[wname], factors, ring)
+        for v in node.marg_vars:
+            _marginalize_factor(factors, v, query)
+        deltas[node.name] = current(node.schema)
+        if node.name in materialized:
+            updated[node.name] = _apply_factorized(materialized[node.name], factors, ring)
+        child = node
+    return PropagationResult(deltas, updated)
+
+
+def _lift_or_none(query: Query, var: str):
+    return query.lift_rel(var)
+
+
+def _should_densify(path, upd: COOUpdate, query: Query,
+                    min_batch: int = 32) -> bool:
+    """True when propagation would grow dense axes (sibling vars outside the
+    update's schema) AND the batch is large enough that per-row propagation
+    costs more than one dense-delta pass."""
+    if upd.batch < min_batch:
+        return False
+    bound = set(upd.schema)
+    child = path[0]
+    for node in path[1:]:
+        for sib in node.children:
+            if sib is child:
+                continue
+            if set(sib.schema) - bound:
+                return True
+        if node.indicator is not None:
+            if set(node.indicator[1]) - bound:
+                return True
+        child = node
+    return False
+
+
+def _densified_delta(query: Query, rel: str, upd: COOUpdate) -> BatchedDelta:
+    """Scatter the COO batch into a dense delta relation over the update
+    schema, carried as a BatchedDelta with batch=1 and no COO vars."""
+    ring = query.ring
+    doms = tuple(query.domains[v] for v in upd.schema)
+    dense = DenseRelation.from_coo(upd.schema, ring, doms, upd.keys, upd.payload)
+    payload = {c: dense.payload[c][None] for c in ring.components}
+    return BatchedDelta(
+        coo_schema=(),
+        dense_schema=tuple(upd.schema),
+        keys=jnp.zeros((1, 0), jnp.int32),
+        ring=ring,
+        payload=payload,
+        dense_domains=doms,
+    )
+
+
+def _absorb(factors: list[DenseRelation], view: DenseRelation, ring) -> None:
+    """Join a materialized sibling view into the factor list.  Factors whose
+    variables intersect the view's schema merge first; disjoint factors stay
+    independent (this is what preserves the factorized complexity)."""
+    touching = [f for f in factors if set(f.schema) & set(view.schema)]
+    if not touching:
+        # cartesian sibling: keep as its own factor
+        factors.append(view)
+        return
+    for f in touching:
+        factors.remove(f)
+    acc = touching[0]
+    for f in touching[1:]:
+        acc = contract_dense(acc, f, marg=())
+    acc = contract_dense(acc, view, marg=())
+    factors.append(acc)
+
+
+def _marginalize_factor(factors: list[DenseRelation], var: str, query: Query) -> None:
+    for i, f in enumerate(factors):
+        if var in f.schema:
+            factors[i] = contract_dense(f, query.lift_rel(var), marg=(var,))
+            return
+    raise KeyError(f"variable {var} not found in any factor")
+
+
+def _apply_factorized(
+    view: DenseRelation, factors: list[DenseRelation], ring
+) -> DenseRelation:
+    """view ⊎ (⊗ factors): outer-product accumulate.  Cost is the size of the
+    materialized view (O(p²) for matrix views), not of any larger product.
+    Scalar factors (fully-marginalized groups, e.g. ⊕_E δS_E in Example 5.2)
+    scale the product."""
+    covered = {v for f in factors for v in f.schema}
+    assert covered == set(view.schema), (covered, view.schema)
+    acc = factors[0]
+    for f in factors[1:]:
+        acc = contract_dense(acc, f, marg=())
+    acc = acc.transpose(view.schema)
+    return view.add(acc)

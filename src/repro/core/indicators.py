@@ -1,0 +1,167 @@
+"""Indicator projections for cyclic queries (Sec. 6, Fig. 7).
+
+``∃_A R`` projects the non-zero keys of R onto A with payload 1.  Adding
+such indicators to a view can close a cycle of relations and shrink the
+view (triangle query: O(N²) → O(N) view, O(N^{3/2}) bulk maintenance).
+
+The Fig. 7 algorithm walks the tree bottom-up; at each view it considers
+relations that share variables with the view but do not occur under it, and
+keeps those that are *in a cycle* with the view's children — determined by
+GYO reduction (Fagin et al. variant): the residual hyperedges after
+ear-removal are exactly the cyclic core.
+
+Maintenance (Example 6.2): a count per projected key tracks how many tuples
+of R project onto it; δ(∃R) is ±1 exactly when a count crosses 0↔1.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .query import Query
+from .relations import COOUpdate, DenseRelation
+from .rings import Ring
+from .view_tree import ViewNode
+
+
+# ---------------------------------------------------------------------------
+# GYO reduction
+# ---------------------------------------------------------------------------
+def gyo_residual(edges: list[frozenset[str]]) -> list[frozenset[str]]:
+    """Run GYO ear removal; return the residual (cyclic core) hyperedges."""
+    work = [set(e) for e in edges]
+    changed = True
+    while changed and work:
+        changed = False
+        for i, e in enumerate(work):
+            others = [w for j, w in enumerate(work) if j != i]
+            if not others:
+                work = []
+                changed = True
+                break
+            shared = e & set().union(*others)
+            # isolated vertices of e can always be removed
+            if shared != e:
+                work[i] = shared
+                changed = True
+                e = shared
+            if any(e <= w for w in others):
+                work.pop(i)
+                changed = True
+                break
+        work = [e for e in work if e]
+    return [frozenset(e) for e in work]
+
+
+def is_acyclic(edges: list[frozenset[str]]) -> bool:
+    return not gyo_residual(edges)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7: annotate a view tree with indicator projections
+# ---------------------------------------------------------------------------
+def add_indicators(tree: ViewNode, query: Query) -> ViewNode:
+    def rec(node: ViewNode) -> None:
+        for c in node.children:
+            rec(c)
+        if node.is_leaf or len(node.children) < 2:
+            return
+        join_vars = set().union(*[set(c.schema) for c in node.children])
+        inds = [
+            r
+            for r, sch in query.relations.items()
+            if r not in node.rels and (set(sch) & join_vars)
+        ]
+        for r in inds:
+            proj = tuple(v for v in query.relations[r] if v in join_vars)
+            edges = [frozenset(c.schema) for c in node.children] + [frozenset(proj)]
+            residual = gyo_residual(edges)
+            if frozenset(proj) in residual:
+                node.indicator = (r, proj)
+                node.rels = node.rels | {r}
+                break  # one indicator per view suffices for our workloads
+
+    rec(tree)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Indicator state & maintenance
+# ---------------------------------------------------------------------------
+def indicator_of(rel: DenseRelation, proj: tuple[str, ...], query: Query) -> DenseRelation:
+    """∃_proj rel as a dense 0/1 relation in the query ring (recompute)."""
+    ring = query.ring
+    nz = ~ring.is_zero(rel.payload)  # bool over rel.domains
+    axes = tuple(i for i, v in enumerate(rel.schema) if v not in proj)
+    mask = jnp.any(nz, axis=axes) if axes else nz
+    order = [v for v in rel.schema if v in proj]
+    out = ring.ones(mask.shape)
+    out = {c: jnp.where(mask.reshape(mask.shape + (1,) * (out[c].ndim - mask.ndim)),
+                        out[c], 0) for c in out}
+    dr = DenseRelation(tuple(order), ring, out)
+    return dr.transpose(proj) if tuple(order) != tuple(proj) else dr
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class IndicatorState:
+    """Maintained ∃_proj R: per-key tuple counts + the 0/1 dense relation."""
+
+    rel_name: str
+    proj: tuple[str, ...]
+    counts: jnp.ndarray  # int32 over proj domains
+    dense: DenseRelation  # 0/1 in the query ring
+
+    def tree_flatten(self):
+        return ((self.counts, self.dense), (self.rel_name, self.proj))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(rel_name=aux[0], proj=aux[1], counts=children[0], dense=children[1])
+
+    @classmethod
+    def init(cls, rel_name: str, rel: DenseRelation, proj: tuple[str, ...], query: Query):
+        ring = query.ring
+        nz = ~ring.is_zero(rel.payload)
+        axes = tuple(i for i, v in enumerate(rel.schema) if v not in proj)
+        counts = jnp.sum(nz, axis=axes, dtype=jnp.int32) if axes else nz.astype(jnp.int32)
+        order = tuple(v for v in rel.schema if v in proj)
+        if order != proj:
+            # permute counts into proj order
+            perm = [order.index(v) for v in proj]
+            counts = jnp.transpose(counts, perm)
+        dense = indicator_of(rel, proj, query)
+        return cls(rel_name, proj, counts, dense)
+
+    def delta_for_update(
+        self, query: Query, upd: COOUpdate, old_rel: DenseRelation
+    ) -> tuple["IndicatorState", COOUpdate]:
+        """Apply δR; return (new state, δ∃ as COO over proj with ±1 payloads).
+
+        Counting (Example 6.2): a key's count changes when a tuple's payload
+        transitions 0 -> non-0 (insert) or non-0 -> 0 (delete).
+
+        NOTE: the batch must not contain duplicate keys (the transition test
+        gathers pre-update state once per row); the data pipeline dedupes
+        batches before indicator-bearing updates.
+        """
+        ring = query.ring
+        cols = [upd.schema.index(v) for v in self.proj]
+        proj_keys = upd.keys[:, cols]
+        old_payload = old_rel.gather(upd.keys)
+        new_payload = ring.add(old_payload, upd.payload)
+        was_nz = ~ring.is_zero(old_payload)
+        now_nz = ~ring.is_zero(new_payload)
+        dcount = now_nz.astype(jnp.int32) - was_nz.astype(jnp.int32)  # [B]
+        idx = tuple(proj_keys[:, i] for i in range(len(self.proj)))
+        new_counts = self.counts.at[idx].add(dcount)
+        was_pos = self.counts[idx] > 0
+        now_pos = new_counts[idx] > 0
+        dval = now_pos.astype(ring.dtype) - was_pos.astype(ring.dtype)  # [B] ∈ {-1,0,1}
+        one = ring.ones((upd.keys.shape[0],))
+        payload = ring.scale(one, dval)
+        new_dense = self.dense.scatter_add(proj_keys, payload)
+        state = dataclasses.replace(self, counts=new_counts, dense=new_dense)
+        return state, COOUpdate(self.proj, proj_keys, payload)

@@ -1,0 +1,311 @@
+"""The IVM engine: triggers + maintenance strategies (Sec. 4, Sec. 8).
+
+Strategies:
+  * ``fivm``    — F-IVM: one view tree, μ-chosen materialization, factorized
+                  delta propagation (the paper's contribution).
+  * ``fivm_1``  — first-order F-IVM: only the root is materialized; deltas
+                  recompute sibling subtrees from base relations on the fly.
+  * ``dbt``     — DBToaster-like fully-recursive higher-order IVM: every
+                  view in the tree is materialized regardless of μ (models
+                  DBT-RING's extra views; the scalar-payload DBT baseline is
+                  built by running one engine per scalar aggregate, see
+                  apps/regression.py).
+  * ``reeval``  — full recomputation from stored base relations per update.
+
+The DBToaster runtime role (codegen of triggers) is played by jax.jit: each
+(tree, updated-relation) pair compiles into one XLA program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .contraction import BatchedDelta
+from .delta import PropagationResult, propagate_coo, propagate_factorized
+from .indicators import IndicatorState, add_indicators
+from .materialize import choose_materialized, views_on_path
+from .query import Query
+from .relations import COOUpdate, DenseRelation, FactorizedUpdate
+from .variable_orders import VariableOrder, heuristic_order
+from .view_tree import ViewNode, build_view_tree, evaluate_view
+
+
+@dataclasses.dataclass
+class IVMEngine:
+    query: Query
+    tree: ViewNode
+    materialized_names: set[str]
+    views: dict[str, DenseRelation]
+    base: dict[str, DenseRelation]
+    indicators: dict[str, IndicatorState]  # keyed by node name carrying it
+    strategy: str
+    updatable: tuple[str, ...]
+    store_base: bool
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(
+        cls,
+        query: Query,
+        database: Mapping[str, DenseRelation],
+        updatable: tuple[str, ...] | None = None,
+        var_order: VariableOrder | None = None,
+        strategy: str = "fivm",
+        use_indicators: bool = False,
+        fuse_chains: bool = True,
+        premarg: bool = False,
+    ) -> "IVMEngine":
+        updatable = tuple(updatable if updatable is not None else query.relations)
+        vo = var_order or heuristic_order(query)
+        tree = build_view_tree(query, vo, fuse_chains=fuse_chains)
+        if use_indicators:
+            assert strategy in ("fivm", "dbt", "reeval"), (
+                "1-IVM has no intermediate views; indicator projections do not apply"
+            )
+            tree = add_indicators(tree, query)
+
+        if strategy == "fivm":
+            mat = choose_materialized(tree, updatable)
+        elif strategy == "dbt":
+            mat = {n.name for n in tree.walk()}
+        elif strategy in ("fivm_1", "reeval"):
+            mat = {tree.name} | {n.name for n in tree.walk() if n.is_leaf}
+        else:  # pragma: no cover
+            raise ValueError(strategy)
+
+        store_base = strategy in ("fivm_1", "reeval")
+        # indicator-bearing nodes need their base relation stored and all
+        # children materialized when the indicator's relation is updatable
+        indicators: dict[str, IndicatorState] = {}
+        for n in tree.walk():
+            if n.indicator is not None:
+                r, proj = n.indicator
+                indicators[n.name] = IndicatorState.init(r, database[r], proj, query)
+                if r in updatable:
+                    mat |= {c.name for c in n.children}
+                    mat |= {ln.name for ln in tree.walk() if ln.is_leaf and ln.relation == r}
+
+        views: dict[str, DenseRelation] = {}
+        store: dict[str, DenseRelation] = {}
+        evaluate_view(tree, database, query, store=store, premarg=premarg)
+        if premarg:
+            # the factorized result representation: every pre-marginalization
+            # view is part of the maintained output (Sec. 7.3)
+            mat |= {k for k in store if k.startswith("W:")}
+        for name in mat:
+            views[name] = store[name]
+        # base relations are stored as copies: leaf views alias the caller's
+        # database arrays, and state donation (make_trigger) requires every
+        # buffer in the state pytree to appear exactly once
+        base = {
+            r: DenseRelation(rel.schema, rel.ring,
+                             {c: jnp.array(v) for c, v in rel.payload.items()})
+            for r, rel in database.items()
+        }
+        # keep base relations for leaves that μ chose (they may be updated)
+        return cls(
+            query=query,
+            tree=tree,
+            materialized_names=mat,
+            views=views,
+            base=base,
+            indicators=indicators,
+            strategy=strategy,
+            updatable=updatable,
+            store_base=store_base,
+        )
+
+    # ---------------------------------------------------------------- result
+    def result(self) -> DenseRelation:
+        return self.views[self.tree.name]
+
+    def num_materialized(self) -> int:
+        return len(self.materialized_names)
+
+    def memory_bytes(self) -> int:
+        total = 0
+        for v in self.views.values():
+            for arr in jax.tree.leaves(v.payload):
+                total += arr.size * arr.dtype.itemsize
+        for ind in self.indicators.values():
+            total += ind.counts.size * 4
+            for arr in jax.tree.leaves(ind.dense.payload):
+                total += arr.size * arr.dtype.itemsize
+        return total
+
+    # ---------------------------------------------------------------- update
+    def apply_update(self, rel: str, upd: COOUpdate | FactorizedUpdate) -> None:
+        views, base, indicators = self.functional_update(
+            self.views, self.base, self.indicators, rel, upd
+        )
+        self.views, self.base, self.indicators = views, base, indicators
+
+    def make_trigger(self, rel: str):
+        """Compile the maintenance trigger for updates to ``rel`` (the role
+        DBToaster's code generator plays; here the backend is XLA).
+
+        Returns a jitted pure function
+            trigger(state, upd) -> state
+        where ``state = (views, base, indicators)`` is a pytree.  Batch size
+        of the update is static per compilation (pipeline pads batches).
+        """
+
+        def trigger(state, upd):
+            views, base, indicators = state
+            return self.functional_update(views, base, indicators, rel, upd)
+
+        # donate the state: views not touched by this trigger alias through,
+        # and updated views are modified in place (no full-state copy)
+        return jax.jit(trigger, donate_argnums=(0,))
+
+    @property
+    def state(self):
+        return (self.views, self.base, self.indicators)
+
+    def set_state(self, state) -> None:
+        self.views, self.base, self.indicators = state
+
+    def functional_update(self, views, base, indicators, rel: str, upd):
+        """Pure update: returns new (views, base, indicators)."""
+        assert rel in self.updatable, f"{rel} not declared updatable"
+        if self.strategy == "reeval":
+            return self._apply_reeval(views, base, indicators, rel, upd)
+        if self.strategy == "fivm_1":
+            return self._apply_first_order(views, base, indicators, rel, upd)
+        # fivm / dbt: higher-order propagation along the delta tree
+        views = dict(views)
+        base = dict(base)
+        indicators = dict(indicators)
+        old_base = base.get(rel)
+        ind_dense = {name: st.dense for name, st in indicators.items()}
+        if isinstance(upd, FactorizedUpdate):
+            res = propagate_factorized(
+                self.tree, views, self.query, rel, upd, indicators=ind_dense
+            )
+        else:
+            res = propagate_coo(
+                self.tree, views, self.query, rel, upd, indicators=ind_dense
+            )
+        views.update(res.updated)
+        if rel in base:
+            base[rel] = self._bump_base(base[rel], upd)
+        # indicator second pass (Sec. 6): updates to R may change ∃R
+        for node_name, ind in list(indicators.items()):
+            if ind.rel_name != rel:
+                continue
+            assert isinstance(upd, COOUpdate), "indicator maintenance needs COO updates"
+            assert old_base is not None, "indicator relations must be stored"
+            new_state, dind = ind.delta_for_update(self.query, upd, old_base)
+            indicators[node_name] = new_state
+            views = self._propagate_indicator_delta(views, indicators, node_name, dind)
+        return views, base, indicators
+
+    def _bump_base(self, rel: DenseRelation, upd) -> DenseRelation:
+        if isinstance(upd, FactorizedUpdate):
+            dense = upd.densify(self.query.ring).transpose(rel.schema)
+            return rel.add(dense)
+        return rel.scatter_add(upd.keys, upd.payload)
+
+    # -- strategy: reevaluation --------------------------------------------
+    def _apply_reeval(self, views, base, indicators, rel: str, upd):
+        views, base = dict(views), dict(base)
+        base[rel] = self._bump_base(base[rel], upd)
+        store: dict[str, DenseRelation] = {}
+        evaluate_view(self.tree, base, self.query, store=store)
+        views[self.tree.name] = store[self.tree.name]
+        return views, base, indicators
+
+    # -- strategy: first-order IVM ------------------------------------------
+    def _apply_first_order(self, views, base, indicators, rel: str, upd):
+        """δQ from base relations only: evaluate the delta tree but recompute
+        sibling views from scratch (no auxiliary materialization)."""
+        views, base = dict(views), dict(base)
+        if isinstance(upd, FactorizedUpdate):
+            # 1-IVM takes the full (densified) delta — that is the point of
+            # the comparison in Sec. 8.3
+            dense = upd.densify(self.query.ring)
+            b = int(np.prod([dense.domain_of(v) for v in dense.schema]))
+            keys = _all_keys(dense)
+            payload = {
+                c: dense.payload[c].reshape((b, *self.query.ring.components[c]))
+                for c in self.query.ring.components
+            }
+            upd = COOUpdate(dense.schema, keys, payload)
+        store: dict[str, DenseRelation] = {}
+        evaluate_view(self.tree, base, self.query, store=store)
+        from .indicators import indicator_of
+
+        ind_dense = {
+            name: indicator_of(base[st.rel_name], st.proj, self.query)
+            for name, st in indicators.items()
+        }
+        res = propagate_coo(self.tree, store, self.query, rel, upd, indicators=ind_dense)
+        root = self.tree.name
+        delta = res.deltas[root]
+        assert isinstance(delta, BatchedDelta)
+        views[root] = delta.apply_to(views[root])
+        base[rel] = self._bump_base(base[rel], upd)
+        return views, base, indicators
+
+    # -- indicator propagation (second pass) ---------------------------------
+    def _propagate_indicator_delta(self, views, indicators, node_name: str,
+                                   dind: COOUpdate):
+        from .contraction import BatchedDelta as BD
+
+        views = dict(views)
+        node = self.tree.find(node_name)
+        delta = BD.from_coo(self.query.ring, dind)
+        # at the indicator node, join with ALL children views
+        for sib in node.children:
+            assert sib.name in views, f"{sib.name} must be materialized"
+            delta = delta.join_dense(views[sib.name])
+        for v in node.marg_vars:
+            delta = delta.marginalize(v, self.query.lift_rel(v))
+        if node.name in views:
+            views[node.name] = delta.apply_to(views[node.name])
+        # continue upward along node -> root
+        path = _path_to_root(self.tree, node_name)
+        child = node
+        for parent in path[1:]:
+            for sib in parent.children:
+                if sib is child:
+                    continue
+                assert sib.name in views, f"{sib.name} must be materialized"
+                delta = delta.join_dense(views[sib.name])
+            if parent.indicator is not None and parent.name != node_name:
+                delta = delta.join_dense(indicators[parent.name].dense)
+            for v in parent.marg_vars:
+                delta = delta.marginalize(v, self.query.lift_rel(v))
+            if parent.name in views:
+                views[parent.name] = delta.apply_to(views[parent.name])
+            child = parent
+        return views
+
+
+def _path_to_root(tree: ViewNode, name: str) -> list[ViewNode]:
+    path: list[ViewNode] = []
+
+    def rec(node: ViewNode) -> bool:
+        if node.name == name:
+            path.append(node)
+            return True
+        for c in node.children:
+            if rec(c):
+                path.append(node)
+                return True
+        return False
+
+    assert rec(tree)
+    return path
+
+
+def _all_keys(rel: DenseRelation) -> jnp.ndarray:
+    import numpy as np
+
+    doms = [rel.domain_of(v) for v in rel.schema]
+    grids = np.meshgrid(*[np.arange(d) for d in doms], indexing="ij")
+    return jnp.asarray(np.stack([g.ravel() for g in grids], axis=1).astype(np.int32))

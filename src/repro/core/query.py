@@ -1,0 +1,72 @@
+"""Query specification (Sec. 2).
+
+    Q[X_1..X_f] = ⊕_{X_{f+1}} ... ⊕_{X_m}  ⊗_{i∈[n]} R_i[S_i]
+
+A query names its relations (with schemas), its free variables, the ring,
+and a per-variable lifting spec.  Attribute domains are dictionary-encoded:
+``domains[v]`` is the active-domain size and ``domain_values[v]`` optionally
+maps dictionary ids back to numeric values (needed by value liftings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+
+from .contraction import lift_relation
+from .relations import DenseRelation
+from .rings import Ring
+
+LiftSpec = tuple  # ("one",) | ("value",) | ("degree", j)
+
+
+@dataclasses.dataclass
+class Query:
+    relations: Mapping[str, tuple[str, ...]]  # name -> schema
+    free_vars: tuple[str, ...]
+    ring: Ring
+    domains: Mapping[str, int]
+    lifts: Mapping[str, LiftSpec] = dataclasses.field(default_factory=dict)
+    domain_values: Mapping[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self._lift_cache: dict[str, DenseRelation] = {}
+
+    @property
+    def all_vars(self) -> tuple[str, ...]:
+        seen: list[str] = []
+        for sch in self.relations.values():
+            for v in sch:
+                if v not in seen:
+                    seen.append(v)
+        return tuple(seen)
+
+    @property
+    def bound_vars(self) -> tuple[str, ...]:
+        return tuple(v for v in self.all_vars if v not in self.free_vars)
+
+    def lift_spec(self, var: str) -> LiftSpec:
+        return self.lifts.get(var, ("one",))
+
+    def values_of(self, var: str) -> jnp.ndarray:
+        if var in self.domain_values:
+            return jnp.asarray(self.domain_values[var])
+        return jnp.arange(self.domains[var], dtype=self.ring.dtype)
+
+    def lift_rel(self, var: str) -> DenseRelation:
+        if var not in self._lift_cache:
+            self._lift_cache[var] = lift_relation(
+                self.ring, var, self.values_of(var), self.lift_spec(var)
+            )
+        return self._lift_cache[var]
+
+    def vars_of(self, rel: str) -> tuple[str, ...]:
+        return tuple(self.relations[rel])
+
+    def hyperedges(self) -> dict[str, frozenset[str]]:
+        return {r: frozenset(sch) for r, sch in self.relations.items()}
+
+    def interacts(self, x: str, y: str) -> bool:
+        """x depends on y: both appear in some relation's schema."""
+        return any(x in sch and y in sch for sch in self.relations.values())

@@ -1,0 +1,308 @@
+"""Relation representations.
+
+The paper stores relations as multi-indexed hash maps (DBToaster runtime).
+On TPU we dictionary-encode every attribute's active domain to ``0..D-1``
+and store a relation over schema ``(X1..Xk)`` as a *dense ring tensor* of
+shape ``[D1..Dk, *payload_shape]`` (DESIGN.md §3).  Updates arrive either as
+COO batches (keys + payloads) or in factorized form (products of
+per-variable factors — the paper's Sec. 5).
+
+  DenseRelation      device-resident materialized view / base relation
+  COOUpdate          batch of (key tuple -> payload) update rows
+  FactorizedUpdate   ⊗ of per-variable-group factors (rank-1 style updates)
+  PyRelation         host-side exact oracle (dict keys -> payload)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .rings import Payload, PyRing, Ring
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseRelation:
+    """Dense dictionary-encoded relation: payload[comp] has shape
+    ``[*domains(schema), *comp_shape]``."""
+
+    schema: tuple[str, ...]
+    ring: Ring
+    payload: Payload
+
+    def tree_flatten(self):
+        return ((self.payload,), (self.schema, self.ring))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(schema=aux[0], ring=aux[1], payload=children[0])
+
+    @property
+    def domains(self) -> tuple[int, ...]:
+        comp, shp = next(iter(self.ring.components.items()))
+        arr = self.payload[comp]
+        nk = arr.ndim - len(shp)
+        return arr.shape[:nk]
+
+    def domain_of(self, var: str) -> int:
+        return self.domains[self.schema.index(var)]
+
+    def num_keys(self) -> int:
+        """Number of keys with non-zero payload (device reduction)."""
+        return int(jnp.sum(~self.ring.is_zero(self.payload)))
+
+    @classmethod
+    def zeros(cls, schema, ring, domains):
+        return cls(tuple(schema), ring, ring.zeros(tuple(domains)))
+
+    @classmethod
+    def from_coo(cls, schema, ring, domains, keys, payload):
+        """Scatter-add a COO batch into a fresh dense relation."""
+        rel = cls.zeros(schema, ring, domains)
+        return rel.scatter_add(keys, payload)
+
+    def scatter_add(self, keys: jnp.ndarray, payload: Payload) -> "DenseRelation":
+        """keys: [B, k] int32; payload leaves: [B, *comp]."""
+        k = len(self.schema)
+        assert keys.ndim == 2 and keys.shape[1] == k, (keys.shape, self.schema)
+        idx = tuple(keys[:, i] for i in range(k))
+        new = {
+            comp: self.payload[comp].at[idx].add(payload[comp])
+            for comp in self.ring.components
+        }
+        return DenseRelation(self.schema, self.ring, new)
+
+    def gather(self, keys: jnp.ndarray) -> Payload:
+        """keys: [B, k] -> payload leaves [B, *comp]."""
+        k = len(self.schema)
+        idx = tuple(keys[:, i] for i in range(k))
+        return {comp: self.payload[comp][idx] for comp in self.ring.components}
+
+    def add(self, other: "DenseRelation") -> "DenseRelation":
+        assert self.schema == other.schema
+        return DenseRelation(
+            self.schema, self.ring, self.ring.add(self.payload, other.payload)
+        )
+
+    def transpose(self, new_schema: Sequence[str]) -> "DenseRelation":
+        perm = [self.schema.index(v) for v in new_schema]
+        nk = len(self.schema)
+        new = {}
+        for comp, shp in self.ring.components.items():
+            arr = self.payload[comp]
+            full_perm = perm + list(range(nk, arr.ndim))
+            new[comp] = jnp.transpose(arr, full_perm)
+        return DenseRelation(tuple(new_schema), self.ring, new)
+
+    def to_py(self, py_ring: PyRing, to_payload=None) -> "PyRelation":
+        """Densify to the host oracle (test helper; small relations only)."""
+        comp0, shp0 = next(iter(self.ring.components.items()))
+        arrs = {c: np.asarray(v) for c, v in self.payload.items()}
+        nk = len(self.schema)
+        doms = arrs[comp0].shape[:nk]
+        out = PyRelation(self.schema, py_ring)
+        for key in np.ndindex(*doms):
+            p = {c: arrs[c][key] for c in arrs}
+            if to_payload is not None:
+                val = to_payload(p)
+            elif len(arrs) == 1:
+                val = p[next(iter(p))].item() if p[next(iter(p))].ndim == 0 else p[next(iter(p))]
+            else:
+                val = tuple(p[c] for c in self.ring.components)
+            if not py_ring.is_zero(val):
+                out.data[key] = val
+        return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class COOUpdate:
+    """A batch of update rows: ``keys[b] -> payload[b]``.
+
+    Duplicate keys are allowed (payloads add up); zero payload rows are
+    padding (adding ring-0 is a no-op), which lets the pipeline pad batches
+    to a static size for jit.
+    """
+
+    schema: tuple[str, ...]
+    keys: jnp.ndarray  # [B, k] int32
+    payload: Payload  # leaves [B, *comp]
+
+    def tree_flatten(self):
+        return ((self.keys, self.payload), (self.schema,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(schema=aux[0], keys=children[0], payload=children[1])
+
+    @property
+    def batch(self) -> int:
+        return self.keys.shape[0]
+
+    def negate(self, ring: Ring) -> "COOUpdate":
+        return COOUpdate(self.schema, self.keys, ring.neg(self.payload))
+
+    def pad_to(self, ring: Ring, batch: int) -> "COOUpdate":
+        b = self.batch
+        if b == batch:
+            return self
+        assert b < batch, (b, batch)
+        keys = jnp.concatenate(
+            [self.keys, jnp.zeros((batch - b, self.keys.shape[1]), self.keys.dtype)]
+        )
+        pad = ring.zeros((batch - b,))
+        payload = jax.tree.map(
+            lambda x, z: jnp.concatenate([x, z]), self.payload, pad
+        )
+        return COOUpdate(self.schema, keys, payload)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FactorizedUpdate:
+    """Sec. 5: a delta expressed as a product of factors over disjoint
+    variable groups: ``δR = f_1 ⊗ ... ⊗ f_g`` where each factor is a
+    DenseRelation (typically a vector over one variable).  A rank-r update
+    is a *list* of these (sum of rank-1 terms)."""
+
+    schema: tuple[str, ...]
+    factors: tuple[DenseRelation, ...]
+
+    def tree_flatten(self):
+        return ((self.factors,), (self.schema,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)
+        obj.schema = aux[0]
+        obj.factors = children[0]
+        return obj
+
+    def __post_init__(self):
+        covered = [v for f in self.factors for v in f.schema]
+        assert sorted(covered) == sorted(set(covered)), "factor schemas must be disjoint"
+        assert set(covered) == set(self.schema), (covered, self.schema)
+
+    def factor_for(self, var: str) -> DenseRelation:
+        for f in self.factors:
+            if var in f.schema:
+                return f
+        raise KeyError(var)
+
+    def densify(self, ring: Ring) -> DenseRelation:
+        """Materialize the product (tests / small cases only)."""
+        from .contraction import contract_dense
+
+        acc = self.factors[0]
+        for f in self.factors[1:]:
+            acc = contract_dense(acc, f, marg=())
+        return acc.transpose(self.schema)
+
+
+class PyRelation:
+    """Host-side exact relation: dict[key tuple -> py payload]."""
+
+    def __init__(self, schema: Sequence[str], ring: PyRing, data: dict | None = None):
+        self.schema = tuple(schema)
+        self.ring = ring
+        self.data: dict[tuple, Any] = dict(data or {})
+
+    def copy(self) -> "PyRelation":
+        return PyRelation(self.schema, self.ring, dict(self.data))
+
+    def __len__(self):
+        return len(self.data)
+
+    def insert(self, key: tuple, payload) -> None:
+        cur = self.data.get(key, self.ring.zero())
+        new = self.ring.add(cur, payload)
+        if self.ring.is_zero(new):
+            self.data.pop(key, None)
+        else:
+            self.data[key] = new
+
+    def union(self, other: "PyRelation") -> "PyRelation":
+        assert self.schema == other.schema
+        out = self.copy()
+        for k, p in other.data.items():
+            out.insert(k, p)
+        return out
+
+    def project_cols(self, vars: Sequence[str]) -> list[int]:
+        return [self.schema.index(v) for v in vars]
+
+    def join(self, other: "PyRelation") -> "PyRelation":
+        """Natural join (⊗): payloads multiply."""
+        shared = [v for v in self.schema if v in other.schema]
+        out_schema = self.schema + tuple(v for v in other.schema if v not in self.schema)
+        ring = self.ring
+        out = PyRelation(out_schema, ring)
+        my_cols = self.project_cols(shared)
+        ot_cols = other.project_cols(shared)
+        ot_rest = [i for i, v in enumerate(other.schema) if v not in self.schema]
+        index: dict[tuple, list[tuple]] = {}
+        for k in other.data:
+            index.setdefault(tuple(k[i] for i in ot_cols), []).append(k)
+        for ka, pa in self.data.items():
+            probe = tuple(ka[i] for i in my_cols)
+            for kb in index.get(probe, ()):  # matching other keys
+                key = ka + tuple(kb[i] for i in ot_rest)
+                out.insert(key, ring.mul(pa, other.data[kb]))
+        return out
+
+    def marginalize(self, var: str, lift=None) -> "PyRelation":
+        """⊕_X with lifting function ``lift(value) -> payload`` (default 1)."""
+        i = self.schema.index(var)
+        out_schema = tuple(v for v in self.schema if v != var)
+        out = PyRelation(out_schema, self.ring)
+        for k, p in self.data.items():
+            g = lift(k[i]) if lift is not None else self.ring.one()
+            out.insert(k[:i] + k[i + 1 :], self.ring.mul(p, g))
+        return out
+
+    def rename(self, mapping: Mapping[str, str]) -> "PyRelation":
+        return PyRelation(
+            tuple(mapping.get(v, v) for v in self.schema), self.ring, dict(self.data)
+        )
+
+    def reorder(self, schema: Sequence[str]) -> "PyRelation":
+        """Permute key columns into the given schema order."""
+        if tuple(schema) == self.schema:
+            return self
+        perm = [self.schema.index(v) for v in schema]
+        return PyRelation(
+            tuple(schema), self.ring,
+            {tuple(k[i] for i in perm): p for k, p in self.data.items()},
+        )
+
+    def equals(self, other: "PyRelation", approx=False, rtol=1e-5, atol=1e-8) -> bool:
+        if set(self.schema) != set(other.schema):
+            return False
+        perm = [other.schema.index(v) for v in self.schema]
+        theirs = {}
+        for k, p in other.data.items():
+            theirs[tuple(k[i] for i in perm)] = p
+        keys = set(self.data) | set(theirs)
+        for k in keys:
+            a = self.data.get(k, self.ring.zero())
+            b = theirs.get(k, self.ring.zero())
+            if approx:
+                fa = np.concatenate([np.ravel(np.asarray(x, dtype=np.float64)) for x in (a if isinstance(a, tuple) else (a,))])
+                fb = np.concatenate([np.ravel(np.asarray(x, dtype=np.float64)) for x in (b if isinstance(b, tuple) else (b,))])
+                if not np.allclose(fa, fb, rtol=rtol, atol=atol):
+                    return False
+            elif isinstance(a, tuple):
+                for x, y in zip(a, b):
+                    if not np.allclose(np.asarray(x), np.asarray(y)):
+                        return False
+            else:
+                if a != b:
+                    return False
+        return True
+
+    def __repr__(self):
+        return f"PyRelation({self.schema}, {self.data})"

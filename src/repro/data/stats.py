@@ -1,0 +1,87 @@
+"""Streaming feature statistics via the paper's degree-m ring — F-IVM
+integration point #1 (DESIGN.md §5).
+
+Maintains the compound aggregate (c, s, Q) — count, per-feature sums, and
+the cofactor matrix — over the (normalized, joined) training stream,
+incrementally per batch, exactly as Sec. 7.2 of the paper.  Drives input
+normalization (running mean/variance from c and s, correlations from Q)
+and data-quality monitors, and feeds the linear-probe / regression
+examples.  Deletions are negative-weight updates (ring additive inverse).
+
+The per-batch update is the fused Pallas kernel (kernels/cofactor_update)
+on TPU; jnp fallback on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RunningCofactor:
+    """Device-resident (c, s, Q) triple over m features."""
+
+    c: jnp.ndarray   # scalar
+    s: jnp.ndarray   # [m]
+    Q: jnp.ndarray   # [m, m]
+
+    def tree_flatten(self):
+        return ((self.c, self.s, self.Q), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def init(cls, m: int, dtype=jnp.float32):
+        return cls(jnp.zeros((), dtype), jnp.zeros((m,), dtype),
+                   jnp.zeros((m, m), dtype))
+
+    def update(self, x: jnp.ndarray, weights: jnp.ndarray | None = None,
+               backend: str | None = None) -> "RunningCofactor":
+        """x [B, m] feature rows; weights [B] (+1 insert / -1 delete)."""
+        w = weights if weights is not None else jnp.ones(x.shape[0], x.dtype)
+        c, s, Q = ops.cofactor_update(x, w, backend=backend)
+        return RunningCofactor(self.c + c[0], self.s + s, self.Q + Q)
+
+    # -- derived statistics -------------------------------------------------
+    def mean(self) -> jnp.ndarray:
+        return self.s / jnp.maximum(self.c, 1.0)
+
+    def variance(self) -> jnp.ndarray:
+        mu = self.mean()
+        return jnp.diag(self.Q) / jnp.maximum(self.c, 1.0) - mu * mu
+
+    def covariance(self) -> jnp.ndarray:
+        mu = self.mean()
+        return self.Q / jnp.maximum(self.c, 1.0) - jnp.outer(mu, mu)
+
+    def correlation(self) -> jnp.ndarray:
+        cov = self.covariance()
+        sd = jnp.sqrt(jnp.clip(jnp.diag(cov), 1e-12))
+        return cov / jnp.outer(sd, sd)
+
+    def normalizer(self):
+        """(mean, std) for input normalization of the training stream."""
+        return self.mean(), jnp.sqrt(jnp.clip(self.variance(), 1e-12))
+
+    def drift_score(self, other: "RunningCofactor") -> jnp.ndarray:
+        """Data-quality monitor: correlation-structure drift vs a baseline
+        window (Frobenius distance of correlation matrices)."""
+        return jnp.linalg.norm(self.correlation() - other.correlation())
+
+
+def solve_ridge(stats: RunningCofactor, label_idx: int, feature_idx,
+                reg: float = 1e-3) -> jnp.ndarray:
+    """Closed-form ridge regression from the maintained cofactor matrix —
+    any (label, features) restriction of the one maintained Q (Sec. 8.4:
+    'suffices to learn models over any subset of the variables')."""
+    f = jnp.asarray(feature_idx)
+    A = stats.Q[jnp.ix_(f, f)] + reg * jnp.eye(f.shape[0])
+    b = stats.Q[f, label_idx]
+    return jnp.linalg.solve(A, b)

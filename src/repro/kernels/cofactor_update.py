@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused weighted sufficient statistics (c, s, Q).
+
+The hot loop of cofactor maintenance (Sec. 7.2): a batch of B lifted tuple
+rows ``x[B, m]`` with multiplicities ``w[B]`` contributes
+
+    c += Σ w,   s += Σ w·x,   Q += Xᵀ diag(w) X .
+
+The Q term is a weighted syrk — MXU work; c and s ride along in the same
+pass over X (one HBM read instead of three).  Grid = (m/bm, m/bn, B/bk)
+with the batch as the innermost (reduction) axis accumulating into the
+revisited output block.  Tiles are MXU-aligned multiples of 128 on the
+minor axis; the X block is staged once into VMEM per (i, k) and reused for
+the whole j row of Q tiles by the pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_i_ref, x_j_ref, w_ref, c_ref, s_ref, q_ref, *, nk: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        q_ref[...] = jnp.zeros_like(q_ref)
+
+        @pl.when(j == 0)
+        def _init_s():
+            s_ref[...] = jnp.zeros_like(s_ref)
+
+            @pl.when(i == 0)
+            def _init_c():
+                c_ref[...] = jnp.zeros_like(c_ref)
+
+    xi = x_i_ref[...].astype(jnp.float32)  # [bk, bm]
+    xj = x_j_ref[...].astype(jnp.float32)  # [bk, bn]
+    w = w_ref[...].astype(jnp.float32)  # [bk]
+
+    q_ref[...] += jax.lax.dot_general(
+        xi * w[:, None], xj, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(j == 0)
+    def _acc_s():
+        s_ref[...] += jnp.sum(xi * w[:, None], axis=0)
+
+        @pl.when(i == 0)
+        def _acc_c():
+            c_ref[...] += jnp.sum(w)[None]
+
+
+def cofactor_update(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_k: int = 256,
+    interpret: bool = False,
+):
+    """Returns (c [1], s [m], Q [m, m]) in f32.  B and m must be multiples of
+    the block sizes (ops.py pads)."""
+    B, m = x.shape
+    assert B % block_k == 0 and m % block_m == 0, (B, m, block_k, block_m)
+    nm, nk = m // block_m, B // block_k
+    grid = (nm, nm, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k, block_m), lambda i, j, k: (k, i)),
+            pl.BlockSpec((block_k, block_m), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_k,), lambda i, j, k: (k,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((block_m,), lambda i, j, k: (i,)),
+            pl.BlockSpec((block_m, block_m), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, x, w)

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: causal FlashAttention (online softmax).
+
+The LM-framework hot path (train/prefill).  Grid = (B·H, Tq/bq, Tk/bk) with
+the KV axis innermost; running max/denominator live in VMEM scratch across
+KV blocks; the output block is rescaled once per KV step.  Causal blocks
+above the diagonal are skipped entirely via a masked early-out (the index
+map still visits them, but the body is a no-op — XLA removes the work).
+
+GQA: callers reshape to one query group per KV head (ops.py), so the kernel
+always sees matching head counts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        # query block [qi*bq, qi*bq+bq); key block [ki*bk, ki*bk+bk)
+        run = (ki * block_k) <= (qi * block_q + block_q - 1)
+    else:
+        run = ki >= 0  # always true, but traced for pl.when
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)  # [bk, d]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+            logits = jnp.where(kpos <= qpos, logits, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)[None]
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q, k, v: [BH, T, D] with matching head counts (ops.py handles GQA).
+    T must be a multiple of the block sizes."""
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    assert Tq % block_q == 0 and Tk % block_k == 0
+    scale = float(scale if scale is not None else 1.0 / (D ** 0.5))
+    grid = (BH, Tq // block_q, Tk // block_k)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, block_q=block_q, block_k=block_k, causal=causal
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),  # running max
+            pltpu.VMEM((block_q,), jnp.float32),  # running denominator
+            pltpu.VMEM((block_q, D), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernels for factorized (rank-1) delta propagation (Sec. 5,
+Example 7.1 / LINVIEW).
+
+A rank-1 update δA₂ = u vᵀ to the chain A₁A₂A₃ propagates as two matvecs
+and one outer-product accumulate:
+
+    u₂ = A₁ u ;  v₂ = vᵀ A₃ ;  V += u₂ v₂ᵀ        — all O(p²).
+
+`matvec` is a tiled row-block kernel; `outer_accumulate` fuses the rank-1
+apply into the materialized view without materializing the outer product in
+HBM.  The minor dimension of every block is 128-aligned (VREG lanes); the
+matvec contraction runs on the MXU as a [bm, bk] × [bk, 1] dot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(a_ref, x_ref, y_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = a_ref[...].astype(jnp.float32)  # [bm, bk]
+    x = x_ref[...].astype(jnp.float32)  # [bk]
+    y_ref[...] += jax.lax.dot_general(
+        a, x[:, None], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )[:, 0]
+
+
+def matvec(A: jnp.ndarray, x: jnp.ndarray, *, block_m: int = 256,
+           block_k: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """y = A @ x ; A [n, k] (row-major tiles), x [k] -> y [n] f32."""
+    n, k = A.shape
+    assert n % block_m == 0 and k % block_k == 0
+    grid = (n // block_m, k // block_k)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, kk: (i, kk)),
+            pl.BlockSpec((block_k,), lambda i, kk: (kk,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i, kk: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(A, x)
+
+
+def _outer_acc_kernel(u_ref, v_ref, vin_ref, vout_ref):
+    u = u_ref[...].astype(jnp.float32)  # [bm]
+    v = v_ref[...].astype(jnp.float32)  # [bn]
+    outer = jax.lax.dot_general(
+        u[:, None], v[None, :], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    vout_ref[...] = (vin_ref[...].astype(jnp.float32) + outer).astype(vout_ref.dtype)
+
+
+def outer_accumulate(V: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray, *,
+                     block_m: int = 256, block_n: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    """V + u vᵀ (the ⊎-apply of a factorized delta to a materialized view)."""
+    n, m = V.shape
+    assert n % block_m == 0 and m % block_n == 0
+    grid = (n // block_m, m // block_n)
+    return pl.pallas_call(
+        _outer_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(V.shape, V.dtype),
+        interpret=interpret,
+    )(u, v, V)
+
+
+def rank1_chain_update(A1, u, v, A3, V, *, interpret: bool = False,
+                       block: int = 256):
+    """Fused V += (A1 u)(vᵀ A3): two matvecs + one outer accumulate."""
+    u2 = matvec(A1, u, block_m=block, block_k=block, interpret=interpret)
+    v2 = matvec(A3.T, v, block_m=block, block_k=block, interpret=interpret)
+    return outer_accumulate(V, u2, v2, block_m=block, block_n=block,
+                            interpret=interpret)

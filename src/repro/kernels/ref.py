@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cofactor_update_ref(x: jnp.ndarray, w: jnp.ndarray):
+    """Weighted sufficient statistics of a tuple batch (Sec. 7.2 hot loop).
+
+    x: [B, m] lifted feature rows; w: [B] multiplicities (0 = padding).
+    Returns (c, s, Q) = (Σw, Σ w·x, Xᵀ diag(w) X) in f32.
+    """
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    c = jnp.sum(wf)
+    s = jnp.sum(wf[:, None] * xf, axis=0)
+    Q = (xf * wf[:, None]).T @ xf
+    return c, s, Q
+
+
+def ring_mul_ref(ca, sa, Qa, cb, sb, Qb):
+    """Degree-m ring product, batched over leading K (Def. 7.2)."""
+    ca, sa, Qa, cb, sb, Qb = (t.astype(jnp.float32) for t in (ca, sa, Qa, cb, sb, Qb))
+    c = ca * cb
+    s = cb[:, None] * sa + ca[:, None] * sb
+    Q = (
+        cb[:, None, None] * Qa
+        + ca[:, None, None] * Qb
+        + jnp.einsum("ki,kj->kij", sa, sb)
+        + jnp.einsum("ki,kj->kij", sb, sa)
+    )
+    return c, s, Q
+
+
+def segment_ring_sum_ref(values: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int):
+    """Group-by aggregation ⊕ of payload rows: values [B, d], ids [B] -> [S, d].
+
+    Rows with id < 0 or >= S are dropped (padding)."""
+    valid = (seg_ids >= 0) & (seg_ids < num_segments)
+    vals = jnp.where(valid[:, None], values.astype(jnp.float32), 0.0)
+    ids = jnp.where(valid, seg_ids, 0)
+    return jax.ops.segment_sum(vals, ids, num_segments=num_segments)
+
+
+def matvec_ref(A: jnp.ndarray, x: jnp.ndarray):
+    return A.astype(jnp.float32) @ x.astype(jnp.float32)
+
+
+def rank1_chain_ref(A1: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray, A3: jnp.ndarray,
+                    V: jnp.ndarray):
+    """Fused factorized delta for the chain A1·δA2·A3 with δA2 = u vᵀ
+    (Example 7.1): V += (A1 u)(vᵀ A3); never materializes anything bigger
+    than the output."""
+    u2 = A1.astype(jnp.float32) @ u.astype(jnp.float32)
+    v2 = v.astype(jnp.float32) @ A3.astype(jnp.float32)
+    return V.astype(jnp.float32) + jnp.outer(u2, v2)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """Reference attention: q,k,v [B, H, T, D] (k/v may have fewer heads,
+    broadcast for GQA).  f32 softmax."""
+    B, H, T, D = q.shape
+    Hkv = k.shape[1]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((T, k.shape[2]), bool), k.shape[2] - T)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))

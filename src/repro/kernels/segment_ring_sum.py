@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: segment reduction of ring payload rows.
+
+Group-by aggregation (⊕ over a COO batch): values [B, d] with segment ids
+[B] reduce into [S, d].  TPUs have no fast scatter; the TPU-native
+formulation is a *one-hot matmul*: out = 1h(ids)ᵀ · values, built blockwise
+on the fly in VMEM so the one-hot matrix never exists in HBM, and the
+contraction runs on the MXU.  Grid = (S/bs, d/bd, B/bk), batch innermost,
+accumulating into the revisited output block.  Out-of-range ids (padding)
+contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ids_ref, vals_ref, out_ref, *, block_s: int):
+    si = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]  # [bk] int32
+    vals = vals_ref[...].astype(jnp.float32)  # [bk, bd]
+    seg0 = si * block_s
+    local = jnp.arange(block_s, dtype=ids.dtype) + seg0
+    onehot = (ids[:, None] == local[None, :]).astype(jnp.float32)  # [bk, bs]
+    out_ref[...] += jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def segment_ring_sum(
+    values: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    num_segments: int,
+    *,
+    block_s: int = 128,
+    block_d: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """values [B, d] (f32/bf16), seg_ids [B] int32 -> [S, d] f32.
+    B, d, S must be multiples of the block sizes (ops.py pads)."""
+    B, d = values.shape
+    S = num_segments
+    assert B % block_k == 0 and d % block_d == 0 and S % block_s == 0
+    grid = (S // block_s, d // block_d, B // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k,), lambda s, j, k: (k,)),
+            pl.BlockSpec((block_k, block_d), lambda s, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_s, block_d), lambda s, j, k: (s, j)),
+        out_shape=jax.ShapeDtypeStruct((S, d), jnp.float32),
+        interpret=interpret,
+    )(seg_ids, values)

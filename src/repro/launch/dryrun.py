@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # CPU-only artifact control: XLA:CPU float-normalizes bf16 dots to f32
+    # and LICM then hoists full f32 copies of loop-invariant tensors (all
+    # stacked weights + KV caches) out of the layer scan, inflating both
+    # memory_analysis and HBM-traffic estimates by >2x.  On TPU bf16 is
+    # native and these converts don't exist; disabling the hoist keeps the
+    # per-device memory/traffic picture faithful to the TPU target.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract the roofline terms.
+
+This is how the distribution config is proven coherent without hardware:
+``.lower().compile()`` must succeed for the 16×16 single-pod mesh and the
+2×16×16 multi-pod mesh for every cell; ``memory_analysis()`` proves the
+per-device footprint; the trip-count-aware HLO analysis supplies FLOPs /
+bytes / collective-bytes for EXPERIMENTS.md §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3_2_3b --shape train_4k
+    python -m repro.launch.dryrun --arch all [--multi-pod] --out results/
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from repro.models import registry                            # noqa: E402
+from repro.models.layers import P, abstract_from_spec        # noqa: E402
+from repro.optim.optimizers import make_optimizer            # noqa: E402
+
+from . import hlo_analysis                                   # noqa: E402
+from .mesh import make_production_mesh                       # noqa: E402
+from .sharding import (activation_sharding, spec_to_sharding_fn,  # noqa: E402
+                       param_sharding)
+from .train import abstract_train_args, make_train_plan, make_train_step  # noqa: E402
+
+# v5e-class hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link per chip
+
+
+def _abstract_cache(cfg, api, batch: int, seq: int, mesh):
+    to_sh = spec_to_sharding_fn(mesh)
+    spec = api.cache_spec(batch, seq)
+    dtypes = jax.eval_shape(lambda: api.init_cache(batch, seq, jnp.dtype(cfg.act_dtype)))
+
+    def leaf(s, abs_leaf):
+        return jax.ShapeDtypeStruct(s.shape, abs_leaf.dtype, sharding=to_sh(s))
+
+    return jax.tree.map(leaf, spec, dtypes, is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+               do_compile: bool = True, extra_tag: str = ""):
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return {"arch": arch_id, "shape": shape_name, "status": "skipped",
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "reason": "pure full-attention arch: no sub-quadratic path "
+                          "at 524288 tokens (DESIGN.md §5)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    api = registry.build(cfg)
+    to_sh = spec_to_sharding_fn(mesh)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        optimizer = make_optimizer(cfg.optimizer, 3e-4)
+        plan = make_train_plan(cfg, shape, mesh)
+        step = make_train_step(cfg, api, optimizer, plan)
+        args = abstract_train_args(cfg, api, optimizer, shape, mesh)
+        jitted = jax.jit(step, donate_argnums=(0, 1))
+    elif shape.kind == "prefill":
+        params = abstract_from_spec(api.specs, jnp.dtype(cfg.param_dtype), to_sh)
+        batch = registry.abstract_batch(cfg, shape, to_sh)
+        step = lambda p, b: api.prefill(p, b, cache_len=shape.seq_len)
+        args = (params, batch)
+        jitted = jax.jit(step)
+    else:  # decode
+        params = abstract_from_spec(api.specs, jnp.dtype(cfg.param_dtype), to_sh)
+        inp = registry.abstract_batch(cfg, shape, to_sh)
+        cache = _abstract_cache(cfg, api, shape.global_batch, shape.seq_len, mesh)
+        step = lambda p, tok, pos, c: api.decode_step(p, tok, pos, c)
+        args = (params, inp["token"], inp["pos"], cache)
+        jitted = jax.jit(step, donate_argnums=(3,))
+
+    with activation_sharding(mesh):
+        lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    record = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.devices.size,
+        "status": "lowered", "lower_s": round(t_lower, 1),
+        "n_params": api.n_params(), "n_active_params": api.n_active_params(),
+        "tag": extra_tag,
+    }
+    if not do_compile:
+        return record
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t0, 1)
+    record["status"] = "compiled"
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                record[k] = int(v)
+        args_b = record.get("argument_size_in_bytes", 0)
+        alias_b = record.get("alias_size_in_bytes", 0)
+        out_b = record.get("output_size_in_bytes", 0)
+        tmp_b = record.get("temp_size_in_bytes", 0)
+        record["peak_bytes_per_device"] = args_b + out_b + tmp_b - alias_b
+
+    ca = compiled.cost_analysis()
+    if ca:
+        record["xla_flops_once"] = float(ca.get("flops", 0.0))
+        record["xla_bytes_once"] = float(ca.get("bytes accessed", 0.0))
+
+    costs = hlo_analysis.analyze(compiled.as_text())
+    record["hlo_dot_flops"] = costs.dot_flops
+    record["hlo_elem_flops"] = costs.elem_flops
+    record["hlo_bytes"] = costs.bytes
+    record["collective_bytes"] = dict(costs.collective_bytes)
+    record["bytes_by_tag"] = dict(costs.bytes_by_tag)
+    record["flops_by_tag"] = dict(costs.flops_by_tag)
+
+    # roofline terms (per-device quantities over per-chip peaks)
+    record["compute_term_s"] = costs.flops / PEAK_FLOPS
+    record["memory_term_s"] = costs.bytes / HBM_BW
+    record["collective_term_s"] = costs.total_collective_bytes / ICI_BW
+    terms = {"compute": record["compute_term_s"],
+             "memory": record["memory_term_s"],
+             "collective": record["collective_term_s"]}
+    record["bottleneck"] = max(terms, key=terms.get)
+
+    # model flops (useful work): 6·N_active·D for train, 2·N_active per token
+    n_act = api.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        record["model_flops"] = 6.0 * n_act * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        record["model_flops"] = 2.0 * n_act * tokens
+    else:
+        record["model_flops"] = 2.0 * n_act * shape.global_batch
+    total_hlo = costs.flops * mesh.devices.size
+    record["useful_flop_ratio"] = (record["model_flops"] / total_hlo
+                                   if total_hlo else 0.0)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for JSON records")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    for a in archs:
+        for s in shapes:
+            try:
+                rec = lower_cell(a, s, multi_pod=args.multi_pod,
+                                 do_compile=not args.no_compile)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                rec = {"arch": a, "shape": s,
+                       "mesh": "2x16x16" if args.multi_pod else "16x16",
+                       "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+            print(json.dumps({k: v for k, v in rec.items() if k != "traceback"}))
+            if rec.get("status") == "FAILED":
+                print(rec.get("traceback", ""))
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                fn = f"{a}__{s}__{rec.get('mesh', 'x')}.json"
+                with open(os.path.join(args.out, fn), "w") as f:
+                    json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

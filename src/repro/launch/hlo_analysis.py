@@ -1,0 +1,449 @@
+"""Trip-count-aware HLO analysis for the roofline report.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE — useless
+for models that lax.scan over layers (and microbatches).  This module
+parses ``compiled.as_text()`` (the post-SPMD, per-device module) and walks
+the computation graph with multipliers:
+
+  * while bodies  × trip count (extracted from the condition's constant),
+  * fusions/calls × 1,
+  * nested loops multiply (microbatch scan × layer scan × ...).
+
+Per computation it accumulates:
+  * ``dot_flops``   — 2 · result_elems · contracted_size per dot,
+  * ``elem_flops``  — one flop per element of arithmetic/reduce ops (VPU),
+  * ``bytes``       — estimated HBM traffic,
+  * ``collective_bytes`` by op type (result-shape bytes per op).
+
+HBM-traffic model (what makes the estimate honest inside loops):
+  * a fusion reads each parameter once and writes its root once — EXCEPT
+    parameters that are only consumed by slicing ops (dynamic-slice /
+    gather / slice), which read only the slice (layer-stacked weights
+    inside a scan!), and dynamic-update-slice roots, which touch only the
+    updated region (in-place KV-cache writes);
+  * the same slicing rules apply to top-level instructions;
+  * fusion internals never touch HBM.
+
+All quantities are PER DEVICE (the module is the partitioned program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_PARAM_RE = re.compile(r"parameter\((\d+)\)")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+# coarse attribution tags, matched against jax op_name metadata paths
+TAGS = (
+    ("attention", ("flash_attention", "gqa_", "mla_", "decode_attention",
+                   "_plain_attention", "apply_rope")),
+    ("moe", ("moe_", "top_k", "argsort", "searchsorted")),
+    ("ssm", ("mamba", "mlstm", "slstm", "associative_scan")),
+    ("mlp", ("swiglu", "gelu_mlp")),
+    ("embed_logits", ("take", "_embed", "_logits", "cross_entropy",
+                      "logsumexp")),
+    ("norm", ("rms_norm",)),
+    ("optimizer", ("adafactor", "adamw", "sgd", "global_norm", "upd")),
+)
+
+
+def _tag_of(line: str) -> str:
+    m = _OPNAME_RE.search(line)
+    if not m:
+        return "other"
+    path = m.group(1)
+    for tag, keys in TAGS:
+        if any(k in path for k in keys):
+            return tag
+    return "other"
+
+_SLICING_OPS = {"dynamic-slice", "slice", "gather"}
+
+# VMEM residency model: loop-invariant operands up to this size are assumed
+# resident across while iterations (v5e has 128 MB VMEM) and charged once
+# per loop invocation instead of once per iteration.  Without this, the
+# xlstm cell's recurrent weights (16.8 MB, re-read 4096× per layer by the
+# estimator) dominate the memory term 10× over reality.
+VMEM_RESIDENT_BYTES = 64 * 2**20
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "power", "compare", "select", "and", "or", "xor", "not",
+    "abs", "sign", "floor", "ceil", "round-nearest-afz", "cosine", "sine",
+    "logistic", "atan2", "remainder", "clamp", "reduce", "map",
+    "reduce-window",
+}
+
+_ZERO_BYTE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "opt-barrier", "partition-id", "replica-id", "reshape", "custom-call",
+}
+
+
+def _type_bytes_elems(type_str: str) -> tuple[float, float]:
+    total_b = 0.0
+    total_e = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_e += elems
+        total_b += elems * _DTYPE_BYTES[dt]
+    return total_b, total_e
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+    operands: list
+    result_bytes: float
+    result_elems: float
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    elem_flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    edges: list = dataclasses.field(default_factory=list)
+    is_fusion_body: bool = False
+    consts: list = dataclasses.field(default_factory=list)
+    # fusion-call interface costs
+    param_reads: dict = dataclasses.field(default_factory=dict)  # idx -> bytes
+    root_write: float = 0.0
+    # per-module attribution (op_name metadata)
+    bytes_by_tag: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    flops_by_tag: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    # VMEM-resident loop-invariant reads, charged once per loop invocation
+    invariant_bytes: float = 0.0
+    invariant_names: set = dataclasses.field(default_factory=set)
+
+
+def _parse_computations(text: str):
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur: list[str] | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                name = m.group(1)
+                comps[name] = cur = []
+                if line.startswith("ENTRY"):
+                    entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        cur.append(line)
+    return comps, entry
+
+
+def _analyze_computation(lines: list[str]) -> CompStats:
+    st = CompStats()
+    instrs: dict[str, _Instr] = {}
+    order: list[_Instr] = []
+    params: dict[str, int] = {}      # instr name -> parameter index
+    root: _Instr | None = None
+
+    for line in lines:
+        st.consts.extend(int(c) for c in _CONST_RE.findall(line))
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        nbytes, nelems = _type_bytes_elems(type_str)
+        rest = line[m.end() - 1:]
+        # operands = %names referenced before any attribute section
+        argpart = rest.split("),", 1)[0]
+        operands = _OPERAND_RE.findall(argpart)
+        ins = _Instr(name, type_str, op, line, operands, nbytes, nelems)
+        instrs[name] = ins
+        order.append(ins)
+        if op == "parameter":
+            pm = _PARAM_RE.search(line)
+            if pm:
+                params[name] = int(pm.group(1))
+        if line.lstrip().startswith("ROOT"):
+            root = ins
+
+        # ---- edges -------------------------------------------------------
+        if op == "while":
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                st.edges.append((body, ("trip", cond)))
+                st.edges.append((cond, ("trip", cond)))
+            continue
+        cm = _CALLS_RE.search(line)
+        if cm:
+            st.edges.append((cm.group(1), ("fusion", name)))
+        tm = _TO_APPLY_RE.search(line)
+        if tm:
+            st.edges.append((tm.group(1), ("call", None)))
+        bm = _BRANCH_RE.search(line)
+        if bm:
+            for b in _OPERAND_RE.findall(bm.group(1)):
+                st.edges.append((b, ("call", None)))
+
+        # ---- flops -------------------------------------------------------
+        if op == "dot":
+            lhs_cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            contracted = 1
+            if lhs_cd and operands:
+                lhs = instrs.get(operands[0])
+                if lhs is not None:
+                    sm = _SHAPE_RE.search(lhs.type_str)
+                    if sm and sm.group(2):
+                        dims = [int(d) for d in sm.group(2).split(",")]
+                        for ci in lhs_cd.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                contracted *= dims[int(ci)]
+            st.dot_flops += 2.0 * nelems * contracted
+            st.flops_by_tag[_tag_of(line)] += 2.0 * nelems * contracted
+        elif op in _ELEMENTWISE:
+            st.elem_flops += nelems
+            st.flops_by_tag[_tag_of(line)] += nelems
+
+        # ---- collectives ---------------------------------------------
+        base_op = op.replace("-start", "")
+        if base_op in ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute"):
+            st.collective_bytes[base_op] += nbytes
+
+    # ---- per-parameter effective reads (for fusion call sites) -----------
+    consumers: dict[str, list[_Instr]] = defaultdict(list)
+    for ins in order:
+        for o in ins.operands:
+            if o in instrs:
+                consumers[o].append(ins)
+    for pname, pidx in params.items():
+        full = instrs[pname].result_bytes
+        cons = consumers.get(pname, [])
+        if not cons:
+            eff = 0.0
+        elif all(c.op in _SLICING_OPS and c.operands
+                 and c.operands[0] == pname for c in cons):
+            # only sliced: reads just the slices (stacked weights in a scan)
+            eff = min(sum(c.result_bytes for c in cons), full)
+        elif all(c.op == "dynamic-update-slice" and c.operands
+                 and c.operands[0] == pname for c in cons):
+            # only updated in place (aliased KV-cache buffer): no read
+            eff = 0.0
+        else:
+            eff = full
+        st.param_reads[pidx] = eff
+    def _write_cost(r: _Instr) -> float:
+        # look through convert/bitcast wrappers around an in-place update
+        while r.op in ("convert", "bitcast") and r.operands and r.operands[0] in instrs:
+            r = instrs[r.operands[0]]
+        if r.op == "dynamic-update-slice" and len(r.operands) >= 2:
+            upd = instrs.get(r.operands[1])
+            return 2.0 * (upd.result_bytes if upd else r.result_bytes)
+        return r.result_bytes
+
+    if root is not None:
+        if root.op == "tuple":  # multi-output fusion: charge each output
+            st.root_write = sum(
+                _write_cost(instrs[o]) for o in root.operands if o in instrs)
+        else:
+            st.root_write = _write_cost(root)
+
+    # ---- loop-invariant detection (while bodies: gte(arg, i) passed back
+    # unchanged at tuple position i) -> VMEM-resident read model ----------
+    invariant: set[str] = set()
+    param_names = [n for n, i in params.items()]
+    if root is not None and root.op == "tuple" and len(param_names) == 1:
+        arg = param_names[0]
+        gte_idx: dict[str, int] = {}
+        for ins in order:
+            if ins.op == "get-tuple-element" and ins.operands == [arg]:
+                mi = re.search(r"index=(\d+)", ins.line)
+                if mi:
+                    gte_idx[ins.name] = int(mi.group(1))
+
+        def resolve(name: str) -> str:
+            # follow copy/bitcast passthrough chains back to their source
+            seen = 0
+            while name in instrs and instrs[name].op in ("copy", "bitcast") \
+                    and instrs[name].operands and seen < 20:
+                name = instrs[name].operands[0]
+                seen += 1
+            return name
+
+        for i, o in enumerate(root.operands):
+            src = resolve(o)
+            if gte_idx.get(src) == i and \
+                    instrs[src].result_bytes <= VMEM_RESIDENT_BYTES:
+                invariant.add(src)
+        # copies/converts/bitcasts of invariants stay resident too
+        changed = True
+        while changed:
+            changed = False
+            for ins in order:
+                if ins.name in invariant:
+                    continue
+                if ins.op in ("copy", "convert", "bitcast", "reshape",
+                              "transpose") and ins.operands and \
+                        ins.operands[0] in invariant and \
+                        ins.result_bytes <= VMEM_RESIDENT_BYTES:
+                    invariant.add(ins.name)
+                    changed = True
+        st.invariant_bytes = sum(instrs[n].result_bytes for n in invariant)
+        st.invariant_names = invariant
+
+    # ---- top-level HBM bytes (non-fusion computations use this) ----------
+    for ins in order:
+        op = ins.op
+        if op in _ZERO_BYTE_OPS or op.endswith("-done") or op == "while":
+            continue
+        if op in _SLICING_OPS:
+            b = 2.0 * ins.result_bytes  # read slice + write result
+        elif op == "dynamic-update-slice":
+            upd = instrs.get(ins.operands[1]) if len(ins.operands) >= 2 else None
+            b = 2.0 * (upd.result_bytes if upd else ins.result_bytes)
+        else:
+            b = ins.result_bytes if ins.name not in invariant else 0.0
+            for o in ins.operands:
+                if o in instrs and o not in invariant:
+                    b += instrs[o].result_bytes
+        st.bytes += b
+        st.bytes_by_tag[_tag_of(ins.line)] += b
+    return st, instrs
+
+
+def parse_hlo(text: str):
+    raw, entry = _parse_computations(text)
+    comps: dict[str, CompStats] = {}
+    all_instrs: dict[str, dict] = {}
+    for name, lines in raw.items():
+        comps[name], all_instrs[name] = _analyze_computation(lines)
+    # mark fusion bodies + fix call-site bytes for fusions
+    fusion_sites: list[tuple[str, str, str]] = []  # (caller, callee, instr)
+    for cname, st in comps.items():
+        for callee, (kind, site) in st.edges:
+            if kind == "fusion" and callee in comps:
+                comps[callee].is_fusion_body = True
+                fusion_sites.append((cname, callee, site))
+    for cname, callee, site in fusion_sites:
+        caller_instrs = all_instrs[cname]
+        ins = caller_instrs.get(site)
+        body = comps[callee]
+        if ins is None:
+            continue
+        # replace the generic operand+result charge with the interface model
+        inv = comps[cname].invariant_names
+        generic = ins.result_bytes + sum(
+            caller_instrs[o].result_bytes for o in ins.operands
+            if o in caller_instrs and o not in inv)
+        eff = body.root_write
+        for i, o in enumerate(ins.operands):
+            if o not in inv:  # VMEM-resident operands read once per loop
+                eff += body.param_reads.get(i, 0.0)
+        comps[cname].bytes += eff - generic
+        comps[cname].bytes_by_tag[_tag_of(ins.line)] += eff - generic
+    return comps, entry
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    seen, stack, best = set(), [cond_name], 1
+    while stack:
+        c = stack.pop()
+        if c in seen or c not in comps:
+            continue
+        seen.add(c)
+        for v in comps[c].consts:
+            best = max(best, v)
+        for callee, _ in comps[c].edges:
+            stack.append(callee)
+    return best
+
+
+@dataclasses.dataclass
+class HloCosts:
+    dot_flops: float
+    elem_flops: float
+    bytes: float
+    collective_bytes: dict
+    bytes_by_tag: dict = dataclasses.field(default_factory=dict)
+    flops_by_tag: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.elem_flops
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _merge(dst: dict, src: dict, mult: float) -> None:
+    for k, v in src.items():
+        dst[k] = dst.get(k, 0.0) + mult * v
+
+
+def analyze(text: str) -> HloCosts:
+    comps, entry = parse_hlo(text)
+    memo: dict[str, tuple] = {}
+
+    def visit(name: str, visiting: frozenset) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in visiting:
+            return (0.0, 0.0, 0.0, {}, {}, {})
+        c = comps[name]
+        dot, elem = c.dot_flops, c.elem_flops
+        byt = 0.0 if c.is_fusion_body else c.bytes
+        coll = dict(c.collective_bytes)
+        btag = {} if c.is_fusion_body else dict(c.bytes_by_tag)
+        ftag = dict(c.flops_by_tag)
+        for callee, (kind, cond) in c.edges:
+            mult = _trip_count(comps, cond) if kind == "trip" else 1
+            cd, ce, cb, cc, cbt, cft = visit(callee, visiting | {name})
+            dot += mult * cd
+            elem += mult * ce
+            byt += mult * cb
+            if kind == "trip" and callee in comps:
+                # invariant (VMEM-resident) reads: once per loop invocation
+                byt += comps[callee].invariant_bytes
+            _merge(coll, cc, mult)
+            _merge(btag, cbt, mult)
+            _merge(ftag, cft, mult)
+        memo[name] = (dot, elem, byt, coll, btag, ftag)
+        return memo[name]
+
+    dot, elem, byt, coll, btag, ftag = visit(entry, frozenset())
+    return HloCosts(dot_flops=dot, elem_flops=elem, bytes=byt,
+                    collective_bytes=coll, bytes_by_tag=btag,
+                    flops_by_tag=ftag)

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state.  Shapes:
+  single-pod:  (16, 16)    axes ("data", "model")   — 256 chips (one v5e pod)
+  multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    assert len(devices) >= n, (
+        f"need {n} devices for mesh {shape}; have {len(devices)} — run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py sets this)")
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    devices = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(devices, ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (pod folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def tp_size(mesh) -> int:
+    return int(mesh.shape.get("model", 1))

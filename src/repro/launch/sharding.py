@@ -1,0 +1,167 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style, divisibility-aware).
+
+Every parameter / activation / cache tensor carries *logical* axis names
+(see models/layers.P).  This module resolves them against a mesh:
+
+  * candidates are tried in order; a candidate is accepted only if the dim
+    is divisible by the product of its mesh-axis sizes AND none of its mesh
+    axes is already used by another dim of the same tensor;
+  * the DP placeholder expands to ("pod", "data") on the multi-pod mesh and
+    ("data",) on the single-pod mesh;
+  * anything unresolvable falls back to replication — e.g. llama3.2-3b's 24
+    q-heads don't divide the 16-way model axis, so its attention weights
+    replicate across TP while its MLP still shards (see DESIGN.md §4).
+
+The same rules drive parameter shardings (dry-run in_shardings), optimizer
+state, decode caches, and ``shd()`` activation constraints inside the
+model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models.layers import P, pop_constrainer, push_constrainer
+
+DP = "__dp__"   # expands to all data-parallel axes ("pod" folds into DP)
+
+# parameter logical axes
+PARAM_RULES: dict = {
+    "vocab": [("model",)],
+    "embed": [(DP,)],            # FSDP shard of the model dimension
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "mlp": [("model",)],
+    "experts": [("model",)],     # expert parallelism
+    "inner": [("model",)],       # mamba/mlstm expanded dim
+    "q_lora": [], "kv_lora": [], "head_dim": [], "state_dim": [],
+    "embed2": [], "inner2": [], "expert_ff": [], "layers": [],
+}
+
+# activation / cache logical axes
+ACT_RULES: dict = {
+    "batch": [(DP,), ("data",)],
+    "kv_batch": [(DP,), ("data",)],
+    # decode caches shard their seq axis over the TP axis (vLLM-style);
+    # attention over the sharded axis becomes partial-softmax + all-reduce.
+    # When batch is unshardable (long_500k, B=1) the combined candidate
+    # claims every axis.
+    "kv_seq": [(DP, "model"), ("model",), (DP,), ("data",)],
+    "seq": [],
+    "vocab_act": [("model",)],
+    "heads_act": [("model",)],
+    "experts_act": [("model",)],
+    "inner_act": [("model",)],
+    "embed_act": [],
+    "kv_heads": [("model",)],
+    "kv_lora": [],
+    "vocab": [("model",)],
+}
+
+ALL_RULES = {**ACT_RULES, **PARAM_RULES}
+
+
+def _expand(cand: tuple, mesh) -> tuple[str, ...]:
+    out: list[str] = []
+    for a in cand:
+        if a == DP:
+            out.extend(x for x in ("pod", "data") if x in mesh.axis_names)
+        elif a in mesh.axis_names:
+            out.append(a)
+    return tuple(out)
+
+
+def resolve_spec(mesh, axes: Sequence, dims: Sequence[int],
+                 rules: dict | None = None) -> PartitionSpec:
+    rules = rules if rules is not None else ALL_RULES
+    used: set[str] = set()
+    entries = []
+    for name, dim in zip(axes, dims):
+        chosen = None
+        for cand in rules.get(name, []) if name is not None else []:
+            axs = _expand(cand, mesh)
+            if not axs:
+                continue
+            size = int(np.prod([mesh.shape[a] for a in axs]))
+            if size > 1 and dim % size == 0 and not (set(axs) & used):
+                chosen = axs
+                break
+        if chosen:
+            used |= set(chosen)
+            entries.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            entries.append(None)
+    return PartitionSpec(*entries)
+
+
+def param_sharding(mesh, spec: P, rules: dict | None = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(mesh, spec.axes, spec.shape, rules))
+
+
+def spec_to_sharding_fn(mesh, rules: dict | None = None):
+    return lambda s: param_sharding(mesh, s, rules)
+
+
+def tree_shardings(mesh, spec_tree, rules: dict | None = None):
+    """Map a P-spec tree to a NamedSharding tree."""
+    return jax.tree.map(lambda s: param_sharding(mesh, s, rules), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation constrainer (models call shd(x, *logical_axes))
+# ---------------------------------------------------------------------------
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: dict | None = None):
+    def constrain(x, axes):
+        if len(axes) != x.ndim:
+            return x
+        spec = resolve_spec(mesh, axes, x.shape, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    push_constrainer(constrain)
+    try:
+        yield
+    finally:
+        pop_constrainer()
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state specs mirror parameter specs
+# ---------------------------------------------------------------------------
+def opt_state_specs(opt_name: str, param_specs):
+    """P-spec tree matching optimizers.{adamw,adafactor,sgd}.init output."""
+    from repro.optim.optimizers import _FactoredSlot  # noqa: F401
+
+    def adamw_slot(s: P):
+        return P(s.shape, s.axes, "zeros")
+
+    if opt_name == "adamw":
+        return {
+            "step": P((), (), "zeros"),
+            "m": jax.tree.map(adamw_slot, param_specs, is_leaf=lambda x: isinstance(x, P)),
+            "v": jax.tree.map(adamw_slot, param_specs, is_leaf=lambda x: isinstance(x, P)),
+        }
+    if opt_name == "adafactor":
+        def slot(s: P):
+            factored = (len(s.shape) >= 2 and s.shape[-1] >= 128
+                        and s.shape[-2] >= 128)
+            if factored:
+                return _FactoredSlot(
+                    vr=P(s.shape[:-1], s.axes[:-1], "zeros"),
+                    vc=P(s.shape[:-2] + s.shape[-1:], s.axes[:-2] + s.axes[-1:], "zeros"),
+                )
+            return P(s.shape, s.axes, "zeros")
+
+        return {
+            "step": P((), (), "zeros"),
+            "v": jax.tree.map(slot, param_specs, is_leaf=lambda x: isinstance(x, P)),
+        }
+    if opt_name == "sgd":
+        return {"step": P((), (), "zeros")}
+    raise ValueError(opt_name)

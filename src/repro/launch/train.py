@@ -1,0 +1,218 @@
+"""Training step construction + the end-to-end training driver.
+
+``make_train_step(cfg, api, optimizer, n_microbatches, accum_dtype)``
+returns a pure function
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+that microbatches the global batch with lax.scan (gradient accumulation),
+so activation memory is bounded by one microbatch regardless of the global
+batch size.  The accumulation dtype is a per-arch memory-plan knob:
+fp32 everywhere except the 671B config on a single pod (DESIGN.md §4).
+
+The driver (``run_training``) adds the production loop: checkpoint/restart,
+per-step deadlines (straggler surfacing), optional rank-r gradient
+compression (runtime/compression.py — the paper's factorizable-update lock
+applied to DP sync), and metric logging.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, get_config
+from repro.models import registry
+from repro.models.layers import P, abstract_from_spec
+from repro.optim import linear_warmup_cosine
+from repro.optim.optimizers import Optimizer, make_optimizer
+
+from . import sharding as shd_rules
+from .mesh import dp_size, make_smoke_mesh
+
+
+# ---------------------------------------------------------------------------
+# Train plan: per-(arch, shape, mesh) microbatching + dtype policy
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    n_microbatches: int
+    accum_dtype: Any
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def make_train_plan(cfg: ArchConfig, shape: ShapeSpec, mesh) -> TrainPlan:
+    dp = dp_size(mesh)
+    # sequences per device per microbatch, by activation footprint
+    if cfg.d_model >= 4096:
+        seqs = 1
+    elif cfg.d_model >= 3072:
+        seqs = 2
+    else:
+        seqs = 4
+    n_micro = max(1, shape.global_batch // max(dp * seqs, 1))
+    while shape.global_batch % n_micro or (shape.global_batch // n_micro) % min(dp, shape.global_batch):
+        n_micro -= 1  # keep microbatch divisible by dp
+    # adafactor configs (the ≥50B models) accumulate in bf16 on every mesh:
+    # measured on jamba train_4k multi-pod, the fp32 accumulator pushed the
+    # cell from fitting to 37.2 GiB/dev (EXPERIMENTS.md §Roofline)
+    accum = jnp.bfloat16 if cfg.optimizer == "adafactor" else jnp.float32
+    return TrainPlan(n_microbatches=max(n_micro, 1), accum_dtype=accum)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, api: registry.ModelAPI,
+                    optimizer: Optimizer, plan: TrainPlan):
+    """Gradient compression (runtime/compression.py) composes by wrapping
+    ``optimizer`` with compressed_optimizer() before calling this."""
+    n_micro = plan.n_microbatches
+
+    def train_step(params, opt_state, batch):
+        def split_micro(a):
+            b = a.shape[0]
+            return a.reshape(n_micro, b // n_micro, *a.shape[1:])
+
+        micro = jax.tree.map(split_micro, batch)
+        grad_fn = jax.value_and_grad(lambda p, b: api.loss(p, b), has_aux=True)
+
+        def acc_body(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, _metrics), g = grad_fn(params, mb)
+            g_acc = jax.tree.map(
+                lambda acc, gi: acc + gi.astype(acc.dtype), g_acc, g)
+            return (g_acc, loss_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, plan.accum_dtype), params)
+        (grads, loss_sum), _ = jax.lax.scan(acc_body, (g0, jnp.zeros((), jnp.float32)),
+                                            micro)
+        # stay in the accumulation dtype: materializing an fp32 grad tree
+        # here costs +11.2 GB/dev on the 671B cell (§Perf iteration 3);
+        # optimizers upcast per-leaf transiently inside their update.
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        new_params, new_opt = optimizer.update(params, opt_state, grads)
+        metrics = {"loss": loss_sum / n_micro,
+                   "grad_norm": _global_norm(grads)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs for the dry-run (ShapeDtypeStruct + NamedSharding)
+# ---------------------------------------------------------------------------
+def abstract_train_args(cfg, api, optimizer, shape, mesh):
+    to_sh = shd_rules.spec_to_sharding_fn(mesh)
+    params = abstract_from_spec(api.specs, jnp.dtype(cfg.param_dtype), to_sh)
+    # exact opt-state dtypes/shapes via eval_shape; shardings from mirrored specs
+    opt_abs = jax.eval_shape(optimizer.init, params)
+    opt_specs = shd_rules.opt_state_specs(cfg.optimizer, api.specs)
+
+    def attach(abs_leaf, spec_leaf):
+        if isinstance(spec_leaf, P):
+            sh = shd_rules.param_sharding(mesh, spec_leaf)
+            return jax.ShapeDtypeStruct(abs_leaf.shape, abs_leaf.dtype, sharding=sh)
+        return abs_leaf
+
+    opt_state = jax.tree.map(attach, opt_abs, opt_specs,
+                             is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))
+    batch = registry.abstract_batch(cfg, shape, to_sh)
+    return params, opt_state, batch
+
+
+# ---------------------------------------------------------------------------
+# Real-training driver (reduced configs on CPU; full configs on TPU)
+# ---------------------------------------------------------------------------
+def run_training(cfg: ArchConfig, *, steps: int = 100, batch_size: int = 8,
+                 seq_len: int = 64, seed: int = 0, mesh=None,
+                 checkpoint_dir: str | None = None, checkpoint_every: int = 50,
+                 log_every: int = 10, data_iter=None, resume: bool = True,
+                 step_deadline_s: float | None = None,
+                 schedule_steps: int | None = None):
+    """End-to-end trainer used by examples/train_lm.py and the fault-
+    tolerance tests.  Returns (params, history)."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.data.lm_data import synthetic_lm_batches
+
+    api = registry.build(cfg)
+    mesh = mesh or make_smoke_mesh()
+    shape = ShapeSpec("adhoc", seq_len, batch_size, "train")
+    plan = make_train_plan(cfg, shape, mesh)
+    # The LR schedule is a function of the TOTAL intended run length
+    # (schedule_steps), which must stay fixed across checkpoint resumes for
+    # bit-consistent continuation.  Short runs scale warmup to the horizon
+    # and reduced (smoke-sized) configs use a livelier LR.
+    horizon = schedule_steps or steps
+    warmup = min(plan.warmup_steps, max(horizon // 10, 1))
+    base_lr = 3e-3 if cfg.d_model <= 256 else plan.learning_rate
+    lr = linear_warmup_cosine(base_lr, warmup, max(horizon, warmup + 1))
+    optimizer = make_optimizer(cfg.optimizer, lr)
+    key = jax.random.PRNGKey(seed)
+    params = api.init(key)
+    opt_state = optimizer.init(params)
+    start_step = 0
+    ckpt = None
+    if checkpoint_dir is not None:
+        ckpt = Checkpointer(checkpoint_dir)
+        if resume:
+            restored = ckpt.restore_latest((params, opt_state))
+            if restored is not None:
+                (params, opt_state), start_step = restored
+
+    step_fn = jax.jit(make_train_step(cfg, api, optimizer, plan))
+    if data_iter is None:
+        data_iter = synthetic_lm_batches(cfg, shape, seed=seed,
+                                         start_step=start_step)
+    history = []
+    for step in range(start_step, steps):
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if step_deadline_s is not None and dt > step_deadline_s:
+            print(f"[straggler] step {step} took {dt:.2f}s > {step_deadline_s}s")
+        history.append({"step": step, "loss": loss, "time_s": dt})
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"grad_norm {float(metrics['grad_norm']):.3f}  {dt*1e3:.0f}ms")
+        if ckpt is not None and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            ckpt.save((params, opt_state), step + 1)
+    if ckpt is not None:
+        ckpt.save((params, opt_state), steps)
+    return params, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-reduced) config — TPU only")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    run_training(cfg, steps=args.steps, batch_size=args.batch,
+                 seq_len=args.seq, checkpoint_dir=args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,316 @@
+"""Attention: GQA (llama/qwen/granite/gemma/seamless/jamba) and MLA
+(deepseek-v3), with three execution paths:
+
+  * ``flash_attention_jnp`` — chunked online-softmax over q/kv blocks
+    (lax.scan), the XLA fallback and the oracle for the Pallas kernel in
+    ``repro.kernels.flash_attention``.  Peak memory is O(block_q · block_k)
+    per head instead of O(S²).
+  * plain attention for short sequences (smoke tests).
+  * decode paths — one query token against a (possibly ring-buffered) cache.
+
+MLA decode uses the *absorbed* form: W_uk is folded into the query so
+attention runs directly against the compressed kv-latent cache — the cache
+stores kv_lora(512) + rope(64) per token instead of 2·H·hd.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, apply_rope, causal_mask, prefix_lm_mask, rms_norm, shd
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+def gqa_specs(cfg) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": P((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": P((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P((H, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = P((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = P((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def mla_specs(cfg) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": P((d, m.q_lora_rank), ("embed", "q_lora")),
+        "q_norm": P((m.q_lora_rank,), ("q_lora",), init="ones"),
+        "w_uq": P((m.q_lora_rank, H, qk), ("q_lora", "heads", "head_dim")),
+        "w_dkv": P((d, m.kv_lora_rank), ("embed", "kv_lora")),
+        "kv_norm": P((m.kv_lora_rank,), ("kv_lora",), init="ones"),
+        "w_kr": P((d, m.qk_rope_head_dim), ("embed", "head_dim")),
+        "w_ukv": P((m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+                   ("kv_lora", "heads", "head_dim")),
+        "wo": P((H, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+def _plain_attention(q, k, v, mask, scale):
+    """q [B,G,Hkv,S,D], k/v [B,1,Hkv,Sk,D]; mask [S,Sk]."""
+    s = jnp.einsum("bghsd,bghtd->bghst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bghst,bghtd->bghsd", p.astype(v.dtype), v)
+
+
+@jax.named_scope("flash_attention")
+def flash_attention_jnp(q, k, v, *, causal=True, prefix_len=None, window=None,
+                        q_offset=0, block_q: int = 1024, block_k: int = 2048):
+    """Chunked online-softmax attention.
+
+    q [B, H, S, D]; k/v [B, Hkv, Sk, D] with H % Hkv == 0.
+    Returns [B, H, S, D].  Memory: O(block_q · block_k) score tiles.
+    """
+    B, H, S, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]  # MLA: value head dim differs from qk head dim
+    G = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    # standard GQA pairing: q-head h uses kv-head h // G (h-major groups)
+    qg = q.reshape(B, Hkv, G, S, D).transpose(0, 2, 1, 3, 4)  # [B,G,Hkv,S,D]
+    kg = k[:, None]  # [B,1,Hkv,Sk,D]
+    vg = v[:, None]
+
+    if S * Sk <= 4096 * 4096 // 16 or S % block_q or Sk % block_k:
+        # small/odd shapes: plain masked attention
+        if prefix_len is not None:
+            mask = prefix_lm_mask(S, Sk, prefix_len)
+        elif causal:
+            mask = causal_mask(S, Sk, q_offset=q_offset, window=window)
+        else:
+            mask = jnp.ones((S, Sk), bool)
+        out = _plain_attention(qg, kg, vg, mask, scale)
+        return out.transpose(0, 2, 1, 3, 4).reshape(B, H, S, Dv)
+
+    nq, nk = S // block_q, Sk // block_k
+    q_blocks = qg.reshape(B, G, Hkv, nq, block_q, D).transpose(3, 0, 1, 2, 4, 5)
+    k_blocks = kg.reshape(B, 1, Hkv, nk, block_k, D).transpose(3, 0, 1, 2, 4, 5)
+    v_blocks = vg.reshape(B, 1, Hkv, nk, block_k, Dv).transpose(3, 0, 1, 2, 4, 5)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk  # qblk [B,G,Hkv,bq,D]
+
+        def kv_step(carry, kj_blks):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_blks
+            s = jnp.einsum("bghsd,bghtd->bghst", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            q_pos = qi * block_q + jnp.arange(block_q)[:, None] + q_offset
+            k_pos = kj * block_k + jnp.arange(block_k)[None, :]
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= k_pos <= q_pos
+            if window is not None:
+                mask &= k_pos > (q_pos - window)
+            if prefix_len is not None:
+                mask |= (q_pos < prefix_len) & (k_pos < prefix_len)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bghst,bghtd->bghsd", p.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, G, Hkv, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, Hkv, block_q), jnp.float32)
+        a0 = jnp.zeros((B, G, Hkv, block_q, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), k_blocks, v_blocks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), q_blocks))
+    # outs [nq, B, G, Hkv, bq, Dv] -> [B, Hkv, G, nq, bq, Dv] -> [B, H, S, Dv]
+    out = outs.transpose(1, 3, 2, 0, 4, 5).reshape(B, H, S, Dv)
+    return out
+
+
+@jax.named_scope("decode_attention")
+def decode_attention(q, k_cache, v_cache, pos, *, window=None):
+    """One-step decode: q [B,H,D] vs cache [B,Hkv,S,D]; pos scalar int.
+
+    When ``window`` is set the cache is a ring buffer of length S=window
+    that has been fully written (long-context serving); otherwise entries
+    at indices > pos are masked out.  Softmax runs in fp32; the seq axis of
+    the cache may be sharded — XLA turns the reductions into collectives.
+    """
+    B, H, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)  # q-head h -> kv-head h // G
+    # f32 accumulation via preferred_element_type: bf16 operands stay bf16
+    # (native on the MXU; avoids materialized f32 cache copies)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = s / (D ** 0.5)
+    idx = jnp.arange(S)
+    valid = idx <= pos if window is None else idx < jnp.minimum(pos + 1, S)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, D).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA module
+# ---------------------------------------------------------------------------
+def gqa_forward(cfg, p, x, positions, *, causal=True, prefix_len=None,
+                window=None, return_kv=False):
+    """x [B,S,d] -> [B,S,d].  Full-sequence (train / prefill)."""
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, :, None, :]
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    q = shd(q, "batch", "heads_act", "seq", None)
+    out = flash_attention_jnp(q, k, v, causal=causal, prefix_len=prefix_len,
+                              window=window)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_init_cache(cfg, batch: int, seq: int, dtype):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, KV, seq, hd), dtype),
+        "v": jnp.zeros((batch, KV, seq, hd), dtype),
+    }
+
+
+def gqa_cache_spec(cfg, batch: int, seq: int):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": P((batch, KV, seq, hd), ("kv_batch", "kv_heads", "kv_seq", "head_dim")),
+        "v": P((batch, KV, seq, hd), ("kv_batch", "kv_heads", "kv_seq", "head_dim")),
+    }
+
+
+def gqa_decode(cfg, p, x, cache, pos, *, window=None):
+    """x [B,d] one token at ``pos``; cache {"k","v"} [B,KV,S,hd]."""
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x, p["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    posv = jnp.asarray(pos)[None]
+    q = apply_rope(q[:, None], posv, cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], posv, cfg.rope_theta)[:, 0]
+    S = cache["k"].shape[2]
+    slot = pos % S if window is not None else pos
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k[:, :, None, :].astype(cache["k"].dtype), (0, 0, slot, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v[:, :, None, :].astype(cache["v"].dtype), (0, 0, slot, 0))
+    out = decode_attention(q, k_cache, v_cache, pos, window=window)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA module (deepseek-v3)
+# ---------------------------------------------------------------------------
+def _mla_q(cfg, p, x, positions):
+    m = cfg.mla
+    ql = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.rms_eps)
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["w_uq"])
+    qn, qr = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr  # [B,S,H,nope], [B,S,H,rope]
+
+
+def mla_forward(cfg, p, x, positions, *, causal=True, return_kv=False):
+    m = cfg.mla
+    B, S, d = x.shape
+    qn, qr = _mla_q(cfg, p, x, positions)
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.rms_eps)   # [B,S,r]
+    kr = apply_rope((x @ p["w_kr"])[:, :, None, :], positions, cfg.rope_theta)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_ukv"])
+    kn = kv[..., : m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]
+    H = cfg.n_heads
+    q = jnp.concatenate([qn, qr], axis=-1).transpose(0, 2, 1, 3)   # [B,H,S,qk]
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr, (B, S, H, m.qk_rope_head_dim))],
+                        axis=-1).transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    q = shd(q, "batch", "heads_act", "seq", None)
+    out = flash_attention_jnp(q, k, vt, causal=causal)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    if return_kv:
+        return y, (c_kv, kr[:, :, 0, :])
+    return y
+
+
+def mla_init_cache(cfg, batch: int, seq: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, seq, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_cache_spec(cfg, batch: int, seq: int):
+    m = cfg.mla
+    return {
+        "c_kv": P((batch, seq, m.kv_lora_rank), ("kv_batch", "kv_seq", "kv_lora")),
+        "k_rope": P((batch, seq, m.qk_rope_head_dim), ("kv_batch", "kv_seq", None)),
+    }
+
+
+def mla_decode(cfg, p, x, cache, pos):
+    """Absorbed-form MLA decode: attention against the compressed cache."""
+    m = cfg.mla
+    B, d = x.shape
+    posv = jnp.asarray(pos)[None]
+    qn, qr = _mla_q(cfg, p, x[:, None, :], posv)
+    qn, qr = qn[:, 0], qr[:, 0]                       # [B,H,nope/rope]
+    c_new = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.rms_eps)     # [B,r]
+    kr_new = apply_rope((x @ p["w_kr"])[:, None, :], posv, cfg.rope_theta)[:, 0]
+    c_cache = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new[:, None, :].astype(cache["c_kv"].dtype), (0, pos, 0))
+    kr_cache = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new[:, None, :].astype(cache["k_rope"].dtype), (0, pos, 0))
+    w_uk = p["w_ukv"][..., : m.qk_nope_head_dim]       # [r,H,nope]
+    w_uv = p["w_ukv"][..., m.qk_nope_head_dim:]        # [r,H,v]
+    q_abs = jnp.einsum("bhn,rhn->bhr", qn, w_uk)       # absorbed query
+    s = jnp.einsum("bhr,bsr->bhs", q_abs, c_cache,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhr,bsr->bhs", qr, kr_cache,
+                       preferred_element_type=jnp.float32)
+    s = s / ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5)
+    S = c_cache.shape[1]
+    s = jnp.where(jnp.arange(S) <= pos, s, NEG_INF)
+    attn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", attn.astype(c_cache.dtype), c_cache)
+    v = jnp.einsum("bhr,rhv->bhv", ctx, w_uv)
+    y = jnp.einsum("bhv,hvd->bd", v, p["wo"])
+    return y, {"c_kv": c_cache, "k_rope": kr_cache}

@@ -1,0 +1,168 @@
+"""Transformer-block composition: mixer (attn | mamba | mlstm | slstm) +
+MLP (dense SwiGLU | MoE), pre-norm residual.  One function family per
+concern; ``lm.py`` scans these over layer periods.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from .layers import P, rms_norm, shd, swiglu
+
+
+def mlp_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": P((d, f), ("embed", "mlp")),
+        "w_up": P((d, f), ("embed", "mlp")),
+        "w_down": P((f, d), ("mlp", "embed")),
+    }
+
+
+def block_specs(cfg, kind: str, idx_in_period: int) -> dict:
+    """Spec tree for one layer of the given kind."""
+    d = cfg.d_model
+    if kind in ("mlstm", "slstm"):
+        return {kind: (ssm.mlstm_specs(cfg) if kind == "mlstm"
+                       else ssm.slstm_specs(cfg))}
+    s: dict = {"ln1": P((d,), ("embed",), init="ones")}
+    if kind == "attn":
+        s["attn"] = (attn.mla_specs(cfg) if cfg.attn_kind == "mla"
+                     else attn.gqa_specs(cfg))
+    elif kind == "mamba":
+        s["mamba"] = ssm.mamba_specs(cfg)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    if cfg.d_ff or cfg.moe is not None:
+        s["ln2"] = P((d,), ("embed",), init="ones")
+        if cfg.is_moe_layer(idx_in_period):
+            s["moe"] = moe_mod.moe_specs(cfg)
+        else:
+            s["mlp"] = mlp_specs(cfg)
+    return s
+
+
+def apply_mlp_part(cfg, bp, x):
+    """Post-mixer MLP/MoE with pre-norm residual.  x [B,S,d]."""
+    if "mlp" not in bp and "moe" not in bp:
+        return x
+    h = rms_norm(x, bp["ln2"], cfg.rms_eps)
+    if "moe" in bp:
+        B, S, d = h.shape
+        y = moe_mod.moe_apply(cfg, bp["moe"], h.reshape(B * S, d)).reshape(B, S, d)
+    else:
+        y = swiglu(h, bp["mlp"]["w_gate"], bp["mlp"]["w_up"], bp["mlp"]["w_down"])
+    y = shd(y, "batch", "seq", "embed_act")
+    return x + y
+
+
+def apply_block(cfg, kind: str, bp, x, positions, *, causal=True,
+                prefix_len=None, window=None, state=None, return_kv=False):
+    """Full-sequence application.  Returns (x, new_state_or_None)."""
+    new_state = None
+    if kind == "attn":
+        h = rms_norm(x, bp["ln1"], cfg.rms_eps)
+        if cfg.attn_kind == "mla":
+            out = attn.mla_forward(cfg, bp["attn"], h, positions,
+                                   causal=causal, return_kv=return_kv)
+            if return_kv:
+                y, (c_kv, k_rope) = out
+                new_state = {"c_kv": c_kv, "k_rope": k_rope}
+            else:
+                y = out
+        else:
+            out = attn.gqa_forward(cfg, bp["attn"], h, positions,
+                                   causal=causal, prefix_len=prefix_len,
+                                   window=window, return_kv=return_kv)
+            if return_kv:
+                y, (k, v) = out
+                new_state = {"k": k, "v": v}
+            else:
+                y = out
+        x = x + y
+    elif kind == "mamba":
+        h = rms_norm(x, bp["ln1"], cfg.rms_eps)
+        y, new_state = ssm.mamba_forward(cfg, bp["mamba"], h, state)
+        x = x + y
+    elif kind == "mlstm":
+        y, new_state = ssm.mlstm_forward(cfg, bp["mlstm"], x, state)
+        x = x + y
+    elif kind == "slstm":
+        y, new_state = ssm.slstm_forward(cfg, bp["slstm"], x, state)
+        x = x + y
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    x = shd(x, "batch", "seq", "embed_act")
+    x = apply_mlp_part(cfg, bp, x)
+    return x, new_state
+
+
+def decode_block(cfg, kind: str, bp, x, pos, *, window=None, state=None):
+    """One-token decode.  x [B,d]; returns (x, new_state)."""
+    if kind == "attn":
+        h = rms_norm(x, bp["ln1"], cfg.rms_eps)
+        if cfg.attn_kind == "mla":
+            y, state = attn.mla_decode(cfg, bp["attn"], h, state, pos)
+        else:
+            y, state = attn.gqa_decode(cfg, bp["attn"], h, state, pos, window=window)
+        x = x + y
+    elif kind == "mamba":
+        h = rms_norm(x, bp["ln1"], cfg.rms_eps)
+        y, state = ssm.mamba_decode(cfg, bp["mamba"], h, state)
+        x = x + y
+    elif kind == "mlstm":
+        y, state = ssm.mlstm_decode(cfg, bp["mlstm"], x, state)
+        x = x + y
+    elif kind == "slstm":
+        y, state = ssm.slstm_decode(cfg, bp["slstm"], x, state)
+        x = x + y
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    if "mlp" in bp or "moe" in bp:
+        h = rms_norm(x, bp["ln2"], cfg.rms_eps)
+        if "moe" in bp:
+            y = moe_mod.moe_apply(cfg, bp["moe"], h)
+        else:
+            y = swiglu(h, bp["mlp"]["w_gate"], bp["mlp"]["w_up"], bp["mlp"]["w_down"])
+        x = x + y
+    return x, state
+
+
+def block_state_kind(cfg, kind: str) -> str | None:
+    """Which decode-state structure a block kind needs."""
+    return {"attn": "kv", "mamba": "mamba", "mlstm": "mlstm", "slstm": "slstm"}[kind]
+
+
+def block_cache_spec(cfg, kind: str, batch: int, seq: int):
+    if kind == "attn":
+        if cfg.attn_kind == "mla":
+            return attn.mla_cache_spec(cfg, batch, seq)
+        w = cfg.sliding_window
+        s = min(seq, w) if (w is not None and cfg.family == "hybrid") else seq
+        return attn.gqa_cache_spec(cfg, batch, s)
+    if kind == "mamba":
+        return ssm.mamba_state_spec(cfg, batch)
+    if kind == "mlstm":
+        return ssm.mlstm_state_spec(cfg, batch)
+    if kind == "slstm":
+        return ssm.slstm_state_spec(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_init_cache(cfg, kind: str, batch: int, seq: int, dtype):
+    if kind == "attn":
+        if cfg.attn_kind == "mla":
+            return attn.mla_init_cache(cfg, batch, seq, dtype)
+        w = cfg.sliding_window
+        s = min(seq, w) if (w is not None and cfg.family == "hybrid") else seq
+        return attn.gqa_init_cache(cfg, batch, s, dtype)
+    if kind == "mamba":
+        return ssm.mamba_init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return ssm.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return ssm.slstm_init_state(cfg, batch)
+    raise ValueError(kind)

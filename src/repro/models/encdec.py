@@ -1,0 +1,205 @@
+"""Encoder-decoder model (seamless-m4t): bidirectional encoder over stub
+frame embeddings + causal decoder with cross-attention.
+
+The audio frontend (w2v-BERT conformer) is a STUB per the brief: the input
+pipeline / ``input_specs()`` provides precomputed frame embeddings
+[B, F, d_model].  Everything downstream (both transformer stacks, the
+serving cache) is real.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .blocks import mlp_specs
+from .layers import (P, rms_norm, shd, softmax_cross_entropy, stack_specs,
+                     swiglu)
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+def _enc_layer_specs(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": P((d,), ("embed",), init="ones"),
+        "attn": attn.gqa_specs(cfg),
+        "ln2": P((d,), ("embed",), init="ones"),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def _dec_layer_specs(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": P((d,), ("embed",), init="ones"),
+        "self": attn.gqa_specs(cfg),
+        "ln_x": P((d,), ("embed",), init="ones"),
+        "cross": attn.gqa_specs(cfg),
+        "ln2": P((d,), ("embed",), init="ones"),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def encdec_specs(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "embed": P((cfg.padded_vocab, d), ("vocab", "embed"), init="embed",
+                   scale=0.02),
+        "frame_proj": P((d, d), ("embed", "embed2")),
+        "enc_layers": stack_specs(_enc_layer_specs(cfg), cfg.n_enc_layers),
+        "dec_layers": stack_specs(_dec_layer_specs(cfg), cfg.n_layers),
+        "enc_norm": P((d,), ("embed",), init="ones"),
+        "final_norm": P((d,), ("embed",), init="ones"),
+        "lm_head": P((d, cfg.padded_vocab), ("embed", "vocab")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (full-seq and one-step against precomputed enc K/V)
+# ---------------------------------------------------------------------------
+def _cross_kv(cfg, p, enc_out):
+    k = jnp.einsum("bfd,dhk->bhfk", enc_out, p["wk"])
+    v = jnp.einsum("bfd,dhk->bhfk", enc_out, p["wv"])
+    return k, v
+
+
+def _cross_forward(cfg, p, x, enc_out):
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k, v = _cross_kv(cfg, p, enc_out)
+    out = attn.flash_attention_jnp(q, k, v, causal=False)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+
+
+def _cross_decode(cfg, p, x, k, v):
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    out = attn.decode_attention(q, k, v, k.shape[2] - 1)
+    return jnp.einsum("bhk,hkd->bd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Encoder / decoder stacks
+# ---------------------------------------------------------------------------
+def encode(cfg, params, frames):
+    x = frames.astype(jnp.dtype(cfg.act_dtype)) @ params["frame_proj"]
+    x = shd(x, "batch", "seq", "embed_act")
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(h, bp):
+        a = rms_norm(h, bp["ln1"], cfg.rms_eps)
+        h = h + attn.gqa_forward(cfg, bp["attn"], a, positions, causal=False)
+        m = rms_norm(h, bp["ln2"], cfg.rms_eps)
+        h = h + swiglu(m, bp["mlp"]["w_gate"], bp["mlp"]["w_up"],
+                       bp["mlp"]["w_down"])
+        return h, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def decode_stack(cfg, params, tokens, enc_out, *, collect_cache=False):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(enc_out.dtype)
+    x = shd(x, "batch", "seq", "embed_act")
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(h, bp):
+        a = rms_norm(h, bp["ln1"], cfg.rms_eps)
+        out = attn.gqa_forward(cfg, bp["self"], a, positions, causal=True,
+                               return_kv=collect_cache)
+        if collect_cache:
+            y, (k, v) = out
+        else:
+            y = out
+        h = h + y
+        c = rms_norm(h, bp["ln_x"], cfg.rms_eps)
+        h = h + _cross_forward(cfg, bp["cross"], c, enc_out)
+        m = rms_norm(h, bp["ln2"], cfg.rms_eps)
+        h = h + swiglu(m, bp["mlp"]["w_gate"], bp["mlp"]["w_up"],
+                       bp["mlp"]["w_down"])
+        cache = None
+        if collect_cache:
+            ck, cv = _cross_kv(cfg, bp["cross"], enc_out)
+            cache = {"k": k, "v": v, "xk": ck, "xv": cv}
+        return h, cache
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    return rms_norm(x, params["final_norm"], cfg.rms_eps), caches
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def encdec_loss(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    h, _ = decode_stack(cfg, params, batch["tokens"], enc_out)
+    logits = h @ params["lm_head"].astype(h.dtype)
+    logits = shd(logits, "batch", "seq", "vocab_act")
+    ce = softmax_cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    loss = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "tokens": jnp.sum(mask)}
+
+
+def encdec_cache_spec(cfg, batch: int, seq: int) -> dict:
+    KV, hd, F = cfg.n_kv_heads, cfg.head_dim, cfg.n_frontend_tokens
+    L = cfg.n_layers
+    return {
+        "k": P((L, batch, KV, seq, hd), ("layers", "kv_batch", "kv_heads", "kv_seq", "head_dim"), "zeros"),
+        "v": P((L, batch, KV, seq, hd), ("layers", "kv_batch", "kv_heads", "kv_seq", "head_dim"), "zeros"),
+        "xk": P((L, batch, KV, F, hd), ("layers", "kv_batch", "kv_heads", None, "head_dim"), "zeros"),
+        "xv": P((L, batch, KV, F, hd), ("layers", "kv_batch", "kv_heads", None, "head_dim"), "zeros"),
+    }
+
+
+def encdec_init_cache(cfg, batch: int, seq: int, dtype):
+    KV, hd, F = cfg.n_kv_heads, cfg.head_dim, cfg.n_frontend_tokens
+    L = cfg.n_layers
+    z = lambda *s: jnp.zeros(s, dtype)
+    return {"k": z(L, batch, KV, seq, hd), "v": z(L, batch, KV, seq, hd),
+            "xk": z(L, batch, KV, F, hd), "xv": z(L, batch, KV, F, hd)}
+
+
+def encdec_prefill(cfg, params, batch, cache_len: int | None = None):
+    """Encode frames + run the decoder over the prompt; build decode cache."""
+    enc_out = encode(cfg, params, batch["frames"])
+    h, caches = decode_stack(cfg, params, batch["tokens"], enc_out,
+                             collect_cache=True)
+    logits = h[:, -1] @ params["lm_head"].astype(h.dtype)
+    S = batch["tokens"].shape[1]
+    cache_len = cache_len or S
+    full = encdec_init_cache(cfg, batch["tokens"].shape[0], cache_len, h.dtype)
+    for name in ("k", "v"):
+        src = caches[name].astype(full[name].dtype)
+        pad = cache_len - src.shape[3]
+        full[name] = jnp.pad(src, ((0, 0),) * 3 + ((0, pad),) + ((0, 0),))
+    full["xk"] = caches["xk"].astype(full["xk"].dtype)
+    full["xv"] = caches["xv"].astype(full["xv"].dtype)
+    # cache left unconstrained at prefill — see the note in lm.lm_prefill
+    return logits, full
+
+
+def encdec_decode(cfg, params, token, pos, cache):
+    x = jnp.take(params["embed"], token, axis=0).astype(
+        jnp.dtype(cfg.act_dtype))
+
+    def body(h, xs):
+        bp, c = xs
+        a = rms_norm(h, bp["ln1"], cfg.rms_eps)
+        y, new_kv = attn.gqa_decode(cfg, bp["self"], a, {"k": c["k"], "v": c["v"]}, pos)
+        h = h + y
+        cx = rms_norm(h, bp["ln_x"], cfg.rms_eps)
+        h = h + _cross_decode(cfg, bp["cross"], cx, c["xk"], c["xv"])
+        m = rms_norm(h, bp["ln2"], cfg.rms_eps)
+        h = h + swiglu(m, bp["mlp"]["w_gate"], bp["mlp"]["w_up"],
+                       bp["mlp"]["w_down"])
+        return h, {"k": new_kv["k"], "v": new_kv["v"], "xk": c["xk"], "xv": c["xv"]}
+
+    h, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    h = rms_norm(h, params["final_norm"], cfg.rms_eps)
+    logits = h @ params["lm_head"].astype(h.dtype)
+    return logits, new_cache

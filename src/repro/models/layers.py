@@ -1,0 +1,189 @@
+"""Model-layer primitives + the parameter-spec machinery.
+
+Every parameter is declared as a ``P`` spec leaf: shape + *logical axes*
+(names like "embed", "heads", "vocab").  The launch layer maps logical axes
+to mesh axes (FSDP/TP/EP/SP) via divisibility-aware rules — the same spec
+tree drives:
+  * real initialization (smoke tests, examples),
+  * abstract initialization (dry-run: ShapeDtypeStruct + NamedSharding),
+  * checkpoint layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter spec: shape, logical axes (one name per dim), init kind."""
+
+    shape: tuple
+    axes: tuple
+    init: str = "normal"   # normal | zeros | ones | embed | small
+    scale: float | None = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(spec: P, key, dtype) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[0] if len(spec.shape) >= 1 else 1
+    if len(spec.shape) >= 2:
+        fan_in = int(np.prod(spec.shape[:-1]))
+    scale = spec.scale
+    if scale is None:
+        scale = {"normal": 1.0 / np.sqrt(max(fan_in, 1)),
+                 "embed": 1.0,
+                 "small": 0.01}[spec.init]
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_from_spec(spec_tree, key, dtype=jnp.float32):
+    """Materialize a parameter pytree from a spec tree (real arrays)."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_from_spec(spec_tree, dtype, spec_to_sharding: Callable[[P], Any] | None = None):
+    """ShapeDtypeStruct pytree (dry-run path; no allocation)."""
+
+    def leaf(s: P):
+        sh = spec_to_sharding(s) if spec_to_sharding is not None else None
+        if sh is not None:
+            return jax.ShapeDtypeStruct(s.shape, dtype, sharding=sh)
+        return jax.ShapeDtypeStruct(s.shape, dtype)
+
+    return jax.tree.map(leaf, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Prefix every spec in the tree with a stacked leading dim (scan axis)."""
+
+    def leaf(s: P):
+        return P((n, *s.shape), (axis_name, *s.axes), s.init, s.scale)
+
+    return jax.tree.map(leaf, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (logical-axis based; resolved by launch/)
+# ---------------------------------------------------------------------------
+_CONSTRAIN: list[Callable] = []  # stack of fn(x, axes) -> x
+
+
+def push_constrainer(fn) -> None:
+    _CONSTRAIN.append(fn)
+
+
+def pop_constrainer() -> None:
+    _CONSTRAIN.pop()
+
+
+def shd(x, *axes):
+    """Apply the active logical-axis sharding constraint (no-op if none)."""
+    if _CONSTRAIN:
+        return _CONSTRAIN[-1](x, axes)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Numeric primitives
+# ---------------------------------------------------------------------------
+def rms_norm(x, gamma, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(dt)
+
+
+@jax.named_scope("swiglu")
+def swiglu(x, w_gate, w_up, w_down):
+    g = x @ w_gate
+    u = x @ w_up
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return h @ w_down
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    h = jax.nn.gelu((x @ w_up + b_up).astype(jnp.float32)).astype(x.dtype)
+    return h @ w_down + b_down
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., T, n_heads?, head_dim]; positions broadcastable to [..., T]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # [hd/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., T, hd/2]
+    # broadcast over any head axis between T and head_dim
+    extra = x.ndim - angles.ndim
+    for _ in range(extra):
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x1 * sin + x2 * cos
+    out = jnp.stack([xr1, xr2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset=0, window: int | None = None):
+    """[q_len, kv_len] boolean mask (True = attend)."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    m = k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > (q_pos - window)
+    return m
+
+
+def prefix_lm_mask(q_len: int, kv_len: int, prefix_len: int):
+    """Prefix positions attend bidirectionally; the rest is causal."""
+    m = causal_mask(q_len, kv_len)
+    q_pos = jnp.arange(q_len)[:, None]
+    k_pos = jnp.arange(kv_len)[None, :]
+    bidir = (q_pos < prefix_len) & (k_pos < prefix_len)
+    return m | bidir
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy (padded-vocab aware)
+# ---------------------------------------------------------------------------
+@jax.named_scope("cross_entropy")
+def softmax_cross_entropy(logits, labels, vocab_size: int):
+    """logits [..., Vp] fp32; labels int [...]; ids >= vocab_size are padding
+    columns and masked out of the partition function."""
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > vocab_size:
+        pad = jnp.arange(vp) >= vocab_size
+        logits = jnp.where(pad, -1e30, logits)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - ll

@@ -1,0 +1,137 @@
+"""Mixture-of-Experts layer with sort-based token dispatch (EP-shardable).
+
+Dispatch avoids the O(T·E·C) one-hot tensors of the classic einsum MoE:
+token→expert assignments are argsorted by expert id, positions within each
+expert are computed from the sorted ids, and tokens are scattered into
+fixed-capacity expert buffers [E, C, d].  The expert matmuls are einsums
+over the (sharded) expert axis; capacity overflow drops tokens (standard
+capacity-factor routing).  The router runs in fp32.
+
+Sharding: experts shard over the "model" mesh axis (expert parallelism);
+the scatter/gather across expert shards lowers to all-to-all-style
+collectives under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, shd
+
+
+def moe_specs(cfg) -> dict:
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_expert_ff
+    # Expert weights: EP over the model axis + FSDP over data on d.
+    # (§Perf iteration 2, REFUTED: Megatron-style column/row sharding of
+    # expert_ff over the data axis was predicted to cut the per-layer
+    # [E,C,f] partial-sum all-reduces ~10×; measured on the 671B train cell
+    # it made collectives WORSE — 200s → 247s — because the backward pass
+    # then all-gathers activations and re-reduces grads for the
+    # column-sharded weights.  Reverted; see EXPERIMENTS.md §Perf.)
+    s = {
+        "router": P((d, m.n_experts), ("embed", "experts"), init="small"),
+        "w_gate": P((m.n_experts, d, f), ("experts", "embed", "expert_ff")),
+        "w_up": P((m.n_experts, d, f), ("experts", "embed", "expert_ff")),
+        "w_down": P((m.n_experts, f, d), ("experts", "expert_ff", "embed")),
+    }
+    if m.n_shared:
+        fs = m.d_expert_ff * m.n_shared
+        s["ws_gate"] = P((d, fs), ("embed", "mlp"))
+        s["ws_up"] = P((d, fs), ("embed", "mlp"))
+        s["ws_down"] = P((fs, d), ("mlp", "embed"))
+    return s
+
+
+def _dispatch_group(cfg, p, x):
+    """Sort-based dispatch for ONE token group.  x [T, d] -> [T, d]."""
+    m = cfg.moe
+    T, d = x.shape
+    E, k = m.n_experts, m.top_k
+    C = max(int(T * k / E * m.capacity_factor), 1)
+    C = -(-C // 8) * 8  # pad capacity to a multiple of 8 (VPU lanes)
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # [T, E]
+    top_p, top_e = jax.lax.top_k(probs, k)                    # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)    # renormalize
+
+    flat_e = top_e.reshape(-1)                                # [T*k]
+    flat_p = top_p.reshape(-1)
+    tok = jnp.arange(T * k, dtype=jnp.int32) // k             # token of each slot
+
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    sorted_tok = tok[order]
+    sorted_p = flat_p[order]
+    # position of each sorted slot within its expert bucket
+    start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos = jnp.arange(T * k, dtype=jnp.int32) - start[sorted_e].astype(jnp.int32)
+    keep = pos < C
+    dst_c = jnp.where(keep, pos, C - 1)
+
+    # scatter tokens into expert buffers [E, C, d]
+    buf = jnp.zeros((E, C, d), x.dtype)
+    vals = x[sorted_tok] * keep[:, None].astype(x.dtype)
+    buf = buf.at[sorted_e, dst_c].add(vals, mode="drop")
+
+    # expert SwiGLU
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+    # gather back + combine weighted by router prob
+    y_slots = out_buf[sorted_e, dst_c] * (keep * sorted_p).astype(x.dtype)[:, None]
+    return jnp.zeros((T, d), x.dtype).at[sorted_tok].add(y_slots, mode="drop")
+
+
+def dispatch_groups(T: int, target: int = 16) -> int:
+    """Largest group count ≤ target dividing T (production shapes hit 16)."""
+    g = min(target, T)
+    while T % g:
+        g -= 1
+    return g
+
+
+@jax.named_scope("moe_apply")
+def moe_apply(cfg, p, x):
+    """x [T, d] -> [T, d] (callers flatten batch×seq).
+
+    GROUP-WISE dispatch (§Perf iteration 1 on the 671B train cell): the
+    token axis is split into groups aligned with the data-parallel
+    sharding, and each group sorts/scatters only its own tokens.  A global
+    dispatch makes every slot tensor [T_global·k, d] *replicated* (the
+    argsort permutation crosses data shards), which lowered to ~41 TB/dev
+    of all-reduce on deepseek train_4k; per-group dispatch keeps all
+    gather/scatter local to the shard and leaves only the expert einsums'
+    EP communication.
+    """
+    T, d = x.shape
+    G = dispatch_groups(T)
+    xg = x.reshape(G, T // G, d)
+    xg = shd(xg, "batch", None, None)
+    yg = jax.vmap(lambda t: _dispatch_group(cfg, p, t))(xg)
+    yg = shd(yg, "batch", None, None)
+    y = yg.reshape(T, d)
+
+    # shared (always-on) experts
+    m = cfg.moe
+    if m.n_shared:
+        g = x @ p["ws_gate"]
+        u = x @ p["ws_up"]
+        y = y + (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ p["ws_down"]
+    return y
+
+
+def moe_load_balance_loss(cfg, p, x):
+    """Auxiliary load-balancing loss (Switch-style f·P); reported as a
+    metric and optionally added to the training objective."""
+    m = cfg.moe
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_e = jax.lax.top_k(probs, m.top_k)[1]
+    ind = jax.nn.one_hot(top_e, m.n_experts, dtype=jnp.float32).sum(axis=1)
+    f = jnp.mean(ind, axis=0)          # fraction routed per expert
+    pmean = jnp.mean(probs, axis=0)    # mean router prob per expert
+    return m.n_experts * jnp.sum(f * pmean)

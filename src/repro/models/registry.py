@@ -1,0 +1,152 @@
+"""Model registry: one uniform API over all assigned architectures.
+
+``build(cfg)`` returns a ``ModelAPI`` whose members are pure functions —
+usable directly, under jit, or abstractly (dry-run via eval_shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+from . import encdec, lm
+from .layers import P, abstract_from_spec, count_params, init_from_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    specs: Any                                   # param spec tree (P leaves)
+    init: Callable                               # (key, dtype?) -> params
+    loss: Callable                               # (params, batch) -> (loss, metrics)
+    prefill: Callable                            # (params, batch, cache_len?) -> (logits, cache)
+    decode_step: Callable                        # (params, token, pos, cache) -> (logits, cache)
+    cache_spec: Callable                         # (batch, seq) -> spec tree
+    init_cache: Callable                         # (batch, seq, dtype) -> cache
+
+    def n_params(self) -> int:
+        return count_params(self.specs)
+
+    def n_active_params(self) -> int:
+        """Per-token active parameters (MoE: top_k + shared experts only)."""
+        cfg = self.cfg
+        if cfg.moe is None:
+            return self.n_params()
+        m = cfg.moe
+        leaves = jax.tree.leaves_with_path(
+            self.specs, is_leaf=lambda x: isinstance(x, P))
+        total, routed = 0, 0
+        for path, spec in leaves:
+            n = 1
+            for s in spec.shape:
+                n *= s
+            total += n
+            keys = "/".join(str(getattr(k, "key", k)) for k in path)
+            # routed expert tensors: stacked [*, E, d, f] under a "moe" node
+            if "moe" in keys and m.n_experts in spec.shape and len(spec.shape) >= 3:
+                routed += n
+        return total - routed + int(routed * m.top_k / m.n_experts)
+
+
+def build(cfg: ArchConfig) -> ModelAPI:
+    if cfg.enc_dec:
+        specs = encdec.encdec_specs(cfg)
+        return ModelAPI(
+            cfg=cfg,
+            specs=specs,
+            init=lambda key, dtype=None: init_from_spec(
+                specs, key, dtype or jnp.dtype(cfg.param_dtype)),
+            loss=lambda p, b: encdec.encdec_loss(cfg, p, b),
+            prefill=lambda p, b, cache_len=None: encdec.encdec_prefill(
+                cfg, p, b, cache_len),
+            decode_step=lambda p, t, pos, c: encdec.encdec_decode(cfg, p, t, pos, c),
+            cache_spec=lambda batch, seq: encdec.encdec_cache_spec(cfg, batch, seq),
+            init_cache=lambda batch, seq, dtype: encdec.encdec_init_cache(
+                cfg, batch, seq, dtype),
+        )
+    specs = lm.lm_specs(cfg)
+    return ModelAPI(
+        cfg=cfg,
+        specs=specs,
+        init=lambda key, dtype=None: init_from_spec(
+            specs, key, dtype or jnp.dtype(cfg.param_dtype)),
+        loss=lambda p, b: lm.lm_loss(cfg, p, b),
+        prefill=lambda p, b, cache_len=None: lm.lm_prefill(cfg, p, b, cache_len),
+        decode_step=lambda p, t, pos, c: lm.lm_decode(cfg, p, t, pos, c),
+        cache_spec=lambda batch, seq: lm.lm_cache_spec(cfg, batch, seq),
+        init_cache=lambda batch, seq, dtype: lm.lm_init_cache(cfg, batch, seq, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch input specs per workload shape (ShapeDtypeStruct factory)
+# ---------------------------------------------------------------------------
+def batch_spec(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Logical-axis specs for every model input of this workload cell."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind == "train":
+        out = {
+            "tokens": P((B, _text_len(cfg, S)), ("batch", "seq"), "zeros"),
+            "labels": P((B, _text_len(cfg, S)), ("batch", "seq"), "zeros"),
+        }
+        if cfg.frontend == "vision":
+            out["patches"] = P((B, cfg.n_frontend_tokens, d),
+                               ("batch", "seq", None), "zeros")
+        if cfg.enc_dec:
+            out["frames"] = P((B, cfg.n_frontend_tokens, d),
+                              ("batch", "seq", None), "zeros")
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": P((B, _text_len(cfg, S)), ("batch", "seq"), "zeros")}
+        if cfg.frontend == "vision":
+            out["patches"] = P((B, cfg.n_frontend_tokens, d),
+                               ("batch", "seq", None), "zeros")
+        if cfg.enc_dec:
+            out["frames"] = P((B, cfg.n_frontend_tokens, d),
+                              ("batch", "seq", None), "zeros")
+        return out
+    # decode: one token + position; the cache is specced separately
+    return {"token": P((B,), ("batch",), "zeros"),
+            "pos": P((), (), "zeros")}
+
+
+def _text_len(cfg: ArchConfig, seq_len: int) -> int:
+    """VLM cells split seq_len into patch-prefix + text."""
+    if cfg.frontend == "vision":
+        return seq_len - cfg.n_frontend_tokens
+    return seq_len
+
+
+def abstract_batch(cfg, shape, spec_to_sharding=None) -> dict:
+    specs = batch_spec(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        dtype = jnp.int32 if name in ("tokens", "labels", "token", "pos") \
+            else jnp.dtype(cfg.act_dtype)
+        sh = spec_to_sharding(s) if spec_to_sharding is not None else None
+        if sh is not None:
+            out[name] = jax.ShapeDtypeStruct(s.shape, dtype, sharding=sh)
+        else:
+            out[name] = jax.ShapeDtypeStruct(s.shape, dtype)
+    return out
+
+
+def real_batch(cfg, shape, key) -> dict:
+    """Materialized random batch (smoke tests; reduced configs only)."""
+    specs = batch_spec(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if name in ("tokens", "labels", "token"):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size, jnp.int32)
+        elif name == "pos":
+            out[name] = jnp.zeros((), jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(
+                jnp.dtype(cfg.act_dtype))
+    return out

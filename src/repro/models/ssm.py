@@ -1,0 +1,452 @@
+"""State-space / recurrent blocks: Mamba (jamba) and xLSTM (mLSTM + sLSTM).
+
+TPU adaptation notes (DESIGN.md §3/§5):
+  * Mamba's selective scan runs CHUNKWISE: a lax.scan over sequence chunks
+    carrying the SSM state, with a log-depth ``lax.associative_scan`` inside
+    each chunk.  Peak intermediates are O(B·chunk·d_inner·d_state) instead
+    of O(B·S·d_inner·d_state).
+  * mLSTM uses the stabilized chunkwise-parallel form: intra-chunk decay
+    matrices (MXU matmuls) + inter-chunk (C, n, m) state carry.  The
+    matrix-memory update C += i·v kᵀ is a *rank-1 factorizable update* —
+    the same structure as the paper's Sec. 5 (lock #2).
+  * sLSTM has true hidden-to-hidden recurrence (block-diagonal R) and is
+    inherently sequential: lax.scan over time.  This is the arch's nature,
+    not an implementation limit.
+
+Each block kind provides: ``*_specs``, ``*_forward`` (full sequence,
+returns final state), ``*_decode`` (one step), ``*_state_spec``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, rms_norm, shd
+
+NEG_INF = -1e30
+
+
+def _causal_conv1d(x, w, b):
+    """Depthwise causal conv: x [B,S,C], w [K,C], b [C]."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return out + b
+
+
+def _conv1d_step(x_new, conv_state, w, b):
+    """x_new [B,C]; conv_state [B,K-1,C] (previous inputs, oldest first)."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:]
+
+
+# ===========================================================================
+# Mamba (S6)
+# ===========================================================================
+def mamba_dims(cfg):
+    di = cfg.ssm.expand * cfg.d_model
+    dt_rank = -(-cfg.d_model // 16)
+    return di, dt_rank, cfg.ssm.d_state
+
+
+def mamba_specs(cfg) -> dict:
+    d = cfg.d_model
+    di, dt_rank, N = mamba_dims(cfg)
+    K = cfg.ssm.d_conv
+    return {
+        "in_proj": P((d, 2 * di), ("embed", "inner")),
+        "conv_w": P((K, di), (None, "inner")),
+        "conv_b": P((di,), ("inner",), init="zeros"),
+        "x_proj": P((di, dt_rank + 2 * N), ("inner", None)),
+        "dt_w": P((dt_rank, di), (None, "inner")),
+        "dt_b": P((di,), ("inner",), init="ones"),
+        "A_log": P((di, N), ("inner", None), init="ones"),
+        "D": P((di,), ("inner",), init="ones"),
+        "out_proj": P((di, d), ("inner", "embed")),
+    }
+
+
+def _mamba_scan(a, b, Cp, h0, chunk: int):
+    """h_t = a_t·h_{t-1} + b_t; emits y_t = C_t·h_t per chunk so the full
+    [B,S,di,N] state tensor is never materialized (16× smaller residuals).
+
+    a/b [B,S,di,N]; Cp [B,S,N]; h0 [B,di,N].  Returns (h_last, y [B,S,di]).
+    """
+    B, S, di, N = a.shape
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+    a_c = a.reshape(B, nc, L, di, N).transpose(1, 0, 2, 3, 4)
+    b_c = b.reshape(B, nc, L, di, N).transpose(1, 0, 2, 3, 4)
+    C_c = Cp.reshape(B, nc, L, N).transpose(1, 0, 2, 3)
+
+    def combine(c1, c2):
+        return c2[0] * c1[0], c2[0] * c1[1] + c2[1]
+
+    def outer(h, xs):
+        ac, bc, cc = xs  # [B,L,di,N], [B,L,N]
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = aa * h[:, None] + bb
+        y = jnp.einsum("bldn,bln->bld", hs, cc)
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(outer, h0, (a_c, b_c, C_c))
+    return h_last, ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+
+
+@jax.named_scope("mamba")
+def mamba_forward(cfg, p, x, state=None):
+    """x [B,S,d] -> (y [B,S,d], state)."""
+    B, S, d = x.shape
+    di, dt_rank, N = mamba_dims(cfg)
+    if state is None:
+        state = mamba_init_state(cfg, B, x.dtype)
+    xz = x @ p["in_proj"]
+    xm, z = xz[..., :di], xz[..., di:]
+    xm = shd(xm, "batch", "seq", "inner_act")
+    # causal depthwise conv (prepend carried conv state)
+    K = cfg.ssm.d_conv
+    xm_ext = jnp.concatenate([state["conv"].astype(xm.dtype), xm], axis=1)
+    xm_c = _causal_conv1d(xm_ext, p["conv_w"], p["conv_b"])[:, K - 1:]
+    new_conv = xm_ext[:, -(K - 1):] if K > 1 else state["conv"]
+    xm_c = jax.nn.silu(xm_c.astype(jnp.float32)).astype(x.dtype)
+
+    dbc = xm_c @ p["x_proj"]
+    dt_in, Bp, Cp = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus((dt_in @ p["dt_w"]).astype(jnp.float32)
+                         + p["dt_b"].astype(jnp.float32))        # [B,S,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [di,N]
+    a = jnp.exp(dt[..., None] * A)                               # [B,S,di,N]
+    bterm = (dt * xm_c.astype(jnp.float32))[..., None] * Bp.astype(jnp.float32)[:, :, None, :]
+    h_last, y = _mamba_scan(a, bterm, Cp.astype(jnp.float32), state["h"],
+                            cfg.ssm.chunk)
+    y = y + p["D"].astype(jnp.float32) * xm_c.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return out, {"h": h_last, "conv": new_conv.astype(state["conv"].dtype)}
+
+
+def mamba_decode(cfg, p, x, state):
+    """x [B,d] one step."""
+    di, dt_rank, N = mamba_dims(cfg)
+    xz = x @ p["in_proj"]
+    xm, z = xz[..., :di], xz[..., di:]
+    xm_c, new_conv = _conv1d_step(xm, state["conv"].astype(xm.dtype),
+                                  p["conv_w"], p["conv_b"])
+    xm_c = jax.nn.silu(xm_c.astype(jnp.float32)).astype(x.dtype)
+    dbc = xm_c @ p["x_proj"]
+    dt_in, Bp, Cp = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus((dt_in @ p["dt_w"]).astype(jnp.float32)
+                         + p["dt_b"].astype(jnp.float32))        # [B,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A)                               # [B,di,N]
+    b = (dt * xm_c.astype(jnp.float32))[..., None] * Bp.astype(jnp.float32)[:, None, :]
+    h = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Cp.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * xm_c.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"], {"h": h, "conv": new_conv}
+
+
+def mamba_init_state(cfg, batch, dtype):
+    di, _, N = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype),
+    }
+
+
+def mamba_state_spec(cfg, batch):
+    di, _, N = mamba_dims(cfg)
+    return {
+        "h": P((batch, di, N), ("kv_batch", "inner", None)),
+        "conv": P((batch, cfg.ssm.d_conv - 1, di), ("kv_batch", None, "inner")),
+    }
+
+
+# ===========================================================================
+# mLSTM (xLSTM) — matrix memory with exponential gating
+# ===========================================================================
+def mlstm_dims(cfg):
+    di = 2 * cfg.d_model
+    H = cfg.n_heads
+    dh = di // H
+    return di, H, dh
+
+
+def mlstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    di, H, dh = mlstm_dims(cfg)
+    K = 4  # short conv on the q/k path (xLSTM block)
+    return {
+        "norm": P((d,), ("embed",), init="ones"),
+        "w_up": P((d, 2 * di), ("embed", "inner")),
+        "conv_w": P((K, di), (None, "inner")),
+        "conv_b": P((di,), ("inner",), init="zeros"),
+        "wq": P((di, di), ("inner", "inner2")),
+        "wk": P((di, di), ("inner", "inner2")),
+        "wv": P((di, di), ("inner", "inner2")),
+        "w_i": P((di, H), ("inner", "heads"), init="small"),
+        "b_i": P((H,), ("heads",), init="zeros"),
+        "w_f": P((di, H), ("inner", "heads"), init="small"),
+        "b_f": P((H,), ("heads",), init="ones"),
+        "gn": P((di,), ("inner",), init="ones"),
+        "w_down": P((di, d), ("inner", "embed")),
+    }
+
+
+def _mlstm_chunk(q, k, v, logi, logf, state, eps=1e-6):
+    """One chunk of stabilized chunkwise mLSTM.
+
+    q/k/v [B,H,L,dh]; logi/logf [B,H,L]; state (C [B,H,dh,dh], n [B,H,dh],
+    m [B,H]).  Returns (h [B,H,L,dh], new_state).
+    """
+    B, H, L, dh = q.shape
+    C0, n0, m0 = state
+    F = jnp.cumsum(logf, axis=-1)                     # [B,H,L] inclusive
+    # decay matrix D[t,j] = F_t - F_j + logi_j for j<=t
+    Dm = F[..., :, None] - F[..., None, :] + logi[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    Dm = jnp.where(tri, Dm, NEG_INF)
+    # stabilizer: max over intra contributions and the carried state
+    m_intra = jnp.max(Dm, axis=-1)                    # [B,H,L]
+    m_t = jnp.maximum(m_intra, F + m0[..., None])     # [B,H,L]
+    d_intra = jnp.exp(Dm - m_t[..., None])            # [B,H,L,L]
+    d_inter = jnp.exp(F + m0[..., None] - m_t)        # [B,H,L]
+
+    qk = jnp.einsum("bhld,bhjd->bhlj", q, k) / (dh ** 0.5)
+    w = qk * d_intra
+    num = jnp.einsum("bhlj,bhjd->bhld", w, v)
+    num = num + d_inter[..., None] * jnp.einsum("bhld,bhde->bhle", q, C0)
+    # denominator: n_t · q_t with the same stabilization
+    kq = jnp.sum(w, axis=-1)
+    nq0 = d_inter * jnp.einsum("bhd,bhld->bhl", n0, q)
+    den = kq + nq0
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # chunk-end state
+    mL = jnp.maximum(F[..., -1] + m0, jnp.max(F[..., -1:] - F + logi, axis=-1))
+    scale_old = jnp.exp(F[..., -1] + m0 - mL)         # [B,H]
+    w_j = jnp.exp(F[..., -1:] - F + logi - mL[..., None])  # [B,H,L]
+    C_new = scale_old[..., None, None] * C0 + jnp.einsum(
+        "bhl,bhld,bhle->bhde", w_j, k / (dh ** 0.5), v)
+    n_new = scale_old[..., None] * n0 + jnp.einsum("bhl,bhld->bhd", w_j, k / (dh ** 0.5))
+    return h, (C_new, n_new, mL)
+
+
+def mlstm_cell(q, k, v, logi, logf, state, chunk: int):
+    """Full-sequence chunkwise mLSTM.  q/k/v [B,H,S,dh]."""
+    B, H, S, dh = q.shape
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+
+    def to_chunks(x):
+        return x.reshape(B, H, nc, L, *x.shape[3:]).transpose(2, 0, 1, 3, *range(4, x.ndim + 1))
+
+    def outer(st, xs):
+        qc, kc, vc, ic, fc = xs
+        h, st = _mlstm_chunk(qc, kc, vc, ic, fc, st)
+        return st, h
+
+    xs = (to_chunks(q), to_chunks(k), to_chunks(v), to_chunks(logi), to_chunks(logf))
+    state, hs = jax.lax.scan(outer, state, xs)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)
+    return h, state
+
+
+def mlstm_cell_sequential(q, k, v, logi, logf, state):
+    """Step-by-step oracle for tests (identical math, O(S) scan)."""
+    B, H, S, dh = q.shape
+
+    def step(st, xs):
+        qt, kt, vt, it, ft = xs
+        C, n, m = st
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        kn = kt / (dh ** 0.5)
+        C = fp[..., None, None] * C + ip[..., None, None] * kn[..., :, None] * vt[..., None, :]
+        n = fp[..., None] * n + ip[..., None] * kn
+        num = jnp.einsum("bhde,bhd->bhe", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3), v.transpose(2, 0, 1, 3),
+          logi.transpose(2, 0, 1), logf.transpose(2, 0, 1))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 2, 0, 3), state
+
+
+@jax.named_scope("mlstm")
+def mlstm_forward(cfg, p, x, state=None):
+    B, S, d = x.shape
+    di, H, dh = mlstm_dims(cfg)
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+    xi = rms_norm(x, p["norm"], cfg.rms_eps)
+    up = xi @ p["w_up"]
+    xm, z = up[..., :di], up[..., di:]
+    K = p["conv_w"].shape[0]
+    xm_ext = jnp.concatenate([state["conv"].astype(xm.dtype), xm], axis=1)
+    xc = _causal_conv1d(xm_ext, p["conv_w"], p["conv_b"])[:, K - 1:]
+    new_conv = xm_ext[:, -(K - 1):]
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q = (xc @ p["wq"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = (xc @ p["wk"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    v = (xm @ p["wv"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    logi = (xc @ p["w_i"] + p["b_i"]).astype(jnp.float32).transpose(0, 2, 1)
+    logf = jax.nn.log_sigmoid(
+        (xc @ p["w_f"] + p["b_f"]).astype(jnp.float32)).transpose(0, 2, 1)
+    cell_state = (state["C"], state["n"], state["m"])
+    h, cell_state = mlstm_cell(q.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), logi, logf, cell_state,
+                               cfg.ssm.chunk if cfg.ssm else 256)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, di)
+    h = rms_norm(h.astype(x.dtype), p["gn"], cfg.rms_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = h @ p["w_down"]
+    return out, {"C": cell_state[0], "n": cell_state[1], "m": cell_state[2],
+                 "conv": new_conv.astype(state["conv"].dtype)}
+
+
+def mlstm_decode(cfg, p, x, state):
+    di, H, dh = mlstm_dims(cfg)
+    B = x.shape[0]
+    xi = rms_norm(x, p["norm"], cfg.rms_eps)
+    up = xi @ p["w_up"]
+    xm, z = up[..., :di], up[..., di:]
+    xc, new_conv = _conv1d_step(xm, state["conv"].astype(xm.dtype),
+                                p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q = (xc @ p["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = (xc @ p["wk"]).reshape(B, H, dh).astype(jnp.float32) / (dh ** 0.5)
+    v = (xm @ p["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    logi = (xc @ p["w_i"] + p["b_i"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid((xc @ p["w_f"] + p["b_f"]).astype(jnp.float32))
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(logf + m, logi)
+    ip = jnp.exp(logi - m_new)
+    fp = jnp.exp(logf + m - m_new)
+    # rank-1 factorizable update (paper Sec. 5): C += i · k vᵀ
+    C = fp[..., None, None] * C + ip[..., None, None] * k[..., :, None] * v[..., None, :]
+    n = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhde,bhd->bhe", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, di)
+    h = rms_norm(h.astype(x.dtype), p["gn"], cfg.rms_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return h @ p["w_down"], {"C": C, "n": n, "m": m_new, "conv": new_conv}
+
+
+def mlstm_init_state(cfg, batch):
+    di, H, dh = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), jnp.float32),
+    }
+
+
+def mlstm_state_spec(cfg, batch):
+    di, H, dh = mlstm_dims(cfg)
+    return {
+        "C": P((batch, H, dh, dh), ("kv_batch", None, "state_dim", None)),
+        "n": P((batch, H, dh), ("kv_batch", None, "state_dim")),
+        "m": P((batch, H), ("kv_batch", None)),
+        "conv": P((batch, 3, di), ("kv_batch", None, "inner")),
+    }
+
+
+# ===========================================================================
+# sLSTM — scalar memory, true recurrence (sequential)
+# ===========================================================================
+def slstm_dims(cfg):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return H, dh
+
+
+def slstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    H, dh = slstm_dims(cfg)
+    return {
+        "norm": P((d,), ("embed",), init="ones"),
+        "W": P((d, 4 * d), ("embed", "inner")),
+        "b": P((4 * d,), ("inner",), init="zeros"),
+        "R": P((H, dh, 4 * dh), (None, "state_dim", None), init="small"),
+        "gn": P((d,), ("embed",), init="ones"),
+        "w_out": P((d, d), ("embed", "embed2")),
+    }
+
+
+def _slstm_step(cfg, p, st, xw):
+    """xw [B, 4*d] (input projection of this step)."""
+    H, dh = slstm_dims(cfg)
+    c, n, h, m = st
+    B = xw.shape[0]
+    rec = jnp.einsum("bhd,hde->bhe", h, p["R"])           # [B,H,4*dh]
+    gates = xw.reshape(B, H, 4 * dh) + rec
+    zr, ir, fr, orr = jnp.split(gates, 4, axis=-1)        # [B,H,dh] each
+    z = jnp.tanh(zr.astype(jnp.float32))
+    o = jax.nn.sigmoid(orr.astype(jnp.float32))
+    logi = ir.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fr.astype(jnp.float32))
+    m_new = jnp.maximum(logf + m, logi)
+    ip = jnp.exp(logi - m_new)
+    fp = jnp.exp(logf + m - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new, m_new)
+
+
+@jax.named_scope("slstm")
+def slstm_forward(cfg, p, x, state=None):
+    B, S, d = x.shape
+    H, dh = slstm_dims(cfg)
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    xi = rms_norm(x, p["norm"], cfg.rms_eps)
+    xw = xi @ p["W"] + p["b"]                              # [B,S,4d]
+
+    def step(st, xt):
+        st = _slstm_step(cfg, p, st, xt)
+        return st, st[2]
+
+    st0 = (state["c"], state["n"], state["h"], state["m"])
+    st, hs = jax.lax.scan(step, st0, xw.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d)          # [B,S,H,dh]->[B,S,d]
+    h = rms_norm(h.astype(x.dtype), p["gn"], cfg.rms_eps)
+    out = h @ p["w_out"]
+    return out, {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+
+
+def slstm_decode(cfg, p, x, state):
+    xi = rms_norm(x, p["norm"], cfg.rms_eps)
+    xw = xi @ p["W"] + p["b"]
+    st = _slstm_step(cfg, p, (state["c"], state["n"], state["h"], state["m"]), xw)
+    B = x.shape[0]
+    h = st[2].reshape(B, -1)
+    h = rms_norm(h.astype(x.dtype), p["gn"], cfg.rms_eps)
+    return h @ p["w_out"], {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+
+
+def slstm_init_state(cfg, batch):
+    H, dh = slstm_dims(cfg)
+    z = lambda: jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}
+
+
+def slstm_state_spec(cfg, batch):
+    H, dh = slstm_dims(cfg)
+    mk = lambda: P((batch, H, dh), ("kv_batch", None, "state_dim"))
+    return {"c": mk(), "n": mk(), "h": mk(), "m": mk()}

@@ -1,0 +1,13 @@
+from .optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    adafactor,
+    sgd,
+    global_norm,
+    clip_by_global_norm,
+)
+from .schedules import (  # noqa: F401
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+)

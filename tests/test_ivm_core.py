@@ -1,0 +1,282 @@
+"""IVM ≡ recomputation — the paper's core correctness claim, across
+strategies (F-IVM / DBT / 1-IVM / reeval), rings, batched COO and
+factorized updates, and cyclic queries with indicator projections."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (COOUpdate, DegreeMRing, DenseRelation,
+                        FactorizedUpdate, IVMEngine, Query, add_indicators,
+                        build_view_tree, chain, evaluate_view, heuristic_order,
+                        is_acyclic, sum_ring)
+
+DOMS = dict(A=4, B=5, C=3, D=6, E=4)
+
+
+def example_query(ring=None):
+    ring = ring or sum_ring()
+    return Query(
+        relations={"R": ("A", "B"), "S": ("A", "C", "E"), "T": ("C", "D")},
+        free_vars=("A", "C"),
+        ring=ring,
+        domains=DOMS,
+        lifts={"B": ("value",), "D": ("value",), "E": ("value",)},
+    )
+
+
+def example_vo():
+    return chain(["A", "C"], {"A": [["B"]], "C": [["D"], ["E"]]})
+
+
+def random_db(rng, ring):
+    def rel(schema):
+        shape = tuple(DOMS[v] for v in schema)
+        mult = rng.integers(0, 3, size=shape).astype(np.float32)
+        return DenseRelation(tuple(schema), ring, {"v": jnp.asarray(mult)})
+
+    return {"R": rel("AB"), "S": rel("ACE"), "T": rel("CD")}
+
+
+def oracle(state):
+    return np.einsum("ab,ace,cd,b,d,e->ac", state["R"], state["S"], state["T"],
+                     np.arange(DOMS["B"], dtype=np.float32),
+                     np.arange(DOMS["D"], dtype=np.float32),
+                     np.arange(DOMS["E"], dtype=np.float32))
+
+
+def test_static_evaluation_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    ring = sum_ring()
+    db = random_db(rng, ring)
+    q = example_query(ring)
+    tree = build_view_tree(q, example_vo())
+    res = evaluate_view(tree, db, q)
+    state = {k: np.asarray(v.payload["v"]) for k, v in db.items()}
+    np.testing.assert_allclose(
+        np.asarray(res.transpose(("A", "C")).payload["v"]), oracle(state),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("strategy", ["fivm", "dbt", "fivm_1", "reeval"])
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_ivm_equals_recompute(strategy, seed):
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+    db = random_db(rng, ring)
+    q = example_query(ring)
+    eng = IVMEngine.build(q, db, var_order=example_vo(), strategy=strategy)
+    state = {k: np.asarray(v.payload["v"]).copy() for k, v in db.items()}
+    for step in range(5):
+        rel = ["R", "S", "T"][int(rng.integers(0, 3))]
+        sch = q.relations[rel]
+        B = int(rng.integers(1, 8))
+        keys = np.stack([rng.integers(0, DOMS[v], size=B) for v in sch],
+                        axis=1).astype(np.int32)
+        vals = rng.integers(-2, 3, size=B).astype(np.float32)
+        eng.apply_update(rel, COOUpdate(sch, jnp.asarray(keys),
+                                        {"v": jnp.asarray(vals)}))
+        np.add.at(state[rel], tuple(keys[:, i] for i in range(len(sch))), vals)
+    got = np.asarray(eng.result().transpose(("A", "C")).payload["v"])
+    np.testing.assert_allclose(got, oracle(state), rtol=1e-4, atol=1e-4)
+
+
+def test_heuristic_order_also_correct():
+    rng = np.random.default_rng(3)
+    ring = sum_ring()
+    db = random_db(rng, ring)
+    q = example_query(ring)
+    eng = IVMEngine.build(q, db, var_order=heuristic_order(q), strategy="fivm")
+    state = {k: np.asarray(v.payload["v"]).copy() for k, v in db.items()}
+    for rel in ("S", "R", "T"):
+        sch = q.relations[rel]
+        keys = np.stack([rng.integers(0, DOMS[v], size=4) for v in sch],
+                        axis=1).astype(np.int32)
+        vals = rng.integers(-1, 2, size=4).astype(np.float32)
+        eng.apply_update(rel, COOUpdate(sch, jnp.asarray(keys),
+                                        {"v": jnp.asarray(vals)}))
+        np.add.at(state[rel], tuple(keys[:, i] for i in range(len(sch))), vals)
+    got = np.asarray(eng.result().transpose(("A", "C")).payload["v"])
+    np.testing.assert_allclose(got, oracle(state), rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_factorized_updates_equal_dense(seed):
+    """Sec. 5: a product-decomposed δS propagates identically to its
+    densified form."""
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+    db = random_db(rng, ring)
+    q = example_query(ring)
+    eng = IVMEngine.build(q, db, var_order=example_vo(), strategy="fivm")
+    state = {k: np.asarray(v.payload["v"]).copy() for k, v in db.items()}
+    for _ in range(3):
+        fa = rng.integers(0, 2, size=DOMS["A"]).astype(np.float32)
+        fc = rng.integers(0, 2, size=DOMS["C"]).astype(np.float32)
+        fe = rng.integers(-1, 2, size=DOMS["E"]).astype(np.float32)
+        fu = FactorizedUpdate(("A", "C", "E"), (
+            DenseRelation(("A",), ring, {"v": jnp.asarray(fa)}),
+            DenseRelation(("C",), ring, {"v": jnp.asarray(fc)}),
+            DenseRelation(("E",), ring, {"v": jnp.asarray(fe)}),
+        ))
+        eng.apply_update("S", fu)
+        state["S"] += np.einsum("a,c,e->ace", fa, fc, fe)
+    got = np.asarray(eng.result().transpose(("A", "C")).payload["v"])
+    np.testing.assert_allclose(got, oracle(state), rtol=1e-4, atol=1e-4)
+
+
+def test_materialization_counts():
+    """μ (Fig. 5): F-IVM materializes fewer views than fully-recursive DBT."""
+    rng = np.random.default_rng(0)
+    ring = sum_ring()
+    db = random_db(rng, ring)
+    q = example_query(ring)
+    e_fivm = IVMEngine.build(q, db, var_order=example_vo(), strategy="fivm")
+    e_dbt = IVMEngine.build(q, db, var_order=example_vo(), strategy="dbt")
+    e_first = IVMEngine.build(q, db, var_order=example_vo(), strategy="fivm_1")
+    assert e_fivm.num_materialized() < e_dbt.num_materialized()
+    assert e_first.num_materialized() <= e_fivm.num_materialized()
+    # restricted update workload needs fewer views (ONE scenario, Sec. 8.4)
+    e_one = IVMEngine.build(q, db, var_order=example_vo(), strategy="fivm",
+                            updatable=("S",))
+    assert e_one.num_materialized() <= e_fivm.num_materialized()
+
+
+def test_single_tuple_update_to_S_touches_o1_keys():
+    """Complexity guard (Example 1.1): updates to S propagate through
+    constant-size deltas when A, C, E are all bound by the update."""
+    from repro.core.delta import propagate_coo
+
+    rng = np.random.default_rng(0)
+    ring = sum_ring()
+    db = random_db(rng, ring)
+    q = example_query(ring)
+    eng = IVMEngine.build(q, db, var_order=example_vo(), strategy="fivm")
+    keys = jnp.asarray([[1, 2, 3]], jnp.int32)
+    upd = COOUpdate(("A", "C", "E"), keys, {"v": jnp.asarray([1.0])})
+    res = propagate_coo(eng.tree, eng.views, q, "S", upd, indicators={})
+    for name, delta in res.deltas.items():
+        assert delta.batch == 1
+        assert not delta.dense_schema, (
+            f"delta at {name} should stay COO-only for updates to S")
+
+
+def test_degree_m_ivm_matches_design_matrix():
+    """Cofactor triple == MᵀM statistics of the materialized join, after
+    a stream of inserts and deletes (Example 7.3)."""
+    rng = np.random.default_rng(7)
+    ring = DegreeMRing(5)
+    base = random_db(rng, sum_ring())
+    db = {
+        name: DenseRelation(rel.schema, ring,
+                            {**ring.ones(rel.payload["v"].shape),
+                             "c": rel.payload["v"]})
+        for name, rel in base.items()
+    }
+    q = Query(relations={"R": ("A", "B"), "S": ("A", "C", "E"), "T": ("C", "D")},
+              free_vars=(), ring=ring, domains=DOMS,
+              lifts={v: ("degree", i) for i, v in enumerate("ABCDE")})
+    eng = IVMEngine.build(q, db, var_order=example_vo(), strategy="fivm")
+    state = {k: np.asarray(v.payload["c"]).copy() for k, v in db.items()}
+    for step in range(4):
+        rel = ["S", "R", "T", "S"][step]
+        sch = q.relations[rel]
+        keys = np.stack([rng.integers(0, DOMS[v], size=5) for v in sch],
+                        axis=1).astype(np.int32)
+        vals = rng.integers(-1, 2, size=5).astype(np.float32)
+        payload = {**ring.zeros((5,)), "c": jnp.asarray(vals)}
+        eng.apply_update(rel, COOUpdate(sch, jnp.asarray(keys), payload))
+        np.add.at(state[rel], tuple(keys[:, i] for i in range(len(sch))), vals)
+    Ms, ws = [], []
+    for a in range(DOMS["A"]):
+        for b in range(DOMS["B"]):
+            for c in range(DOMS["C"]):
+                for d in range(DOMS["D"]):
+                    for e in range(DOMS["E"]):
+                        mult = state["R"][a, b] * state["S"][a, c, e] * state["T"][c, d]
+                        if mult:
+                            Ms.append([a, b, c, d, e])
+                            ws.append(mult)
+    Ms = np.asarray(Ms, np.float64).reshape(-1, 5)
+    ws = np.asarray(ws, np.float64)
+    res = eng.result()
+    np.testing.assert_allclose(float(res.payload["c"]), ws.sum())
+    np.testing.assert_allclose(np.asarray(res.payload["s"]),
+                               (Ms * ws[:, None]).sum(0), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(res.payload["Q"]),
+                               (Ms * ws[:, None]).T @ Ms, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Cyclic queries + indicator projections (Sec. 6)
+# ---------------------------------------------------------------------------
+def triangle_fixture(rng, n=6):
+    ring = sum_ring()
+    doms = dict(A=n, B=n, C=n)
+    q = Query(relations={"R": ("A", "B"), "S": ("B", "C"), "T": ("C", "A")},
+              free_vars=(), ring=ring, domains=doms, lifts={})
+
+    def mk(schema):
+        shape = tuple(doms[v] for v in schema)
+        return DenseRelation(tuple(schema), ring, {"v": jnp.asarray(
+            rng.integers(0, 2, size=shape).astype(np.float32))})
+
+    db = {"R": mk("AB"), "S": mk("BC"), "T": mk("CA")}
+    return q, db, doms
+
+
+def test_gyo_detects_cycles():
+    assert not is_acyclic([frozenset("AB"), frozenset("BC"), frozenset("CA")])
+    assert is_acyclic([frozenset("AB"), frozenset("ACE"), frozenset("CD")])
+
+
+def test_triangle_gets_indicator_and_stays_correct():
+    rng = np.random.default_rng(5)
+    q, db, doms = triangle_fixture(rng)
+    vo = chain(["A", "B", "C"])
+    tree = add_indicators(build_view_tree(q, vo, fuse_chains=False), q)
+    assert any(n.indicator is not None for n in tree.walk())
+    res = evaluate_view(tree, db, q)
+    state = {k: np.asarray(v.payload["v"]) for k, v in db.items()}
+    np.testing.assert_allclose(float(np.asarray(res.payload["v"])),
+                               np.einsum("ab,bc,ca->", state["R"], state["S"],
+                                         state["T"]))
+
+
+@pytest.mark.parametrize("strategy", ["fivm", "dbt"])
+def test_triangle_ivm_with_indicators(strategy):
+    rng = np.random.default_rng(11)
+    q, db, doms = triangle_fixture(rng)
+    n = doms["A"]
+    eng = IVMEngine.build(q, db, var_order=chain(["A", "B", "C"]),
+                          strategy=strategy, use_indicators=True,
+                          fuse_chains=False)
+    st_ = {k: np.asarray(v.payload["v"]).copy() for k, v in db.items()}
+    for step in range(9):
+        rel = ["R", "S", "T"][step % 3]
+        sch = q.relations[rel]
+        flat = rng.choice(n * n, size=4, replace=False)
+        keys = np.stack([flat // n, flat % n], axis=1).astype(np.int32)
+        vals = rng.integers(-1, 2, size=4).astype(np.float32)
+        eng.apply_update(rel, COOUpdate(sch, jnp.asarray(keys),
+                                        {"v": jnp.asarray(vals)}))
+        np.add.at(st_[rel], (keys[:, 0], keys[:, 1]), vals)
+        got = float(np.asarray(eng.result().payload["v"]))
+        exp = float(np.einsum("ab,bc,ca->", st_["R"], st_["S"], st_["T"]))
+        assert np.allclose(got, exp), (strategy, step, got, exp)
+
+
+def test_indicator_bounds_view_size():
+    """Sec. 6 / Example 6.3: the indicator-projected view at C is bounded
+    by the join of S,T restricted to R's active domain."""
+    rng = np.random.default_rng(2)
+    q, db, _ = triangle_fixture(rng, n=8)
+    vo = chain(["A", "B", "C"])
+    plain = build_view_tree(q, vo, fuse_chains=False)
+    with_ind = add_indicators(plain, q)
+    res_plain = evaluate_view(plain, db, q)
+    res_ind = evaluate_view(with_ind, db, q)
+    np.testing.assert_allclose(np.asarray(res_plain.payload["v"]),
+                               np.asarray(res_ind.payload["v"]))

@@ -1,0 +1,112 @@
+"""Pallas kernel sweeps: shapes × dtypes, interpret mode vs ref.py oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("B,m", [(1, 1), (7, 3), (64, 8), (100, 7), (256, 43),
+                                 (33, 130)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_cofactor_update_sweep(B, m, dtype):
+    x = RNG.normal(size=(B, m)).astype(dtype)
+    w = RNG.normal(size=(B,)).astype(dtype)
+    c, s, Q = ops.cofactor_update(x, w, backend="interpret")
+    cr, sr, Qr = ref.cofactor_update_ref(x, w)
+    np.testing.assert_allclose(np.asarray(c)[0], cr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), sr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Q), Qr, rtol=1e-3, atol=1e-3)
+
+
+def test_cofactor_matches_design_matrix_semantics():
+    x = RNG.normal(size=(50, 5)).astype(np.float32)
+    w = np.ones(50, np.float32)
+    c, s, Q = ops.cofactor_update(x, w, backend="interpret")
+    np.testing.assert_allclose(np.asarray(Q), x.T @ x, rtol=1e-4, atol=1e-4)
+    # deletions: negative weights subtract
+    c2, s2, Q2 = ops.cofactor_update(x, -w, backend="interpret")
+    np.testing.assert_allclose(np.asarray(Q2), -(x.T @ x), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("K,m", [(1, 1), (4, 5), (16, 16), (9, 33), (32, 130)])
+def test_ring_mul_sweep(K, m):
+    mk = lambda *s: RNG.normal(size=s).astype(np.float32)
+    args = (mk(K), mk(K, m), mk(K, m, m), mk(K), mk(K, m), mk(K, m, m))
+    out = ops.ring_mul(*args, backend="interpret")
+    exp = ref.ring_mul_ref(*args)
+    for a, b in zip(out, exp):
+        np.testing.assert_allclose(np.asarray(a), b, rtol=1e-3, atol=1e-3)
+
+
+def test_ring_mul_is_degree_m_ring_product():
+    """Kernel == the Def. 7.2 ring product, elementwise over keys."""
+    from repro.core import DegreeMRing
+    ring = DegreeMRing(6)
+    mk = lambda *s: jnp.asarray(RNG.normal(size=s).astype(np.float32))
+    a = {"c": mk(8), "s": mk(8, 6), "Q": mk(8, 6, 6)}
+    b = {"c": mk(8), "s": mk(8, 6), "Q": mk(8, 6, 6)}
+    c, s, Q = ops.ring_mul(a["c"], a["s"], a["Q"], b["c"], b["s"], b["Q"],
+                           backend="interpret")
+    exp = ring.mul(a, b)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(exp["c"]), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(exp["s"]), rtol=1e-3,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Q), np.asarray(exp["Q"]), rtol=1e-3,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("B,d,S", [(10, 4, 3), (100, 16, 7), (64, 130, 5),
+                                   (513, 8, 11)])
+def test_segment_ring_sum_sweep(B, d, S):
+    v = RNG.normal(size=(B, d)).astype(np.float32)
+    ids = RNG.integers(0, S, size=(B,)).astype(np.int32)
+    out = ops.segment_ring_sum(v, ids, S, backend="interpret")
+    exp = ref.segment_ring_sum_ref(v, ids, S)
+    np.testing.assert_allclose(np.asarray(out), exp, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,k", [(8, 8), (32, 16), (130, 70)])
+def test_matvec_and_rank1_chain(n, k):
+    A1 = RNG.normal(size=(n, k)).astype(np.float32)
+    x = RNG.normal(size=(k,)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.matvec(A1, x, backend="interpret")),
+        ref.matvec_ref(A1, x), rtol=1e-4, atol=1e-4)
+    A1s = RNG.normal(size=(n, n)).astype(np.float32)
+    A3 = RNG.normal(size=(n, n)).astype(np.float32)
+    u = RNG.normal(size=(n,)).astype(np.float32)
+    v = RNG.normal(size=(n,)).astype(np.float32)
+    V = RNG.normal(size=(n, n)).astype(np.float32)
+    got = ops.rank1_chain_update(A1s, u, v, A3, V, backend="interpret")
+    exp = ref.rank1_chain_ref(A1s, u, v, A3, V)
+    np.testing.assert_allclose(np.asarray(got), exp, rtol=1e-3, atol=1e-3)
+    # semantic check: V' = V + (A1 u)(vᵀ A3)
+    np.testing.assert_allclose(exp, V + np.outer(A1s @ u, v @ A3),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,Hkv,T,D", [(1, 2, 1, 16, 8), (2, 4, 2, 64, 16),
+                                         (2, 8, 8, 128, 32), (1, 4, 1, 96, 64)])
+def test_flash_attention_sweep(B, H, Hkv, T, D):
+    q = RNG.normal(size=(B, H, T, D)).astype(np.float32)
+    k = RNG.normal(size=(B, Hkv, T, D)).astype(np.float32)
+    v = RNG.normal(size=(B, Hkv, T, D)).astype(np.float32)
+    out = ops.flash_attention(q, k, v, causal=True, backend="interpret")
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_flash_attention_vs_model_jnp_path():
+    """The Pallas kernel and the model's chunked-jnp path agree."""
+    from repro.models.attention import flash_attention_jnp
+    q = RNG.normal(size=(2, 4, 64, 16)).astype(np.float32)
+    k = RNG.normal(size=(2, 2, 64, 16)).astype(np.float32)
+    v = RNG.normal(size=(2, 2, 64, 16)).astype(np.float32)
+    a = ops.flash_attention(q, k, v, causal=True, backend="interpret")
+    b = flash_attention_jnp(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=True, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)

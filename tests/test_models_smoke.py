@@ -1,0 +1,108 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + finiteness.  The FULL configs are exercised only by the
+dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, ShapeSpec, get_config
+from repro.models import registry
+from repro.models.layers import count_params
+
+SMOKE = ShapeSpec("smoke", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_brief(arch):
+    cfg = get_config(arch)
+    brief = {
+        "deepseek_v3_671b": (61, 7168, 128, 128, 129280),
+        "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 163840),
+        "llama3_2_3b": (28, 3072, 24, 8, 128256),
+        "llama3_2_1b": (16, 2048, 32, 8, 128256),
+        "qwen2_1_5b": (28, 1536, 12, 2, 151936),
+        "granite_3_2b": (40, 2048, 32, 8, 49155),
+        "xlstm_1_3b": (48, 2048, 4, 4, 50304),
+        "paligemma_3b": (18, 2048, 8, 1, 257216),
+        "seamless_m4t_large_v2": (24, 1024, 16, 16, 256206),
+        "jamba_v0_1_52b": (32, 4096, 32, 8, 65536),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.vocab_size) == brief
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    api = registry.build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init(key)
+    batch = registry.real_batch(cfg, SMOKE, key)
+    loss, metrics = api.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    # gradient flows and is finite
+    g = jax.grad(lambda p: api.loss(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ["deepseek_v3_671b", "moonshot_v1_16b_a3b",
+                                  "jamba_v0_1_52b"])
+def test_moe_param_counts(arch):
+    cfg = get_config(arch)
+    api = registry.build(cfg)
+    assert api.n_active_params() < api.n_params()
+
+
+def test_param_count_magnitudes():
+    """Full-config parameter counts are in the advertised ballpark."""
+    # NOTE: bands follow the BRIEF's layer/width numbers, which for
+    # moonshot (48L × 64e × d_ff 1408 ⇒ 28.9B) and xlstm (proj-factor-2
+    # mLSTM ⇒ 2.6B) imply more params than the checkpoint names suggest;
+    # the brief's numbers are authoritative here (DESIGN.md §5).
+    expected = {
+        "deepseek_v3_671b": (550e9, 780e9),
+        "moonshot_v1_16b_a3b": (13e9, 30e9),
+        "llama3_2_3b": (2.5e9, 4.5e9),
+        "llama3_2_1b": (1.0e9, 1.8e9),
+        "qwen2_1_5b": (1.2e9, 2.1e9),
+        "granite_3_2b": (2.0e9, 3.3e9),
+        "xlstm_1_3b": (1.0e9, 2.8e9),
+        "paligemma_3b": (2.0e9, 3.5e9),
+        "seamless_m4t_large_v2": (1.2e9, 2.8e9),
+        "jamba_v0_1_52b": (45e9, 62e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = registry.build(get_config(arch)).n_params()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_long_context_support_flags():
+    """long_500k runs only for ssm/hybrid (sub-quadratic path)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        if arch in ("xlstm_1_3b", "jamba_v0_1_52b"):
+            assert cfg.supports_long_context()
+        else:
+            assert not cfg.supports_long_context()
+
+
+def test_vlm_prefix_attention_is_bidirectional_on_patches():
+    """paligemma: patch positions attend to each other bidirectionally."""
+    from repro.models.layers import prefix_lm_mask
+    m = np.asarray(prefix_lm_mask(8, 8, 4))
+    assert m[0, 3]          # patch 0 sees patch 3 (future, within prefix)
+    assert not m[4, 6]      # text stays causal
+    assert m[6, 2]          # text sees patches
+
+
+def test_mtp_adds_loss_term():
+    cfg = get_config("deepseek_v3_671b").reduced()
+    api = registry.build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init(key)
+    batch = registry.real_batch(cfg, SMOKE, key)
+    loss, metrics = api.loss(params, batch)
+    assert "mtp_loss" in metrics and bool(jnp.isfinite(metrics["mtp_loss"]))

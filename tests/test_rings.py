@@ -1,0 +1,110 @@
+"""Ring axioms (Def. 2.1) — property-based, all device rings + host mirrors."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DegreeMRing, MatrixRing, PyDegreeMRing, PyRelationalRing
+from repro.core.rings import ScalarRing, TupleRing, count_ring, sum_ring
+
+RINGS = {
+    "sum": sum_ring(),
+    "degree3": DegreeMRing(3),
+    "matrix2": MatrixRing(2),
+    "tuple(sum,degree2)": TupleRing([sum_ring(), DegreeMRing(2)]),
+}
+
+
+def rand_payload(ring, rng, key_shape=()):
+    return {k: jnp.asarray(rng.normal(size=(*key_shape, *shp)).astype(np.float32))
+            for k, shp in ring.components.items()}
+
+
+@pytest.mark.parametrize("name", list(RINGS))
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_ring_axioms(name, seed):
+    ring = RINGS[name]
+    rng = np.random.default_rng(seed)
+    a, b, c = (rand_payload(ring, rng) for _ in range(3))
+    tol = dict(rtol=1e-4, atol=1e-4)
+
+    # additive commutativity + associativity
+    assert ring.allclose(ring.add(a, b), ring.add(b, a), **tol)
+    assert ring.allclose(ring.add(ring.add(a, b), c),
+                         ring.add(a, ring.add(b, c)), **tol)
+    # additive identity + inverse
+    zero = ring.zeros()
+    assert ring.allclose(ring.add(a, zero), a, **tol)
+    assert ring.allclose(ring.add(a, ring.neg(a)), zero, **tol)
+    # multiplicative identity and associativity
+    one = ring.ones()
+    assert ring.allclose(ring.mul(a, one), a, **tol)
+    assert ring.allclose(ring.mul(one, a), a, **tol)
+    assert ring.allclose(ring.mul(ring.mul(a, b), c),
+                         ring.mul(a, ring.mul(b, c)), rtol=1e-3, atol=1e-3)
+    # distributivity (both sides: matrix ring is non-commutative)
+    assert ring.allclose(ring.mul(a, ring.add(b, c)),
+                         ring.add(ring.mul(a, b), ring.mul(a, c)),
+                         rtol=1e-3, atol=1e-3)
+    assert ring.allclose(ring.mul(ring.add(a, b), c),
+                         ring.add(ring.mul(a, c), ring.mul(b, c)),
+                         rtol=1e-3, atol=1e-3)
+    # commutativity where claimed
+    if ring.commutative:
+        assert ring.allclose(ring.mul(a, b), ring.mul(b, a), rtol=1e-3, atol=1e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_degree_m_matches_py_oracle(seed):
+    rng = np.random.default_rng(seed)
+    m = 4
+    dev = DegreeMRing(m)
+    host = PyDegreeMRing(m)
+    a = rand_payload(dev, rng)
+    b = rand_payload(dev, rng)
+    ah = (float(a["c"]), np.asarray(a["s"]), np.asarray(a["Q"]))
+    bh = (float(b["c"]), np.asarray(b["s"]), np.asarray(b["Q"]))
+    got = dev.mul(a, b)
+    exp = host.mul(ah, bh)
+    np.testing.assert_allclose(float(got["c"]), exp[0], rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got["s"]), exp[1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got["Q"]), exp[2], rtol=1e-4, atol=1e-5)
+
+
+def test_degree_m_lift():
+    ring = DegreeMRing(3)
+    x = jnp.asarray([2.0, -1.0])
+    p = ring.lift(x, var_index=1)
+    np.testing.assert_allclose(np.asarray(p["c"]), [1, 1])
+    np.testing.assert_allclose(np.asarray(p["s"])[:, 1], [2, -1])
+    np.testing.assert_allclose(np.asarray(p["Q"])[:, 1, 1], [4, 1])
+    assert float(np.abs(np.asarray(p["Q"])).sum()) == 5.0  # only (1,1) non-zero
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(-3, 3)), max_size=8),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(-3, 3)), max_size=8))
+@settings(max_examples=30, deadline=None)
+def test_relational_ring_axioms(ta, tb):
+    ring = PyRelationalRing()
+    a = {}
+    for k, mult in ta:
+        a[(k,)] = a.get((k,), 0) + mult
+    b = {}
+    for k, mult in tb:
+        b[(k,)] = b.get((k,), 0) + mult
+    a = {k: v for k, v in a.items() if v}
+    b = {k: v for k, v in b.items() if v}
+    assert ring.add(a, b) == ring.add(b, a)
+    assert ring.add(a, ring.zero()) == a
+    assert ring.add(a, ring.neg(a)) == ring.zero()
+    assert ring.mul(a, ring.one()) == a
+    assert ring.mul(ring.one(), a) == a
+    assert ring.mul(a, ring.zero()) == ring.zero()
+
+
+def test_count_ring_lifts_to_one():
+    ring = count_ring()
+    p = ring.lift(jnp.asarray([5, 7, 9]))
+    np.testing.assert_array_equal(np.asarray(p["v"]), [1, 1, 1])

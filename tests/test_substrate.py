@@ -1,0 +1,293 @@
+"""Substrate tests: optimizers, schedules, gradient compression,
+checkpointing, fault tolerance, data pipeline, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adafactor, adamw, clip_by_global_norm,
+                         cosine_schedule, linear_warmup_cosine, sgd)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+def quad_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    grad = lambda p: {"w": 2 * (p["w"] - target)}
+    return params, grad, target
+
+
+@pytest.mark.parametrize("make", [
+    lambda: sgd(0.1),
+    lambda: adamw(0.1, weight_decay=0.0),
+    # adafactor's rms-normalized update needs a decaying lr to settle
+    lambda: adafactor(lambda s: 0.5 / jnp.sqrt(s.astype(jnp.float32))),
+])
+def test_optimizers_converge_on_quadratic(make):
+    opt = make()
+    params, grad, target = quad_problem()
+    state = opt.init(params)
+    for _ in range(600):
+        params, state = opt.update(params, state, grad(params))
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               rtol=0.05, atol=0.08)
+
+
+def test_adafactor_factored_state_is_small():
+    params = {"w": jnp.zeros((256, 512)), "b": jnp.zeros((256,))}
+    opt = adafactor(1e-2)
+    state = opt.init(params)
+    slot = state["v"]["w"]
+    assert slot.vr.shape == (256,) and slot.vc.shape == (512,)
+    assert state["v"]["b"].shape == (256,)  # unfactored below threshold
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(clipped["a"])), 1.0,
+                               rtol=1e-4)
+
+
+def test_schedules():
+    s = linear_warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(s(jnp.asarray(10))), 1.0, rtol=1e-3)
+    assert float(s(jnp.asarray(100))) < 0.2
+    c = cosine_schedule(1.0, 100)
+    assert float(c(jnp.asarray(0))) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (paper lock #2 on DP sync)
+# ---------------------------------------------------------------------------
+def test_compression_reduces_payload_and_error_feedback_converges():
+    from repro.runtime.compression import (CompressionConfig, compress_grads,
+                                           compression_ratio,
+                                           init_compression_state)
+
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32))}
+    cfg = CompressionConfig(rank=4, min_size=1024)
+    ratio = compression_ratio(params, cfg)
+    assert ratio < 0.15  # (128+64)*4 / (128*64)
+    state = init_compression_state(params, cfg)
+    # fixed gradient: with error feedback the *accumulated* compressed signal
+    # approaches the accumulated true gradient
+    g = {"w": jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32))}
+    acc = np.zeros((128, 64))
+    n_rounds = 120
+    errs = []
+    for t in range(n_rounds):
+        gh, state = compress_grads(g, state, cfg)
+        acc += np.asarray(gh["w"])
+        errs.append(np.linalg.norm(acc / (t + 1) - np.asarray(g["w"]))
+                    / np.linalg.norm(g["w"]))
+    # the residual is bounded, so the time-averaged error decays ~1/T
+    assert errs[-1] < 0.2, errs[-1]
+    assert errs[-1] < errs[10] / 2
+
+
+def test_compressed_optimizer_trains():
+    from repro.runtime.compression import CompressionConfig, compressed_optimizer
+
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.standard_normal((64, 16)).astype(np.float32))
+    w_true = jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))
+    y = X @ w_true
+    params = {"w": jnp.zeros((16, 8))}
+    base = sgd(0.05)
+    opt = compressed_optimizer(base, params, CompressionConfig(rank=2, min_size=1))
+    state = opt.init(params)
+
+    def loss_g(p):
+        pred = X @ p["w"]
+        return jnp.mean((pred - y) ** 2), {"w": 2 * X.T @ (pred - y) / X.shape[0]}
+
+    for _ in range(400):
+        _, g = loss_g(params)
+        params, state = opt.update(params, state, g)
+    final, _ = loss_g(params)
+    assert float(final) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(tree, 10)
+    ck.save(jax.tree.map(lambda x: x * 2, tree), 20, blocking=False)
+    ck.wait()
+    restored, step = ck.restore_latest(tree)
+    assert step == 20
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) * 2)
+    # a torn write (tmp dir without manifest) must be ignored
+    os.makedirs(tmp_path / "step_00000030.tmp", exist_ok=True)
+    _, step = ck.restore_latest(tree)
+    assert step == 20
+    # keep=2 GC
+    ck.save(tree, 40)
+    ck.save(tree, 50)
+    assert 10 not in ck.all_steps()
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    ck = Checkpointer(str(tmp_path))
+    ck.save({"a": jnp.ones(3)}, 1)
+    with pytest.raises(AssertionError):
+        ck.restore({"a": jnp.ones(3), "b": jnp.ones(2)}, 1)
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+def test_supervisor_restarts_through_failures(tmp_path):
+    from repro.runtime.fault_tolerance import Supervisor
+
+    state = {"ckpt_step": 0, "fail_at": {7, 13}}
+
+    def step_fn(step):
+        if step in state["fail_at"]:
+            state["fail_at"].discard(step)
+            raise RuntimeError("injected host failure")
+        return 1.0 / (step + 1)
+
+    def save_fn(step):
+        state["ckpt_step"] = step
+
+    def restore_fn():
+        return state["ckpt_step"]
+
+    sup = Supervisor(max_restarts=5, backoff_s=0.0)
+    done, restarts, log = sup.run(n_steps=20, step_fn=step_fn, save_fn=save_fn,
+                                  restore_fn=restore_fn, checkpoint_every=5)
+    assert done == 20 and restarts == 2
+    assert any("failure" in e for e in log)
+
+
+def test_supervisor_budget_exhaustion():
+    from repro.runtime.fault_tolerance import Supervisor
+
+    sup = Supervisor(max_restarts=2, backoff_s=0.0)
+    with pytest.raises(RuntimeError, match="restart budget"):
+        sup.run(n_steps=5, step_fn=lambda s: float("nan"),
+                save_fn=lambda s: None, restore_fn=lambda: 0)
+
+
+def test_straggler_monitor():
+    from repro.runtime.fault_tolerance import StragglerMonitor
+
+    mon = StragglerMonitor(factor=3.0)
+    for i in range(10):
+        assert not mon.observe(i, 1.0)
+    assert mon.observe(10, 10.0)          # 10x baseline
+    assert abs(mon.baseline - 1.0) < 1e-6  # straggler excluded from EWMA
+
+
+def test_elastic_mesh_planning():
+    from repro.runtime.fault_tolerance import ClusterState
+
+    cs = ClusterState(heartbeat_timeout_s=10.0)
+    for i in range(64):
+        cs.heartbeat(f"host{i}", n_chips=4, now=100.0)
+    assert cs.plan_mesh(model_parallel=16, now=101.0) == (16, 16)
+    # lose 20 hosts -> shrink data axis to the next power of two
+    for i in range(20):
+        cs.heartbeat(f"host{i}", n_chips=4, now=50.0)  # stale heartbeat
+    data, model = cs.plan_mesh(model_parallel=16, now=101.0)
+    assert (data, model) == (8, 16)
+    assert cs.healthy_chips(now=101.0) == 44 * 4
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline + streaming stats
+# ---------------------------------------------------------------------------
+def test_data_pipeline_determinism_and_resume():
+    from repro.configs.base import ShapeSpec, get_config
+    from repro.data.lm_data import synthetic_lm_batches
+
+    cfg = get_config("llama3_2_1b").reduced()
+    shape = ShapeSpec("t", 16, 4, "train")
+    it1 = synthetic_lm_batches(cfg, shape, seed=3)
+    batches = [next(it1) for _ in range(5)]
+    it2 = synthetic_lm_batches(cfg, shape, seed=3, start_step=3)  # resume
+    b3 = next(it2)
+    np.testing.assert_array_equal(np.asarray(batches[3]["tokens"]),
+                                  np.asarray(b3["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(batches[0]["tokens"])[:, 1:],
+                                  np.asarray(batches[0]["labels"])[:, :-1])
+
+
+def test_running_cofactor_matches_numpy_and_supports_deletes():
+    from repro.data.stats import RunningCofactor, solve_ridge
+
+    rng = np.random.default_rng(5)
+    m = 6
+    stats = RunningCofactor.init(m)
+    all_rows = []
+    for _ in range(4):
+        x = rng.standard_normal((32, m)).astype(np.float32)
+        stats = stats.update(jnp.asarray(x))
+        all_rows.append(x)
+    X = np.concatenate(all_rows)
+    np.testing.assert_allclose(float(stats.c), len(X))
+    np.testing.assert_allclose(np.asarray(stats.Q), X.T @ X, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(stats.mean()), X.mean(0), rtol=1e-3,
+                               atol=1e-3)
+    # delete the last chunk (negative weights — ring additive inverse)
+    stats = stats.update(jnp.asarray(all_rows[-1]),
+                         weights=-jnp.ones(32, jnp.float32))
+    X2 = np.concatenate(all_rows[:-1])
+    np.testing.assert_allclose(np.asarray(stats.Q), X2.T @ X2, rtol=1e-3,
+                               atol=1e-3)
+    # ridge solve from maintained Q vs direct
+    w = solve_ridge(stats, label_idx=0, feature_idx=[1, 2, 3], reg=1e-3)
+    A = X2[:, [1, 2, 3]]
+    w_ref = np.linalg.solve(A.T @ A + 1e-3 * np.eye(3), A.T @ X2[:, 0])
+    np.testing.assert_allclose(np.asarray(w), w_ref, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+def test_sharding_rules_divisibility_fallback():
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec
+    from repro.launch.sharding import resolve_spec
+
+    devs = np.asarray(jax.devices() * 1)[:1].reshape(1, 1)
+    # fake a 16x16 mesh shape via Mesh of 1 device is impossible; test the
+    # rule logic with a real 1x1 mesh (axis size 1 -> everything replicated)
+    mesh = Mesh(devs, ("data", "model"))
+    spec = resolve_spec(mesh, ("embed", "heads", "head_dim"), (64, 8, 16))
+    assert spec == PartitionSpec(None, None, None)  # axis size 1 skipped
+
+
+def test_opt_state_specs_match_eval_shape():
+    from repro.launch.sharding import opt_state_specs
+    from repro.models.layers import P
+    from repro.optim.optimizers import adafactor, adamw
+
+    params = {"w": jnp.zeros((256, 512)), "b": jnp.zeros((7,))}
+    pspecs = {"w": P((256, 512), ("embed", "mlp")), "b": P((7,), ("embed",))}
+    for name, opt in (("adamw", adamw(1e-3)), ("adafactor", adafactor(1e-3))):
+        abs_state = jax.eval_shape(opt.init, params)
+        spec_state = opt_state_specs(name, pspecs)
+        flat_a = jax.tree.leaves(abs_state)
+        flat_s = jax.tree.leaves(spec_state, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_a) == len(flat_s)
+        for a, s in zip(flat_a, flat_s):
+            assert tuple(a.shape) == tuple(s.shape), (name, a.shape, s.shape)
