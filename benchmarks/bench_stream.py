@@ -1,0 +1,70 @@
+"""Fused stream executor vs per-call trigger dispatch (ISSUE 1).
+
+Retailer sum-aggregate stream, every maintenance strategy × batch size,
+measured both through the fused executor (one XLA program per stream) and
+the per-call jitted-trigger loop.  Besides the CSV rows this writes
+``BENCH_stream.json`` so the perf trajectory is machine-readable across
+PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import IVMEngine, Query, sum_ring
+
+from .common import (RETAILER_DOMS, RETAILER_RELATIONS, emit, retailer_vo,
+                     run_engine_stream, synth_db, update_stream)
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_stream.json")
+
+
+def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
+        strategies=("fivm", "fivm_1", "dbt", "reeval"), repeats: int = 5,
+        json_path: str | None = JSON_PATH):
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+    q = Query(relations=RETAILER_RELATIONS, free_vars=(), ring=ring,
+              domains=RETAILER_DOMS, lifts={"units": ("value",)})
+    db = synth_db(RETAILER_RELATIONS, RETAILER_DOMS, ring, rng)
+    rows, results = [], []
+    for strategy in strategies:
+        for batch in batches:
+            stream = update_stream(RETAILER_RELATIONS, RETAILER_DOMS, ring,
+                                   rng, batch, n_batches)
+            eng_f = IVMEngine.build(q, db, var_order=retailer_vo(),
+                                    strategy=strategy)
+            tps_fused, _ = run_engine_stream(eng_f, stream, fused=True,
+                                             repeats=repeats)
+            eng_p = IVMEngine.build(q, db, var_order=retailer_vo(),
+                                    strategy=strategy)
+            tps_percall, _ = run_engine_stream(eng_p, stream, fused=False,
+                                               repeats=repeats)
+            speedup = tps_fused / tps_percall
+            rows.append((f"stream/retailer_sum/{strategy}/b={batch}",
+                         round(1e6 * batch * n_batches / tps_fused /
+                               n_batches, 1),
+                         f"fused_tps={tps_fused:.0f};"
+                         f"percall_tps={tps_percall:.0f};"
+                         f"speedup={speedup:.2f}x"))
+            results.append(dict(
+                dataset="retailer_sum_aggregate",
+                strategy=strategy,
+                batch=batch,
+                n_batches=n_batches,
+                fused_tuples_per_s=round(tps_fused),
+                percall_tuples_per_s=round(tps_percall),
+                speedup=round(speedup, 2),
+            ))
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump({"benchmark": "fused_stream_executor",
+                       "results": results}, f, indent=2)
+        print(f"# wrote {os.path.abspath(json_path)}")
+    return emit(rows, ("name", "us_per_call", "derived"))
+
+
+if __name__ == "__main__":
+    run()

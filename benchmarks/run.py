@@ -12,8 +12,8 @@ import traceback
 
 from . import (bench_batch_size, bench_cofactor, bench_factorized_payloads,
                bench_grad_compression, bench_kernels, bench_matrix_chain,
-               bench_sum_aggregates, bench_triangle, bench_view_counts,
-               roofline)
+               bench_stream, bench_sum_aggregates, bench_triangle,
+               bench_view_counts, roofline)
 
 
 def main() -> None:
@@ -23,6 +23,9 @@ def main() -> None:
     args = ap.parse_args()
 
     sections = [
+        ("stream executor (fused vs per-call; BENCH_stream.json)",
+         lambda: bench_stream.run(
+             batches=(16, 64, 256, 1024) if args.full else (16, 64, 256))),
         ("sum_aggregates (Fig 8)", lambda: bench_sum_aggregates.run(
             batch=512 if args.full else 256)),
         ("matrix_chain (Fig 9)", lambda: bench_matrix_chain.run(

@@ -13,8 +13,8 @@ import jax.numpy as jnp
 import sys
 sys.path.insert(0, "src")
 
-from repro.core import (COOUpdate, DenseRelation, IVMEngine, Query, chain,
-                        sum_ring)
+from repro.core import (COOUpdate, DenseRelation, IVMEngine, Query,
+                        StreamExecutor, chain, sum_ring)
 from repro.core.apps import regression
 
 rng = np.random.default_rng(0)
@@ -41,15 +41,20 @@ print("view tree:\n" + engine.tree.pretty())
 print(f"materialized views (μ): {sorted(engine.materialized_names)}")
 
 # --- stream updates -----------------------------------------------------------
+# build the whole stream up front, then let the stream executor compile it
+# into ONE XLA program (scan/switch over the schedule) — the fused fast path.
+# engine.apply_update(rel, upd) remains the per-call oracle for single steps.
+stream = []
 for step in range(4):
     rel = ["S", "R", "T", "S"][step]
     sch = query.relations[rel]
     keys = np.stack([rng.integers(0, DOMS[v], size=16) for v in sch], 1)
     vals = rng.choice([-1.0, 1.0], size=16).astype(np.float32)  # incl. deletes
-    engine.apply_update(rel, COOUpdate(sch, jnp.asarray(keys, jnp.int32),
-                                       {"v": jnp.asarray(vals)}))
+    stream.append((rel, COOUpdate(sch, jnp.asarray(keys, jnp.int32),
+                                  {"v": jnp.asarray(vals)})))
+StreamExecutor(engine).run(stream)
 res = engine.result().transpose(("A", "C"))
-print("Q[A,C] after 4 update batches:\n", np.asarray(res.payload["v"])[:3, :3])
+print("Q[A,C] after 4 fused update batches:\n", np.asarray(res.payload["v"])[:3, :3])
 
 # --- same tree, different ring: gradient statistics (Sec. 7.2) ---------------
 q2 = regression.cofactor_query(query.relations, DOMS)

@@ -2,7 +2,8 @@
 from .contraction import BatchedDelta, contract_dense, lift_relation, marginalize_dense
 from .delta import propagate_coo, propagate_factorized
 from .indicators import IndicatorState, add_indicators, gyo_residual, indicator_of, is_acyclic
-from .ivm import IVMEngine
+from .ivm import IVMEngine, canonical_state
+from .stream import PreparedStream, StreamExecutor, prepare_stream
 from .materialize import choose_materialized, views_on_path
 from .query import Query
 from .relations import COOUpdate, DenseRelation, FactorizedUpdate, PyRelation
@@ -24,11 +25,12 @@ from .view_tree import ViewNode, build_view_tree, evaluate_view
 __all__ = [
     "BatchedDelta", "COOUpdate", "DegreeMRing", "DenseRelation",
     "FactorizedUpdate", "IVMEngine", "IndicatorState", "MatrixRing",
-    "PyDegreeMRing", "PyNumberRing", "PyRelation", "PyRelationalRing",
-    "Query", "Ring", "ScalarRing", "TupleRing", "VariableOrder", "VONode",
-    "ViewNode", "add_indicators", "build_view_tree", "chain",
-    "choose_materialized", "contract_dense", "count_ring", "evaluate_view",
-    "gyo_residual", "heuristic_order", "indicator_of", "is_acyclic",
-    "lift_relation", "marginalize_dense", "propagate_coo",
+    "PreparedStream", "PyDegreeMRing", "PyNumberRing", "PyRelation",
+    "PyRelationalRing", "Query", "Ring", "ScalarRing", "StreamExecutor",
+    "TupleRing", "VariableOrder", "VONode", "ViewNode", "add_indicators",
+    "build_view_tree", "canonical_state", "chain", "choose_materialized",
+    "contract_dense", "count_ring", "evaluate_view", "gyo_residual",
+    "heuristic_order", "indicator_of", "is_acyclic", "lift_relation",
+    "marginalize_dense", "prepare_stream", "propagate_coo",
     "propagate_factorized", "sum_ring", "views_on_path",
 ]

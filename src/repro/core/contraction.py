@@ -17,6 +17,7 @@ by materialized sibling views, matching the paper's complexity claims
 from __future__ import annotations
 
 import dataclasses
+import functools
 import string
 from typing import Sequence
 
@@ -35,6 +36,59 @@ def _pay_map(subs: str) -> str:
     return "".join(_PAY_LETTERS[ord(c) - ord("i")] for c in subs)
 
 
+# ---------------------------------------------------------------------------
+# Contraction-plan cache.  Every bilinear contraction site reduces to a fixed
+# list of (comp_out, comp_a, comp_b, einsum_spec, coef) terms determined by
+# the ring's mul_terms and the key-subscript strings — pure trace-time
+# metadata.  The stream executor retraces triggers inside scan/switch bodies,
+# so these plans are memoized instead of rebuilt string-by-string per trace.
+# mul_terms are tuples of frozen MulTerm dataclasses: hashable and equal
+# across ring instances of the same shape.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _einsum_plan(mul_terms, a_key: str, b_key: str, o_key: str):
+    return tuple(
+        (
+            t.comp_out,
+            t.comp_a,
+            t.comp_b,
+            f"{a_key}{_pay_map(t.a_subs)},{b_key}{_pay_map(t.b_subs)}"
+            f"->{o_key}{_pay_map(t.out_subs)}",
+            t.coef,
+        )
+        for t in mul_terms
+    )
+
+
+def _apply_plan(plan, a_payload: Payload, b_payload: Payload) -> dict:
+    out: dict[str, jnp.ndarray] = {}
+    for comp_out, comp_a, comp_b, spec, coef in plan:
+        term = jnp.einsum(spec, a_payload[comp_a], b_payload[comp_b])
+        if coef != 1.0:
+            term = term * coef
+        out[comp_out] = out.get(comp_out, 0) + term
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_plan(mul_terms, a_schema: tuple, b_schema: tuple, marg: tuple,
+                out_order: tuple | None):
+    """(out_schema, einsum plan) for contract_dense, keyed per
+    (schema_a, schema_b, marg, ring bilinear structure)."""
+    all_vars = list(a_schema) + [v for v in b_schema if v not in a_schema]
+    for m in marg:
+        assert m in all_vars, (m, all_vars)
+    out_schema = tuple(v for v in all_vars if v not in marg)
+    if out_order is not None:
+        assert set(out_order) == set(out_schema)
+        out_schema = tuple(out_order)
+    letters = {v: _KEY_LETTERS[i] for i, v in enumerate(all_vars)}
+    a_key = "".join(letters[v] for v in a_schema)
+    b_key = "".join(letters[v] for v in b_schema)
+    o_key = "".join(letters[v] for v in out_schema)
+    return out_schema, _einsum_plan(mul_terms, a_key, b_key, o_key)
+
+
 def contract_dense(
     a: DenseRelation,
     b: DenseRelation,
@@ -45,29 +99,10 @@ def contract_dense(
     ring = a.ring
     assert ring is b.ring or ring.name == b.ring.name
     assert ring.mul_terms is not None, f"ring {ring.name} lacks bilinear terms"
-    marg = tuple(marg)
-    all_vars = list(a.schema) + [v for v in b.schema if v not in a.schema]
-    for m in marg:
-        assert m in all_vars, (m, all_vars)
-    out_schema = tuple(v for v in all_vars if v not in marg)
-    if out_order is not None:
-        assert set(out_order) == set(out_schema)
-        out_schema = tuple(out_order)
-    letters = {v: _KEY_LETTERS[i] for i, v in enumerate(all_vars)}
-    a_key = "".join(letters[v] for v in a.schema)
-    b_key = "".join(letters[v] for v in b.schema)
-    o_key = "".join(letters[v] for v in out_schema)
-
-    out: dict[str, jnp.ndarray] = {}
-    for t in ring.mul_terms:
-        spec = (
-            f"{a_key}{_pay_map(t.a_subs)},{b_key}{_pay_map(t.b_subs)}"
-            f"->{o_key}{_pay_map(t.out_subs)}"
-        )
-        term = jnp.einsum(spec, a.payload[t.comp_a], b.payload[t.comp_b])
-        if t.coef != 1.0:
-            term = term * t.coef
-        out[t.comp_out] = out.get(t.comp_out, 0) + term
+    out_schema, plan = _dense_plan(
+        tuple(ring.mul_terms), tuple(a.schema), tuple(b.schema), tuple(marg),
+        None if out_order is None else tuple(out_order))
+    out = _apply_plan(plan, a.payload, b.payload)
     doms = []
     for v in out_schema:
         src = a if v in a.schema else b
@@ -153,9 +188,18 @@ class BatchedDelta:
                 g = lift_rel.gather(self.keys[:, i : i + 1])  # [B, *comp]
                 payload = _mul_broadcast(self.ring, payload, g, self.dense_schema)
             keys = jnp.delete(self.keys, i, axis=1, assume_unique_indices=True)
+            new_coo = tuple(v for v in self.coo_schema if v != var)
+            if not new_coo and self.batch > 1:
+                # batch collapse: with no COO vars left the rows are
+                # indistinguishable — sum them into one row now so every
+                # downstream join/marginalize/apply streams [1, D...] instead
+                # of [B, D...] (apply_to would do this sum at the end anyway)
+                payload = {c: jnp.sum(p, axis=0, keepdims=True)
+                           for c, p in payload.items()}
+                keys = keys[:1]
             return dataclasses.replace(
                 self,
-                coo_schema=tuple(v for v in self.coo_schema if v != var),
+                coo_schema=new_coo,
                 keys=keys,
                 payload=payload,
             )
@@ -192,10 +236,18 @@ class BatchedDelta:
             for comp, shp in ring.components.items():
                 arr = view.payload[comp]
                 nk = len(view.schema)
-                perm = idx_axes + rest_axes + list(range(nk, arr.ndim))
-                arr = jnp.transpose(arr, perm)
-                idx = tuple(self.key_col(v) for v in shared_coo)
-                v_payload[comp] = arr[idx]  # [B, rest..., comp]
+                if len(idx_axes) == 1:
+                    # gather along the shared axis, then move the batch axis
+                    # to the front: touches O(B·|rest|) elements instead of
+                    # transposing the whole materialized view first
+                    ax = idx_axes[0]
+                    g = jnp.take(arr, self.key_col(shared_coo[0]), axis=ax)
+                    v_payload[comp] = jnp.moveaxis(g, ax, 0)
+                else:
+                    perm = idx_axes + rest_axes + list(range(nk, arr.ndim))
+                    arr = jnp.transpose(arr, perm)
+                    idx = tuple(self.key_col(v) for v in shared_coo)
+                    v_payload[comp] = arr[idx]  # [B, rest..., comp]
             v_schema = [view.schema[i] for i in rest_axes]
             has_batch = True
         else:
@@ -211,17 +263,9 @@ class BatchedDelta:
         a_key = "z" + "".join(letters[v] for v in self.dense_schema)
         b_key = ("z" if has_batch else "") + "".join(letters[v] for v in v_schema)
         o_key = "z" + "".join(letters[v] for v in out_dense)
-        out: dict[str, jnp.ndarray] = {}
         assert ring.mul_terms is not None
-        for t in ring.mul_terms:
-            spec = (
-                f"{a_key}{_pay_map(t.a_subs)},{b_key}{_pay_map(t.b_subs)}"
-                f"->{o_key}{_pay_map(t.out_subs)}"
-            )
-            term = jnp.einsum(spec, self.payload[t.comp_a], v_payload[t.comp_b])
-            if t.coef != 1.0:
-                term = term * t.coef
-            out[t.comp_out] = out.get(t.comp_out, 0) + term
+        plan = _einsum_plan(tuple(ring.mul_terms), a_key, b_key, o_key)
+        out = _apply_plan(plan, self.payload, v_payload)
         doms = dict(zip(self.dense_schema, self.dense_domains))
         for v in v_schema:
             doms.setdefault(v, view.domain_of(v))
@@ -246,6 +290,14 @@ class BatchedDelta:
         dense_axes = [view.schema.index(v) for v in self.dense_schema]
         nk = len(view.schema)
         new_payload = {}
+        if coo_axes and not dense_axes:
+            # pure-COO delta: index each view axis by its own key column —
+            # no transpose of the materialized view, whatever its layout
+            idx = tuple(self.key_col(v) for v in view.schema)
+            for comp in ring.components:
+                new_payload[comp] = view.payload[comp].at[idx].add(
+                    self.payload[comp])
+            return DenseRelation(view.schema, ring, new_payload)
         for comp, shp in ring.components.items():
             arr = view.payload[comp]
             # move coo axes to the front
@@ -286,20 +338,11 @@ class BatchedDelta:
 def _mul_broadcast(ring: Ring, payload: Payload, g: Payload, dense_schema) -> Payload:
     """payload [B, D..., comp] * g [B, comp] elementwise in the ring."""
     nd = len(dense_schema)
-    out = {}
+    d_letters = _KEY_LETTERS[:nd]
     assert ring.mul_terms is not None
-    for t in ring.mul_terms:
-        a = payload[t.comp_a]
-        b = g[t.comp_b]
-        d_letters = _KEY_LETTERS[:nd]
-        spec = (
-            f"z{d_letters}{_pay_map(t.a_subs)},z{_pay_map(t.b_subs)}"
-            f"->z{d_letters}{_pay_map(t.out_subs)}"
-        )
-        term = jnp.einsum(spec, a, b)
-        if t.coef != 1.0:
-            term = term * t.coef
-        out[t.comp_out] = out.get(t.comp_out, 0) + term
+    plan = _einsum_plan(tuple(ring.mul_terms), f"z{d_letters}", "z",
+                        f"z{d_letters}")
+    out = _apply_plan(plan, payload, g)
     for comp, shp in ring.components.items():
         if comp not in out:
             b = payload[next(iter(payload))].shape[0]
@@ -311,20 +354,13 @@ def _mul_broadcast(ring: Ring, payload: Payload, g: Payload, dense_schema) -> Pa
 def _contract_axis(ring: Ring, payload: Payload, lift_payload: Payload,
                    axis: int, n_dense: int) -> Payload:
     """⊕ over one dense axis with lifting: einsum contraction of that axis."""
-    out = {}
     assert ring.mul_terms is not None
     d_letters = _KEY_LETTERS[:n_dense]
     m = d_letters[axis - 1]
     o_letters = d_letters.replace(m, "")
-    for t in ring.mul_terms:
-        spec = (
-            f"z{d_letters}{_pay_map(t.a_subs)},{m}{_pay_map(t.b_subs)}"
-            f"->z{o_letters}{_pay_map(t.out_subs)}"
-        )
-        term = jnp.einsum(spec, payload[t.comp_a], lift_payload[t.comp_b])
-        if t.coef != 1.0:
-            term = term * t.coef
-        out[t.comp_out] = out.get(t.comp_out, 0) + term
+    plan = _einsum_plan(tuple(ring.mul_terms), f"z{d_letters}", m,
+                        f"z{o_letters}")
+    out = _apply_plan(plan, payload, lift_payload)
     for comp, shp in ring.components.items():
         if comp not in out:
             ref = payload[next(iter(payload))]

@@ -142,6 +142,11 @@ def propagate_factorized(
 
 
 def _lift_or_none(query: Query, var: str):
+    """None for identity lifts: g(x)=1 multiplies by ring one, so the
+    marginalization is a plain sum — skipping the gather+einsum halves the
+    op count of unlifted variables (most join variables)."""
+    if query.lift_spec(var) == ("one",):
+        return None
     return query.lift_rel(var)
 
 

@@ -160,6 +160,11 @@ class IndicatorState:
         was_pos = self.counts[idx] > 0
         now_pos = new_counts[idx] > 0
         dval = now_pos.astype(ring.dtype) - was_pos.astype(ring.dtype)  # [B] ∈ {-1,0,1}
+        # a row can only flip ∃ if it changed its own tuple's zero-ness; this
+        # gate is a no-op for legal (duplicate-free) batches and makes
+        # ring-zero padding rows (stream executor bucketing) exact no-ops
+        # even when a real row in the batch flips the padded key's count
+        dval = dval * (dcount != 0).astype(ring.dtype)
         one = ring.ones((upd.keys.shape[0],))
         payload = ring.scale(one, dval)
         new_dense = self.dense.scatter_add(proj_keys, payload)

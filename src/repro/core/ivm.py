@@ -98,15 +98,21 @@ class IVMEngine:
             mat |= {k for k in store if k.startswith("W:")}
         for name in mat:
             views[name] = store[name]
-        # base relations are stored as copies: leaf views alias the caller's
-        # database arrays, and state donation (make_trigger) requires every
-        # buffer in the state pytree to appear exactly once
+        # base relations are stored (as copies: leaf views alias the caller's
+        # database arrays, and state donation requires every buffer in the
+        # state pytree to appear exactly once) only where maintenance reads
+        # them back: 1-IVM / reevaluation recompute from base, and indicator
+        # transition counting needs the pre-update relation.  fivm / dbt
+        # never read other base relations — storing them would just add a
+        # dead scatter per update and inflate the stream executor's carry.
+        need_base = set(query.relations) if store_base else {
+            n.indicator[0] for n in tree.walk() if n.indicator is not None
+        }
         base = {
             r: DenseRelation(rel.schema, rel.ring,
                              {c: jnp.array(v) for c, v in rel.payload.items()})
-            for r, rel in database.items()
+            for r, rel in database.items() if r in need_base
         }
-        # keep base relations for leaves that μ chose (they may be updated)
         return cls(
             query=query,
             tree=tree,
@@ -144,6 +150,23 @@ class IVMEngine:
         )
         self.views, self.base, self.indicators = views, base, indicators
 
+    def trigger_body(self, rel: str):
+        """The pure (uncompiled) maintenance trigger for updates to ``rel``:
+            body(state, upd) -> state
+        with ``state = (views, base, indicators)``.  The output is
+        canonicalized (see :func:`canonical_state`) so that every relation's
+        trigger shares one stable state-pytree signature — the invariant the
+        stream executor relies on to thread the state through ``lax.scan``
+        carries and across ``lax.switch`` branches."""
+
+        def body(state, upd):
+            views, base, indicators = state
+            return canonical_state(
+                self.functional_update(views, base, indicators, rel, upd)
+            )
+
+        return body
+
     def make_trigger(self, rel: str):
         """Compile the maintenance trigger for updates to ``rel`` (the role
         DBToaster's code generator plays; here the backend is XLA).
@@ -153,18 +176,18 @@ class IVMEngine:
         where ``state = (views, base, indicators)`` is a pytree.  Batch size
         of the update is static per compilation (pipeline pads batches).
         """
-
-        def trigger(state, upd):
-            views, base, indicators = state
-            return self.functional_update(views, base, indicators, rel, upd)
-
         # donate the state: views not touched by this trigger alias through,
         # and updated views are modified in place (no full-state copy)
-        return jax.jit(trigger, donate_argnums=(0,))
+        return jax.jit(self.trigger_body(rel), donate_argnums=(0,))
 
     @property
     def state(self):
         return (self.views, self.base, self.indicators)
+
+    def canonical_state(self):
+        """The engine state with every leaf coerced to a canonical (strong)
+        dtype — the fixed point of every trigger's output signature."""
+        return canonical_state(self.state)
 
     def set_state(self, state) -> None:
         self.views, self.base, self.indicators = state
@@ -255,6 +278,7 @@ class IVMEngine:
     def _propagate_indicator_delta(self, views, indicators, node_name: str,
                                    dind: COOUpdate):
         from .contraction import BatchedDelta as BD
+        from .delta import _lift_or_none
 
         views = dict(views)
         node = self.tree.find(node_name)
@@ -264,7 +288,7 @@ class IVMEngine:
             assert sib.name in views, f"{sib.name} must be materialized"
             delta = delta.join_dense(views[sib.name])
         for v in node.marg_vars:
-            delta = delta.marginalize(v, self.query.lift_rel(v))
+            delta = delta.marginalize(v, _lift_or_none(self.query, v))
         if node.name in views:
             views[node.name] = delta.apply_to(views[node.name])
         # continue upward along node -> root
@@ -279,11 +303,24 @@ class IVMEngine:
             if parent.indicator is not None and parent.name != node_name:
                 delta = delta.join_dense(indicators[parent.name].dense)
             for v in parent.marg_vars:
-                delta = delta.marginalize(v, self.query.lift_rel(v))
+                delta = delta.marginalize(v, _lift_or_none(self.query, v))
             if parent.name in views:
                 views[parent.name] = delta.apply_to(views[parent.name])
             child = parent
         return views
+
+
+def canonical_state(state):
+    """Strip weak types: coerce every leaf to its own (strong) dtype.
+
+    Trigger traces mix host-literal arithmetic into the state, which can
+    flip JAX weak-type flags between input and output.  Per-call jit absorbs
+    that as a one-off retrace; ``lax.scan``/``lax.switch`` instead require
+    bit-stable carry/branch signatures, so both the initial state and every
+    trigger output pass through this normalization."""
+    return jax.tree.map(
+        lambda x: jax.lax.convert_element_type(x, jnp.asarray(x).dtype), state
+    )
 
 
 def _path_to_root(tree: ViewNode, name: str) -> list[ViewNode]:

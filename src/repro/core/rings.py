@@ -56,6 +56,25 @@ class Ring:
     dtype: Any = jnp.float32
     commutative: bool = True
 
+    # Rings ride along as pytree aux metadata (DenseRelation, COOUpdate) and
+    # therefore in jit cache keys and scan-carry treedefs.  Two structurally
+    # identical rings built by separate calls (e.g. sum_ring() in a query
+    # and in a database loader) must compare equal, or a scan carry built
+    # from one would mismatch trigger output built with the other.
+    def _identity(self):
+        return (
+            type(self).__name__,
+            self.name,
+            str(jnp.dtype(self.dtype)),
+            tuple((k, tuple(shp)) for k, shp in self.components.items()),
+        )
+
+    def __eq__(self, other):
+        return isinstance(other, Ring) and self._identity() == other._identity()
+
+    def __hash__(self):
+        return hash(self._identity())
+
     # -- construction ------------------------------------------------------
     def zeros(self, key_shape: Sequence[int] = ()) -> Payload:
         return {

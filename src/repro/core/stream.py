@@ -1,0 +1,313 @@
+"""Fused update-stream executor: one XLA program per update stream.
+
+The per-call trigger path (``IVMEngine.make_trigger``) pays host dispatch,
+pytree flattening, and donation bookkeeping once per update batch — at small
+batch sizes that overhead dominates measured throughput (ISSUE 1; the
+batched-trigger execution path of the F-IVM system paper).  This module
+compiles an *entire multi-relation stream* into a single program:
+
+  1. **Bucketing** — updates are grouped by schedule position and padded to
+     a per-position bucket size.  Padding rows carry key ``0`` and ring-zero
+     payloads: scatter-adding ring 0 is an exact no-op, and indicator
+     maintenance gates its ±1 deltas on per-row transitions, so padded rows
+     are bit-transparent.
+  2. **Stacking** — keys/payloads are stacked into ``[n_steps, B, ...]``
+     device arrays (one host→device transfer per stream).
+  3. **Dispatch** — three compiled shapes, picked by schedule structure:
+
+     * ``scan``   — single-relation streams: ``jax.lax.scan`` over steps,
+       the carry is the engine state.  The loop body is a linear dataflow
+       chain, so XLA updates the donated state buffers in place.
+     * ``rounds`` — periodic mixed schedules (round-robin streams): scan
+       over *rounds*; the body applies one trigger per pattern position in
+       sequence.  Still branch-free linear dataflow — this is the fast path
+       for the paper's round-robin workloads, and each position keeps its
+       own bucket size.
+     * ``switch`` — aperiodic mixed schedules: scan over steps with
+       ``jax.lax.switch`` over the relation id.  An HLO conditional cannot
+       alias untouched carry buffers through its branches (each branch
+       yields a fresh copy of everything it returns), so the state is
+       partitioned into the leaves some trigger actually replaces (threaded
+       through the carry and the switch) and the provably-constant rest
+       (passed as a non-donated loop invariant).  The partition is computed
+       by identity-diffing one representative trigger application per
+       relation.
+
+Every trigger body emits the canonical state signature
+(``ivm.canonical_state``), which is what lets one scan carry serve all
+relations' triggers.  The state is donated at the jit boundary, so a whole
+stream executes with exactly one dispatch and no per-step host round-trip.
+The per-call trigger path is kept as the correctness oracle
+(tests/test_stream.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ivm import IVMEngine, canonical_state
+from .relations import COOUpdate
+
+#: longest schedule period compiled as an unrolled rounds-scan body; longer
+#: periods fall back to switch dispatch to bound compile time
+MAX_ROUNDS_PERIOD = 16
+
+
+@dataclasses.dataclass
+class PreparedStream:
+    """A bucketed, stacked, device-resident update stream."""
+
+    mode: str  # "scan" | "rounds" | "switch"
+    rel_order: tuple[str, ...]  # distinct relations in first-seen order
+    schemas: tuple[tuple[str, ...], ...]  # per-rel_order COO schemas
+    pattern: tuple[str, ...]  # per-position relations ("rounds": one round)
+    xs: Any  # pytree of stacked arrays, leading dim = n_steps / n_rounds
+    n_steps: int
+    buckets: tuple[int, ...]  # padded batch size per pattern position
+    n_tuples: int  # true (unpadded) tuple count across the stream
+
+    @property
+    def signature(self):
+        """Compilation cache key: everything the traced program depends on."""
+        return (self.mode, self.rel_order, self.schemas, self.pattern,
+                self.n_steps, self.buckets)
+
+
+def _schedule_period(sched: Sequence[str]) -> int | None:
+    """Smallest period p ≤ MAX_ROUNDS_PERIOD with sched[i] == sched[i % p]
+    and p dividing len(sched); None if the schedule is aperiodic.  A period
+    must actually repeat (≥ 2 rounds) — otherwise every stream would
+    trivially "tile" once and the rounds body would unroll the whole
+    stream; p == 1 (single relation) is always a real period."""
+    T = len(sched)
+    for p in range(1, min(MAX_ROUNDS_PERIOD, T) + 1):
+        if p > 1 and T // p < 2:
+            break
+        if T % p == 0 and all(sched[i] == sched[i % p] for i in range(T)):
+            return p
+    return None
+
+
+def prepare_stream(
+    engine: IVMEngine, stream: Sequence[tuple[str, COOUpdate]]
+) -> PreparedStream:
+    """Bucket, pad, and stack a ``[(rel, COOUpdate), ...]`` stream."""
+    assert stream, "empty update stream"
+    ring = engine.query.ring
+    sched = [rel for rel, _ in stream]
+    rel_order = tuple(dict.fromkeys(sched))
+    schemas: dict[str, tuple[str, ...]] = {}
+    for rel, upd in stream:
+        assert isinstance(upd, COOUpdate), (
+            "the fused executor takes COO streams; factorized updates go "
+            "through the per-call path")
+        sch = tuple(upd.schema)
+        assert schemas.setdefault(rel, sch) == sch, (
+            f"inconsistent update schemas for {rel}")
+    n_tuples = sum(upd.batch for _, upd in stream)
+    comp_names = tuple(ring.components)
+
+    def stack(upds: list[COOUpdate], bucket: int):
+        padded = [u.pad_to(ring, bucket) for u in upds]
+        keys = jnp.stack([u.keys for u in padded])  # [n, B, k]
+        payload = {c: jnp.stack([u.payload[c] for u in padded])
+                   for c in comp_names}
+        return keys, payload
+
+    period = _schedule_period(sched)
+    if period is not None:
+        # "scan" (single relation, period 1) or "rounds" (periodic pattern):
+        # per-position buckets, xs = tuple of per-position stacks
+        pattern = tuple(sched[:period])
+        cols = [[u for (r, u) in stream[j::period]] for j in range(period)]
+        buckets = tuple(max(u.batch for u in col) for col in cols)
+        xs = tuple(stack(col, b) for col, b in zip(cols, buckets))
+        if period == 1:
+            xs = xs[0]
+        return PreparedStream(
+            mode="scan" if period == 1 else "rounds",
+            rel_order=rel_order,
+            schemas=tuple(schemas[r] for r in rel_order),
+            pattern=pattern,
+            xs=xs,
+            n_steps=len(stream) // period,
+            buckets=buckets,
+            n_tuples=n_tuples,
+        )
+
+    # aperiodic: uniform bucket + key width, switch over the schedule
+    bucket = max(upd.batch for _, upd in stream)
+    k_max = max(len(schemas[r]) for r in rel_order)
+    padded = [u.pad_to(ring, bucket) for _, u in stream]
+    keys = jnp.stack([
+        jnp.pad(u.keys, ((0, 0), (0, k_max - u.keys.shape[1])))
+        for u in padded
+    ])  # [T, B, k_max]
+    payload = {c: jnp.stack([u.payload[c] for u in padded])
+               for c in comp_names}
+    sched_ids = jnp.asarray(np.array([rel_order.index(r) for r in sched],
+                                     np.int32))
+    return PreparedStream(
+        mode="switch",
+        rel_order=rel_order,
+        schemas=tuple(schemas[r] for r in rel_order),
+        pattern=(),
+        xs=(sched_ids, keys, payload),
+        n_steps=len(stream),
+        buckets=(bucket,),
+        n_tuples=n_tuples,
+    )
+
+
+class StreamExecutor:
+    """Compiles and runs fused update streams against one engine.
+
+    Compiled programs are cached per :attr:`PreparedStream.signature`, so a
+    benchmark sweep that replays same-shaped streams compiles once.
+    """
+
+    def __init__(self, engine: IVMEngine):
+        self.engine = engine
+        self._compiled: dict[Any, Any] = {}
+        self._masks: dict[tuple[str, ...], tuple[bool, ...]] = {}
+
+    # ------------------------------------------------------- mutable leaves
+    def _mutable_mask(self, prepared: PreparedStream) -> tuple[bool, ...]:
+        """Per-state-leaf mask: True iff some relation's trigger replaces
+        the leaf.  Computed by identity-diffing one eager trigger
+        application per relation — ``functional_update`` passes untouched
+        leaves through by object identity, so ``a is b`` is exact.  The
+        touched set depends only on the view-tree paths, not on update
+        values, so one representative update per relation suffices."""
+        key = prepared.rel_order
+        if key in self._masks:
+            return self._masks[key]
+        engine = self.engine
+        state = engine.state
+        in_leaves, _ = jax.tree_util.tree_flatten(state)
+        mask = [False] * len(in_leaves)
+        ring = engine.query.ring
+        for rel, sch in zip(prepared.rel_order, prepared.schemas):
+            upd = COOUpdate(
+                sch,
+                jnp.zeros((1, len(sch)), jnp.int32),
+                {c: jnp.zeros((1, *shp), ring.dtype)
+                 for c, shp in ring.components.items()},
+            )
+            out = engine.functional_update(*state, rel, upd)
+            out_leaves = jax.tree_util.tree_leaves(out)
+            assert len(out_leaves) == len(in_leaves)
+            for i, (a, b) in enumerate(zip(in_leaves, out_leaves)):
+                if a is not b:
+                    mask[i] = True
+        self._masks[key] = tuple(mask)
+        return self._masks[key]
+
+    # ---------------------------------------------------------------- build
+    def _build(self, prepared: PreparedStream):
+        engine = self.engine
+        bodies = {rel: engine.trigger_body(rel) for rel in prepared.rel_order}
+        schema_of = dict(zip(prepared.rel_order, prepared.schemas))
+
+        if prepared.mode in ("scan", "rounds"):
+            pattern = prepared.pattern
+
+            def step(state, x):
+                cols = (x,) if prepared.mode == "scan" else x
+                for rel, (keys, payload) in zip(pattern, cols):
+                    state = bodies[rel](
+                        state, COOUpdate(schema_of[rel], keys, payload))
+                return state, None
+
+            def run_stream(state, xs):
+                state = canonical_state(state)
+                state, _ = jax.lax.scan(step, state, xs)
+                return state
+
+            return jax.jit(run_stream, donate_argnums=(0,)), None
+
+        # switch mode: thread only trigger-replaced leaves through the
+        # carry/branches; pass the constant rest as a loop invariant
+        mask = self._mutable_mask(prepared)
+        treedef = jax.tree_util.tree_structure(engine.state)
+        mut_idx = [i for i, m in enumerate(mask) if m]
+        const_idx = [i for i, m in enumerate(mask) if not m]
+
+        def merge(mut_leaves, const_leaves):
+            leaves = [None] * len(mask)
+            for i, leaf in zip(mut_idx, mut_leaves):
+                leaves[i] = leaf
+            for i, leaf in zip(const_idx, const_leaves):
+                leaves[i] = leaf
+            return jax.tree_util.tree_unflatten(treedef, leaves)
+
+        def extract_mut(state):
+            leaves = jax.tree_util.tree_leaves(state)
+            return [leaves[i] for i in mut_idx]
+
+        def run_stream(mut_leaves, const_leaves, xs):
+            mut_leaves = [canonical_state(x) for x in mut_leaves]
+            const_leaves = [canonical_state(x) for x in const_leaves]
+
+            branches = []
+            for rel in prepared.rel_order:
+                sch = schema_of[rel]
+
+                def branch(carry, keys, payload, _body=bodies[rel], _sch=sch):
+                    state = merge(carry, const_leaves)
+                    new = _body(state, COOUpdate(_sch, keys[:, : len(_sch)],
+                                                 payload))
+                    return extract_mut(new)
+
+                branches.append(branch)
+
+            def step(carry, x):
+                sched_t, keys, payload = x
+                return jax.lax.switch(sched_t, branches, carry, keys,
+                                      payload), None
+
+            carry, _ = jax.lax.scan(step, mut_leaves, xs)
+            return carry
+
+        fn = jax.jit(run_stream, donate_argnums=(0,))
+
+        def call(state, xs):
+            leaves = jax.tree_util.tree_leaves(state)
+            mut = [leaves[i] for i in mut_idx]
+            const = [leaves[i] for i in const_idx]
+            new_mut = fn(mut, const, xs)
+            return merge(new_mut, const)
+
+        return call, mask
+
+    def compiled(self, prepared: PreparedStream):
+        entry = self._compiled.get(prepared.signature)
+        if entry is None:
+            entry = self._compiled[prepared.signature] = self._build(prepared)
+        return entry[0]
+
+    # ------------------------------------------------------------------ run
+    def run(self, stream_or_prepared, state=None, update_engine: bool = True,
+            donate_input: bool = False):
+        """Apply the whole stream in one fused call; returns the new state.
+
+        Unless ``donate_input=True``, the input state is copied before the
+        call: the compiled program donates its state argument, and both the
+        engine's state and states derived from it can alias the caller's
+        database buffers (materialized leaf views alias the database)."""
+        prepared = stream_or_prepared
+        if not isinstance(prepared, PreparedStream):
+            prepared = prepare_stream(self.engine, prepared)
+        if state is None:
+            state = self.engine.state
+        if not donate_input:
+            state = jax.tree.map(
+                lambda x: x.copy() if hasattr(x, "copy") else x, state)
+        new_state = self.compiled(prepared)(state, prepared.xs)
+        if update_engine:
+            self.engine.set_state(new_state)
+        return new_state

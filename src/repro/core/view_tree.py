@@ -78,16 +78,19 @@ def build_view_tree(query: Query, vo: VariableOrder, fuse_chains: bool = True) -
             relation=r,
         )
 
-    def rec(n: VONode) -> ViewNode:
-        children = [rec(c) for c in n.children]
+    def rec(n: VONode, parent_var: str | None = None) -> ViewNode:
+        children = [rec(c, n.var) for c in n.children]
         children += [rel_leaf(r) for r in placement.get(n.var, [])]
         assert children, f"variable {n.var} has no relations below it"
         sub = vo.subtree_vars(n.var)
         dep = vo.dep(n.var, query)
-        schema = tuple(
-            v
-            for v in _ordered(query, dep | (free & sub))
-        )
+        ordered = _ordered(query, dep | (free & sub))
+        # layout: the parent node joins this view on parent_var (gathering
+        # B slices during delta propagation) — storing that variable as the
+        # leading axis makes those slices contiguous
+        if parent_var in ordered:
+            ordered = [parent_var] + [v for v in ordered if v != parent_var]
+        schema = tuple(ordered)
         rels = frozenset().union(*[c.rels for c in children])
         bound = n.var not in free
         name = f"V{counter[0]}@{n.var}"
@@ -101,7 +104,7 @@ def build_view_tree(query: Query, vo: VariableOrder, fuse_chains: bool = True) -
             at_var=n.var,
         )
 
-    roots = [rec(r) for r in vo.roots]
+    roots = [rec(r, None) for r in vo.roots]
     if len(roots) == 1:
         tree = roots[0]
     else:  # disconnected query: cross-product join at a synthetic root
@@ -187,7 +190,11 @@ def evaluate_view(
             acc = contract_dense(acc, ind, marg=())
         assert acc is not None
         if premarg and store is not None and node.marg_vars:
-            store[f"W:{node.name}"] = acc
+            # canonical layout (schema first, then the marginalized vars):
+            # consumers of the factorized representation index W's key axes
+            # in node.schema order
+            store[f"W:{node.name}"] = acc.transpose(
+                node.schema + tuple(node.marg_vars))
         for v in node.marg_vars:
             acc = contract_dense(acc, query.lift_rel(v), marg=(v,))
         out = acc.transpose(node.schema)

@@ -1,0 +1,103 @@
+"""Use hypothesis when installed; otherwise a deterministic fallback shim.
+
+The shim supports exactly the subset the test-suite uses — ``@given`` with
+positional or keyword strategies, ``@settings(max_examples=...,
+deadline=...)``, and the ``integers`` / ``lists`` / ``tuples`` strategies —
+by replaying each test body over a fixed number of seeded pseudo-random
+examples.  It keeps tier-1 collectable and meaningful on machines without
+the dependency (declared in requirements-dev.txt).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies
+
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def draw(self, rnd: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rnd):
+            return rnd.randint(self.lo, self.hi)
+
+    class _Lists(_Strategy):
+        def __init__(self, elem: _Strategy, min_size: int = 0,
+                     max_size: int = 8):
+            self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+        def draw(self, rnd):
+            n = rnd.randint(self.min_size, self.max_size)
+            return [self.elem.draw(rnd) for _ in range(n)]
+
+    class _Tuples(_Strategy):
+        def __init__(self, *elems: _Strategy):
+            self.elems = elems
+
+        def draw(self, rnd):
+            return tuple(e.draw(rnd) for e in self.elems)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def lists(elem: _Strategy, *, min_size: int = 0,
+                  max_size: int = 8) -> _Lists:
+            return _Lists(elem, min_size, max_size)
+
+        @staticmethod
+        def tuples(*elems: _Strategy) -> _Tuples:
+            return _Tuples(*elems)
+
+    strategies = _Strategies()
+
+    def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            strats = dict(zip(names, arg_strats))
+            assert not (set(strats) & set(kw_strats)), "duplicate strategy"
+            strats.update(kw_strats)
+            salt = hash(fn.__qualname__) & 0xFFFF
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                max_examples = getattr(
+                    wrapper, "_max_examples",
+                    getattr(fn, "_max_examples", _DEFAULT_MAX_EXAMPLES))
+                for i in range(max_examples):
+                    rnd = random.Random(salt * 100003 + i)
+                    drawn = {k: s.draw(rnd) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # hide the strategy-supplied parameters from pytest's fixture
+            # resolution while keeping the rest (e.g. parametrize argnames)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in strats
+            ])
+            return wrapper
+
+        return deco
+
+
+st = strategies
+
+__all__ = ["given", "settings", "st", "strategies"]

@@ -4,7 +4,7 @@ factorized updates, and cyclic queries with indicator projections."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (COOUpdate, DegreeMRing, DenseRelation,
                         FactorizedUpdate, IVMEngine, Query, add_indicators,

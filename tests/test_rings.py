@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import DegreeMRing, MatrixRing, PyDegreeMRing, PyRelationalRing
 from repro.core.rings import ScalarRing, TupleRing, count_ring, sum_ring
