@@ -1,15 +1,26 @@
 """Kernel microbenchmarks (XLA path on CPU; the Pallas variants target TPU
-and are validated in interpret mode by tests/test_kernels.py)."""
+and are validated in interpret mode by tests/test_kernels.py and
+tests/test_ring_scatter.py).
+
+The ring-scatter section sweeps kernel-on (``compact_xla`` — the key-dedup
+compaction with XLA segment-sum inner, the CPU-runnable kernel path) vs
+kernel-off (``jnp`` — the legacy ``.at[].add``) across batch × segment
+space × payload width, including the degree-m cofactor-ring payload, and
+writes ``BENCH_kernels.json``."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import ops, scatter_ops
 
 from .common import emit
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
 
 
 def _time(fn, reps=5):
@@ -22,9 +33,62 @@ def _time(fn, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
-def run(seed: int = 0):
+def _ring_scatter_sweep(rng, rows, results):
+    """Kernel-on vs kernel-off ⊎ sweep: B×S×d, duplicate-heavy batches."""
+    cases = [
+        # (label, B, S, d, dup_keys)  — d=73 is the degree-8 cofactor ring
+        ("scalar/small_domain", 256, 128, 1, 64),
+        ("scalar/mid_domain", 256, 4096, 1, 64),
+        ("scalar/housing_domain", 1024, 65536, 1, 256),
+        ("cofactor_d73/small_domain", 256, 128, 73, 64),
+        ("cofactor_d73/mid_domain", 256, 4096, 73, 64),
+    ]
+    for label, B, S, d, dups in cases:
+        view = jax.numpy.asarray(rng.standard_normal((S, d)).astype(np.float32))
+        ids = jax.numpy.asarray(rng.integers(0, dups, size=B).astype(np.int32))
+        vals = jax.numpy.asarray(rng.standard_normal((B, d)).astype(np.float32))
+        case = {}
+        for backend in ("jnp", "compact_xla"):
+            t = _time(lambda b=backend: scatter_ops.scatter_add_flat(
+                view, ids, vals, backend=b))
+            case[backend] = t
+            results.append(dict(op="ring_scatter", case=label, batch=B,
+                                segments=S, width=d, active_keys=dups,
+                                backend=backend, us_per_call=round(t * 1e6, 1)))
+        rows.append((f"kernels/ring_scatter/{label}/B={B},S={S},d={d}",
+                     round(case["jnp"] * 1e6, 1),
+                     f"compact_xla_us={case['compact_xla']*1e6:.1f};"
+                     f"kernel_on_speedup={case['jnp']/case['compact_xla']:.2f}x"))
+    # fused gather-multiply-scatter vs gather-then-scatter composition
+    S, Sg, B = 4096, 128, 512
+    view = jax.numpy.asarray(rng.standard_normal((S, 1)).astype(np.float32))
+    src = jax.numpy.asarray(rng.standard_normal((Sg, 1)).astype(np.float32))
+    out_ids = jax.numpy.asarray(rng.integers(0, S, size=B).astype(np.int32))
+    in_ids = jax.numpy.asarray(rng.integers(0, Sg, size=B).astype(np.int32))
+    scale = jax.numpy.asarray(rng.standard_normal(B).astype(np.float32))
+    case = {}
+    for backend in ("jnp", "compact_xla"):
+        t = _time(lambda b=backend: scatter_ops.gather_mul_scatter_flat(
+            view, out_ids, src, in_ids, scale, backend=b))
+        case[backend] = t
+        results.append(dict(op="gather_mul_scatter", case="scalar", batch=B,
+                            segments=S, width=1, src_segments=Sg,
+                            backend=backend, us_per_call=round(t * 1e6, 1)))
+    rows.append((f"kernels/gather_mul_scatter/B={B},S={S},Sg={Sg}",
+                 round(case["jnp"] * 1e6, 1),
+                 f"compact_xla_us={case['compact_xla']*1e6:.1f}"))
+
+
+def run(seed: int = 0, json_path: str | None = JSON_PATH):
     rng = np.random.default_rng(seed)
     rows = []
+    results: list[dict] = []
+    _ring_scatter_sweep(rng, rows, results)
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump({"benchmark": "ring_scatter_kernels",
+                       "results": results}, f, indent=2)
+        print(f"# wrote {os.path.abspath(json_path)}")
     B, m = 4096, 32
     x = rng.standard_normal((B, m)).astype(np.float32)
     w = rng.standard_normal((B,)).astype(np.float32)

@@ -1,10 +1,19 @@
-"""Fused stream executor vs per-call trigger dispatch (ISSUE 1).
+"""Fused stream executor vs per-call trigger dispatch (ISSUE 1 / ISSUE 2).
 
-Retailer sum-aggregate stream, every maintenance strategy × batch size,
-measured both through the fused executor (one XLA program per stream) and
-the per-call jitted-trigger loop.  Besides the CSV rows this writes
-``BENCH_stream.json`` so the perf trajectory is machine-readable across
-PRs.
+Three fused-stream sweeps, all written to ``BENCH_stream.json``:
+
+* **retailer_sum_aggregate** — strategy × batch size, fused vs per-call
+  (the PR-1 trajectory rows, kernel-off so numbers stay comparable).
+* **housing_sum_aggregate** — the star schema's wide postcode dictionary
+  (``pc=4096``), fivm, kernel-on vs kernel-off scatter backends.
+* **retailer_cofactor_degree_m** — degree-m cofactor-ring payloads
+  (the (c, s, Q) triple flattens to a ``1+m+m²`` feature plane in the
+  scatter shim), fivm, kernel-on vs kernel-off.
+
+Kernel-on on this CPU container means the ``compact_xla`` dispatch path
+(key-dedup compaction; the Pallas kernels themselves target TPU and are
+pinned bit-identical by tests/test_ring_scatter.py in interpret mode);
+kernel-off is the legacy ``.at[].add`` scatter.
 """
 from __future__ import annotations
 
@@ -14,50 +23,89 @@ import os
 import numpy as np
 
 from repro.core import IVMEngine, Query, sum_ring
+from repro.core.apps import regression
+from repro.kernels import scatter_ops
 
-from .common import (RETAILER_DOMS, RETAILER_RELATIONS, emit, retailer_vo,
+from .common import (HOUSING_DOMS, HOUSING_RELATIONS, RETAILER_DOMS,
+                     RETAILER_RELATIONS, emit, housing_vo, retailer_vo,
                      run_engine_stream, synth_db, update_stream)
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_stream.json")
 
 
+def _measure(q, db, vo, strategy, stream, repeats, backend=None):
+    """(fused tps, per-call tps) under an optional scatter-backend override."""
+    with scatter_ops.use_backend(backend):
+        eng_f = IVMEngine.build(q, db, var_order=vo, strategy=strategy)
+        tps_fused, _ = run_engine_stream(eng_f, stream, fused=True,
+                                         repeats=repeats)
+        eng_p = IVMEngine.build(q, db, var_order=vo, strategy=strategy)
+        tps_percall, _ = run_engine_stream(eng_p, stream, fused=False,
+                                           repeats=repeats)
+    return tps_fused, tps_percall
+
+
 def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
         strategies=("fivm", "fivm_1", "dbt", "reeval"), repeats: int = 5,
-        json_path: str | None = JSON_PATH):
+        json_path: str | None = JSON_PATH,
+        kernel_backends=("jnp", "compact_xla")):
     rng = np.random.default_rng(seed)
     ring = sum_ring()
+    rows, results = [], []
+
+    def record(dataset, strategy, batch, n_b, backend, tps_fused, tps_percall):
+        speedup = tps_fused / tps_percall
+        rows.append((f"stream/{dataset}/{strategy}"
+                     f"{'' if backend is None else '/' + backend}/b={batch}",
+                     round(1e6 * batch / tps_fused, 1),
+                     f"fused_tps={tps_fused:.0f};percall_tps={tps_percall:.0f};"
+                     f"speedup={speedup:.2f}x"))
+        results.append(dict(
+            dataset=dataset, strategy=strategy, batch=batch, n_batches=n_b,
+            scatter_backend=backend or "auto",
+            fused_tuples_per_s=round(tps_fused),
+            percall_tuples_per_s=round(tps_percall),
+            speedup=round(speedup, 2)))
+
+    # -- retailer sum aggregate: strategy × batch (PR-1 trajectory rows) ----
     q = Query(relations=RETAILER_RELATIONS, free_vars=(), ring=ring,
               domains=RETAILER_DOMS, lifts={"units": ("value",)})
     db = synth_db(RETAILER_RELATIONS, RETAILER_DOMS, ring, rng)
-    rows, results = [], []
     for strategy in strategies:
         for batch in batches:
             stream = update_stream(RETAILER_RELATIONS, RETAILER_DOMS, ring,
                                    rng, batch, n_batches)
-            eng_f = IVMEngine.build(q, db, var_order=retailer_vo(),
-                                    strategy=strategy)
-            tps_fused, _ = run_engine_stream(eng_f, stream, fused=True,
-                                             repeats=repeats)
-            eng_p = IVMEngine.build(q, db, var_order=retailer_vo(),
-                                    strategy=strategy)
-            tps_percall, _ = run_engine_stream(eng_p, stream, fused=False,
-                                               repeats=repeats)
-            speedup = tps_fused / tps_percall
-            rows.append((f"stream/retailer_sum/{strategy}/b={batch}",
-                         round(1e6 * batch * n_batches / tps_fused /
-                               n_batches, 1),
-                         f"fused_tps={tps_fused:.0f};"
-                         f"percall_tps={tps_percall:.0f};"
-                         f"speedup={speedup:.2f}x"))
-            results.append(dict(
-                dataset="retailer_sum_aggregate",
-                strategy=strategy,
-                batch=batch,
-                n_batches=n_batches,
-                fused_tuples_per_s=round(tps_fused),
-                percall_tuples_per_s=round(tps_percall),
-                speedup=round(speedup, 2),
-            ))
+            tps_f, tps_p = _measure(q, db, retailer_vo(), strategy, stream,
+                                    repeats)
+            record("retailer_sum_aggregate", strategy, batch, n_batches,
+                   None, tps_f, tps_p)
+
+    # -- housing star schema: wide pc dictionary, kernel-on vs kernel-off --
+    hq = Query(relations=HOUSING_RELATIONS, free_vars=(), ring=ring,
+               domains=HOUSING_DOMS, lifts={"h2": ("value",)})
+    hdb = synth_db(HOUSING_RELATIONS, HOUSING_DOMS, ring, rng,
+                   density=0.05)
+    for backend in kernel_backends:
+        for batch in batches:
+            stream = update_stream(HOUSING_RELATIONS, HOUSING_DOMS, ring,
+                                   rng, batch, n_batches)
+            tps_f, tps_p = _measure(hq, hdb, housing_vo(), "fivm", stream,
+                                    repeats, backend=backend)
+            record("housing_sum_aggregate", "fivm", batch, n_batches,
+                   backend, tps_f, tps_p)
+
+    # -- degree-m cofactor ring: wide payloads through the scatter shim ----
+    cq = regression.cofactor_query(RETAILER_RELATIONS, RETAILER_DOMS)
+    cdb = synth_db(RETAILER_RELATIONS, RETAILER_DOMS, cq.ring, rng)
+    for backend in kernel_backends:
+        for batch in batches[:2]:
+            stream = update_stream(RETAILER_RELATIONS, RETAILER_DOMS, cq.ring,
+                                   rng, batch, 10)
+            tps_f, tps_p = _measure(cq, cdb, retailer_vo(), "fivm", stream,
+                                    max(2, repeats - 3), backend=backend)
+            record("retailer_cofactor_degree_m", "fivm", batch, 10,
+                   backend, tps_f, tps_p)
+
     if json_path is not None:
         with open(json_path, "w") as f:
             json.dump({"benchmark": "fused_stream_executor",

@@ -152,7 +152,14 @@ def marginalize_dense(
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class BatchedDelta:
-    """payload leaves: [B, *domains(dense_schema), *comp_shape]."""
+    """payload leaves: [B, *domains(dense_schema), *comp_shape].
+
+    ``pending_gather`` is a deferred sibling-view gather ``(src_flat [Sg],
+    in_ids [B])``: for scalar-payload rings, ``join_dense`` against a view
+    fully bound by the delta's COO vars is just a per-row gather-multiply,
+    so it is left symbolic and fused with the eventual scatter in
+    ``apply_to`` (the gather-⊗-⊎ kernel); any operation that needs the
+    materialized payload forces it first (:meth:`_force`)."""
 
     coo_schema: tuple[str, ...]
     dense_schema: tuple[str, ...]
@@ -160,6 +167,7 @@ class BatchedDelta:
     ring: Ring
     payload: Payload
     dense_domains: tuple[int, ...] = ()
+    pending_gather: tuple | None = None
 
     @property
     def batch(self) -> int:
@@ -179,9 +187,38 @@ class BatchedDelta:
             dense_domains=(),
         )
 
+    # -- deferred sibling gather --------------------------------------------
+    def _defer_ok(self, view: DenseRelation) -> bool:
+        """A join against ``view`` can stay symbolic when the ring payload
+        is a single scalar (the multiply is elementwise on [B]), the delta
+        carries no dense axes, and every view var is COO-bound (the join is
+        a pure per-row gather)."""
+        ring = self.ring
+        if len(ring.components) != 1 or self.pending_gather is not None:
+            return False
+        comp = next(iter(ring.components))
+        if ring.components[comp] != () or self.dense_schema:
+            return False
+        return bool(view.schema) and all(v in self.coo_schema
+                                         for v in view.schema)
+
+    def _force(self) -> "BatchedDelta":
+        """Materialize a deferred sibling gather into the payload."""
+        if self.pending_gather is None:
+            return self
+        src_flat, ids = self.pending_gather
+        comp = next(iter(self.ring.components))
+        g = jnp.take(src_flat, ids, axis=0, mode="clip")
+        payload = {comp: self.payload[comp] * g}
+        return dataclasses.replace(self, payload=payload, pending_gather=None)
+
     # -- lift-and-marginalize one variable ---------------------------------
     def marginalize(self, var: str, lift_rel: DenseRelation | None) -> "BatchedDelta":
         if var in self.coo_schema:
+            if (self.pending_gather is not None and self.batch > 1
+                    and len(self.coo_schema) == 1):
+                # batch collapse would sum rows: materialize the gather first
+                return self._force().marginalize(var, lift_rel)
             i = self.coo_schema.index(var)
             payload = self.payload
             if lift_rel is not None:
@@ -224,6 +261,17 @@ class BatchedDelta:
         dense-shared vars align elementwise; fresh vars of V become new
         dense axes."""
         ring = self.ring
+        if self._defer_ok(view):
+            from repro.kernels import scatter_ops
+
+            comp = next(iter(ring.components))
+            ids = scatter_ops.linear_ids(
+                jnp.stack([self.key_col(v) for v in view.schema], axis=1),
+                view.domains)
+            src_flat = view.payload[comp].reshape(-1)
+            return dataclasses.replace(self, pending_gather=(src_flat, ids))
+        if self.pending_gather is not None:
+            return self._force().join_dense(view)
         shared_coo = [v for v in view.schema if v in self.coo_schema]
         shared_dense = [v for v in view.schema if v in self.dense_schema]
         fresh = [v for v in view.schema if v not in shared_coo and v not in shared_dense]
@@ -281,23 +329,54 @@ class BatchedDelta:
         )
 
     # -- application ---------------------------------------------------------
-    def apply_to(self, view: DenseRelation) -> DenseRelation:
-        """view ⊎ δ : scatter-add into the materialized dense view."""
+    def apply_to(self, view: DenseRelation,
+                 backend: str | None = None) -> DenseRelation:
+        """view ⊎ δ : scatter-add into the materialized dense view.
+
+        Scatters route through the ring scatter dispatch layer
+        (``repro.kernels.scatter_ops``); a pending sibling gather fuses
+        into one gather-⊗-⊎ kernel call."""
         ring = self.ring
         assert set(view.schema) == set(self.coo_schema) | set(self.dense_schema), (
             view.schema, self.coo_schema, self.dense_schema)
         coo_axes = [view.schema.index(v) for v in self.coo_schema]
         dense_axes = [view.schema.index(v) for v in self.dense_schema]
+        from repro.kernels import scatter_ops
+
+        if coo_axes and not dense_axes:
+            # pure-COO delta: one flat scatter, each view axis indexed by
+            # its own key column — no transpose of the materialized view
+            keys = jnp.stack([self.key_col(v) for v in view.schema], axis=1)
+            if self.pending_gather is not None:
+                src_flat, in_ids = self.pending_gather
+                comp = next(iter(ring.components))
+                new_payload = scatter_ops.gather_mul_scatter_payload(
+                    view.payload, view.domains, keys, src_flat, in_ids,
+                    self.payload[comp], ring, backend=backend)
+            else:
+                new_payload = scatter_ops.scatter_add_payload(
+                    view.payload, view.domains, keys, self.payload, ring,
+                    backend=backend)
+            return DenseRelation(view.schema, ring, new_payload)
+        slf = self._force()
+        if coo_axes:
+            coo_doms = tuple(view.domain_of(v) for v in slf.coo_schema)
+            resolved = scatter_ops.resolve_backend(
+                scatter_ops._comp_width(coo_doms), slf.batch,
+                sum(scatter_ops._comp_width(view.payload[c].shape[1:])
+                    for c in ring.components), backend)
+            if resolved != "jnp" and scatter_ops.kernelable(
+                    ring, view.payload, slf.payload):
+                return slf._apply_mixed_kernel(view, coo_axes, dense_axes,
+                                               resolved)
+        return slf._apply_mixed_jnp(view, coo_axes, dense_axes)
+
+    def _apply_mixed_jnp(self, view: DenseRelation, coo_axes, dense_axes
+                         ) -> DenseRelation:
+        """Legacy mixed COO×dense application (XLA scatter / plain add)."""
+        ring = self.ring
         nk = len(view.schema)
         new_payload = {}
-        if coo_axes and not dense_axes:
-            # pure-COO delta: index each view axis by its own key column —
-            # no transpose of the materialized view, whatever its layout
-            idx = tuple(self.key_col(v) for v in view.schema)
-            for comp in ring.components:
-                new_payload[comp] = view.payload[comp].at[idx].add(
-                    self.payload[comp])
-            return DenseRelation(view.schema, ring, new_payload)
         for comp, shp in ring.components.items():
             arr = view.payload[comp]
             # move coo axes to the front
@@ -318,6 +397,49 @@ class BatchedDelta:
             new_payload[comp] = jnp.transpose(arrp, inv)
         return DenseRelation(view.schema, ring, new_payload)
 
+    def _apply_mixed_kernel(self, view: DenseRelation, coo_axes, dense_axes,
+                            backend: str) -> DenseRelation:
+        """Mixed COO×dense application through the kernel dispatch: the coo
+        axes linearize to segment ids; the dense axes and ring components
+        flatten into one [S_coo, d] feature plane per the scatter shim."""
+        from repro.kernels import scatter_ops
+
+        ring = self.ring
+        nk = len(view.schema)
+        coo_doms = tuple(view.domain_of(v) for v in self.coo_schema)
+        S = scatter_ops._comp_width(coo_doms)
+        B = self.batch
+        view_planes, val_planes, metas = [], [], []
+        for comp, shp in ring.components.items():
+            arr = view.payload[comp]
+            perm = coo_axes + dense_axes + list(range(nk, arr.ndim))
+            inv = [perm.index(i) for i in range(arr.ndim)]
+            arrp = jnp.transpose(arr, perm)
+            dp = self.payload[comp]
+            d_perm = [0] + [1 + self.dense_schema.index(view.schema[i])
+                            for i in dense_axes] \
+                + list(range(1 + len(self.dense_schema), dp.ndim))
+            dp = jnp.transpose(dp, d_perm)
+            metas.append((comp, arrp.shape, inv))
+            view_planes.append(arrp.reshape(S, -1))
+            val_planes.append(dp.reshape(B, -1))
+        flat_view = view_planes[0] if len(view_planes) == 1 else \
+            jnp.concatenate(view_planes, axis=1)
+        flat_vals = val_planes[0] if len(val_planes) == 1 else \
+            jnp.concatenate(val_planes, axis=1)
+        ids = scatter_ops.linear_ids(
+            jnp.stack([self.key_col(v) for v in self.coo_schema], axis=1),
+            coo_doms)
+        out = scatter_ops.scatter_add_flat(flat_view, ids, flat_vals,
+                                           backend=backend)
+        new_payload, off = {}, 0
+        for comp, pshape, inv in metas:
+            w = scatter_ops._comp_width(pshape[len(coo_doms):])
+            plane = out[:, off:off + w].astype(ring.dtype)
+            new_payload[comp] = jnp.transpose(plane.reshape(pshape), inv)
+            off += w
+        return DenseRelation(view.schema, ring, new_payload)
+
     def densify(self) -> DenseRelation:
         """Materialize into a dense relation over coo+dense schema (testing,
         and root-result deltas for unmaterialized ancestors)."""
@@ -327,10 +449,11 @@ class BatchedDelta:
     def total(self) -> Payload:
         """Sum payload over batch and all dense axes (for scalar-keyed roots)."""
         assert not self.coo_schema, "total() only valid once all coo vars are marginalized"
+        slf = self._force()
         out = {}
-        for comp, shp in self.ring.components.items():
-            arr = self.payload[comp]
-            axes = tuple(range(0, 1 + len(self.dense_schema)))
+        for comp, shp in slf.ring.components.items():
+            arr = slf.payload[comp]
+            axes = tuple(range(0, 1 + len(slf.dense_schema)))
             out[comp] = jnp.sum(arr, axis=axes)
         return out
 

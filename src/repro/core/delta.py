@@ -150,26 +150,61 @@ def _lift_or_none(query: Query, var: str):
     return query.lift_rel(var)
 
 
-def _should_densify(path, upd: COOUpdate, query: Query,
-                    min_batch: int = 32) -> bool:
-    """True when propagation would grow dense axes (sibling vars outside the
-    update's schema) AND the batch is large enough that per-row propagation
-    costs more than one dense-delta pass."""
-    if upd.batch < min_batch:
-        return False
+def _should_densify(path, upd: COOUpdate, query: Query) -> bool:
+    """Cost-based densify planner: walk the delta path once per
+    representation and compare modeled element counts (ROADMAP cost model).
+
+    * **Row (COO) propagation** streams ``[B, D_dense...]`` slices: each
+      node costs ``B_eff · ∏ dense-axis domains``, where dense axes are the
+      sibling/indicator variables the update doesn't bind, and ``B_eff``
+      drops to 1 once the COO schema empties (batch collapse).
+    * **Dense-delta propagation** materializes one relation over the
+      delta's variable set: the leaf pays the full update-schema domain
+      product (the initial scatter), and each node pays the domain product
+      of the current delta schema after sibling joins.
+
+    Densify when the dense walk is strictly cheaper.  Updates that bind
+    every sibling variable never grow dense axes, so the row walk is the
+    factorized fast path and wins regardless of batch size; dimension-table
+    updates (wide sibling extents, e.g. Item in the retailer schema) tip to
+    the dense delta well below the old flat batch-32 threshold."""
+    B = upd.batch
+    dom = query.domains
     bound = set(upd.schema)
+
+    def extent(vars_):
+        e = 1
+        for v in vars_:
+            e *= int(dom[v])
+        return e
+
+    coo = set(upd.schema)  # row delta: vars still COO-bound
+    row_dense: set[str] = set()  # row delta: dense axes grown so far
+    dense_vars = set(upd.schema)  # dense delta: current schema
+    cost_row = B  # leaf: stream the batch
+    cost_dense = extent(upd.schema)  # leaf: materialize the dense delta
+    grew_dense = False
     child = path[0]
     for node in path[1:]:
-        for sib in node.children:
-            if sib is child:
-                continue
-            if set(sib.schema) - bound:
-                return True
+        sib_schemas = [set(sib.schema) for sib in node.children
+                       if sib is not child]
         if node.indicator is not None:
-            if set(node.indicator[1]) - bound:
-                return True
+            sib_schemas.append(set(node.indicator[1]))
+        for sch in sib_schemas:
+            row_dense |= sch - bound
+            dense_vars |= sch
+        grew_dense = grew_dense or bool(row_dense)
+        b_eff = B if coo else 1
+        cost_row += b_eff * extent(row_dense)
+        cost_dense += extent(dense_vars)
+        for v in node.marg_vars:
+            coo.discard(v)
+            row_dense.discard(v)
+            dense_vars.discard(v)
         child = node
-    return False
+    if not grew_dense:
+        return False  # fully-bound update: pure-COO row propagation is O(B)
+    return cost_dense < cost_row
 
 
 def _densified_delta(query: Query, rel: str, upd: COOUpdate) -> BatchedDelta:

@@ -147,6 +147,8 @@ class IndicatorState:
         gathers pre-update state once per row); the data pipeline dedupes
         batches before indicator-bearing updates.
         """
+        from repro.kernels import scatter_ops
+
         ring = query.ring
         cols = [upd.schema.index(v) for v in self.proj]
         proj_keys = upd.keys[:, cols]
@@ -155,10 +157,16 @@ class IndicatorState:
         was_nz = ~ring.is_zero(old_payload)
         now_nz = ~ring.is_zero(new_payload)
         dcount = now_nz.astype(jnp.int32) - was_nz.astype(jnp.int32)  # [B]
-        idx = tuple(proj_keys[:, i] for i in range(len(self.proj)))
-        new_counts = self.counts.at[idx].add(dcount)
-        was_pos = self.counts[idx] > 0
-        now_pos = new_counts[idx] > 0
+        # counts maintenance runs on the linearized key plane shared with
+        # the scatter subsystem: one flat int32 scatter + two flat gathers
+        # instead of k-dimensional indexing (counts stay int32, so the
+        # scatter itself keeps the exact XLA path)
+        ids = scatter_ops.linear_ids(proj_keys, self.counts.shape)
+        counts_flat = self.counts.reshape(-1)
+        new_counts_flat = counts_flat.at[ids].add(dcount)
+        new_counts = new_counts_flat.reshape(self.counts.shape)
+        was_pos = counts_flat[ids] > 0
+        now_pos = new_counts_flat[ids] > 0
         dval = now_pos.astype(ring.dtype) - was_pos.astype(ring.dtype)  # [B] ∈ {-1,0,1}
         # a row can only flip ∃ if it changed its own tuple's zero-ness; this
         # gate is a no-op for legal (duplicate-free) batches and makes

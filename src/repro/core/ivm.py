@@ -228,6 +228,11 @@ class IVMEngine:
         return views, base, indicators
 
     def _bump_base(self, rel: DenseRelation, upd) -> DenseRelation:
+        """Base-relation ⊎: COO batches go through the ring scatter
+        dispatch layer (``DenseRelation.scatter_add``), which resolves the
+        kernel backend at trace time — the choice is baked into the
+        compiled trigger / stream program, so scan and switch bodies stay
+        branch-free and donation-compatible."""
         if isinstance(upd, FactorizedUpdate):
             dense = upd.densify(self.query.ring).transpose(rel.schema)
             return rel.add(dense)

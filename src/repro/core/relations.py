@@ -65,15 +65,22 @@ class DenseRelation:
         rel = cls.zeros(schema, ring, domains)
         return rel.scatter_add(keys, payload)
 
-    def scatter_add(self, keys: jnp.ndarray, payload: Payload) -> "DenseRelation":
-        """keys: [B, k] int32; payload leaves: [B, *comp]."""
+    def scatter_add(self, keys: jnp.ndarray, payload: Payload,
+                    backend: str | None = None) -> "DenseRelation":
+        """keys: [B, k] int32; payload leaves: [B, *comp].
+
+        ⊎ routes through the ring scatter dispatch layer
+        (``repro.kernels.scatter_ops``): keys linearize to flat segment ids
+        and the payload pytree flattens to one ``[S, d]`` plane for the
+        Pallas kernel; the ``jnp`` backend (CPU default) is the legacy
+        multi-index ``.at[idx].add``, bit-identical to the seed."""
         k = len(self.schema)
         assert keys.ndim == 2 and keys.shape[1] == k, (keys.shape, self.schema)
-        idx = tuple(keys[:, i] for i in range(k))
-        new = {
-            comp: self.payload[comp].at[idx].add(payload[comp])
-            for comp in self.ring.components
-        }
+        from repro.kernels import scatter_ops
+
+        new = scatter_ops.scatter_add_payload(
+            self.payload, self.domains, keys, payload, self.ring,
+            backend=backend)
         return DenseRelation(self.schema, self.ring, new)
 
     def gather(self, keys: jnp.ndarray) -> Payload:

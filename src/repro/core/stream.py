@@ -18,11 +18,15 @@ compiles an *entire multi-relation stream* into a single program:
      * ``scan``   — single-relation streams: ``jax.lax.scan`` over steps,
        the carry is the engine state.  The loop body is a linear dataflow
        chain, so XLA updates the donated state buffers in place.
-     * ``rounds`` — periodic mixed schedules (round-robin streams): scan
-       over *rounds*; the body applies one trigger per pattern position in
-       sequence.  Still branch-free linear dataflow — this is the fast path
-       for the paper's round-robin workloads, and each position keeps its
-       own bucket size.
+     * ``rounds`` — (near-)periodic mixed schedules: scan over *rounds*;
+       the body applies one trigger per pattern position in sequence.
+       Still branch-free linear dataflow — this is the fast path for the
+       paper's round-robin workloads, and each position keeps its own
+       bucket size.  Schedules are canonicalized by shift-matching
+       (``sched[i] == sched[i-p]``), so rotated streams and streams ending
+       in a partial round compile as rounds too — the trailing partial
+       round is applied once after the scan instead of forcing the whole
+       stream into switch dispatch.
      * ``switch`` — aperiodic mixed schedules: scan over steps with
        ``jax.lax.switch`` over the relation id.  An HLO conditional cannot
        alias untouched carry buffers through its branches (each branch
@@ -69,25 +73,33 @@ class PreparedStream:
     n_steps: int
     buckets: tuple[int, ...]  # padded batch size per pattern position
     n_tuples: int  # true (unpadded) tuple count across the stream
+    tail: Any = ()  # per-position (keys, payload) of the trailing partial round
+    tail_len: int = 0
 
     @property
     def signature(self):
         """Compilation cache key: everything the traced program depends on."""
         return (self.mode, self.rel_order, self.schemas, self.pattern,
-                self.n_steps, self.buckets)
+                self.n_steps, self.buckets, self.tail_len)
 
 
 def _schedule_period(sched: Sequence[str]) -> int | None:
-    """Smallest period p ≤ MAX_ROUNDS_PERIOD with sched[i] == sched[i % p]
-    and p dividing len(sched); None if the schedule is aperiodic.  A period
-    must actually repeat (≥ 2 rounds) — otherwise every stream would
+    """Smallest period p ≤ MAX_ROUNDS_PERIOD with sched[i] == sched[i - p]
+    for every i ≥ p; None if the schedule is aperiodic.
+
+    This is schedule canonicalization by shift-matching: the canonical
+    pattern is simply the first p positions, so rotated round-robin streams
+    (a stream that starts mid-round) and near-periodic streams with a
+    trailing partial round all canonicalize to (pattern, n_full_rounds,
+    tail) instead of falling back to switch dispatch.  A period must
+    actually repeat (≥ 2 full rounds) — otherwise every stream would
     trivially "tile" once and the rounds body would unroll the whole
     stream; p == 1 (single relation) is always a real period."""
     T = len(sched)
     for p in range(1, min(MAX_ROUNDS_PERIOD, T) + 1):
         if p > 1 and T // p < 2:
             break
-        if T % p == 0 and all(sched[i] == sched[i % p] for i in range(T)):
+        if all(sched[i] == sched[i - p] for i in range(p, T)):
             return p
     return None
 
@@ -121,11 +133,19 @@ def prepare_stream(
     period = _schedule_period(sched)
     if period is not None:
         # "scan" (single relation, period 1) or "rounds" (periodic pattern):
-        # per-position buckets, xs = tuple of per-position stacks
+        # per-position buckets, xs = tuple of per-position stacks.  A
+        # near-periodic schedule leaves a trailing partial round: its
+        # updates ride along per position (sharing the position's bucket)
+        # and the compiled program applies them once after the rounds scan.
         pattern = tuple(sched[:period])
         cols = [[u for (r, u) in stream[j::period]] for j in range(period)]
+        n_full = len(stream) // period
+        tail_len = len(stream) % period
         buckets = tuple(max(u.batch for u in col) for col in cols)
-        xs = tuple(stack(col, b) for col, b in zip(cols, buckets))
+        xs = tuple(stack(col[:n_full], b) for col, b in zip(cols, buckets))
+        tail_upds = [cols[j][n_full].pad_to(ring, buckets[j])
+                     for j in range(tail_len)]
+        tail = tuple((u.keys, u.payload) for u in tail_upds)
         if period == 1:
             xs = xs[0]
         return PreparedStream(
@@ -134,9 +154,11 @@ def prepare_stream(
             schemas=tuple(schemas[r] for r in rel_order),
             pattern=pattern,
             xs=xs,
-            n_steps=len(stream) // period,
+            n_steps=n_full,
             buckets=buckets,
             n_tuples=n_tuples,
+            tail=tail,
+            tail_len=tail_len,
         )
 
     # aperiodic: uniform bucket + key width, switch over the schedule
@@ -215,6 +237,7 @@ class StreamExecutor:
 
         if prepared.mode in ("scan", "rounds"):
             pattern = prepared.pattern
+            tail_pattern = pattern[:prepared.tail_len]
 
             def step(state, x):
                 cols = (x,) if prepared.mode == "scan" else x
@@ -223,9 +246,13 @@ class StreamExecutor:
                         state, COOUpdate(schema_of[rel], keys, payload))
                 return state, None
 
-            def run_stream(state, xs):
+            def run_stream(state, xs, tail):
                 state = canonical_state(state)
                 state, _ = jax.lax.scan(step, state, xs)
+                # trailing partial round of a near-periodic schedule
+                for rel, (keys, payload) in zip(tail_pattern, tail):
+                    state = bodies[rel](
+                        state, COOUpdate(schema_of[rel], keys, payload))
                 return state
 
             return jax.jit(run_stream, donate_argnums=(0,)), None
@@ -275,7 +302,7 @@ class StreamExecutor:
 
         fn = jax.jit(run_stream, donate_argnums=(0,))
 
-        def call(state, xs):
+        def call(state, xs, tail=()):
             leaves = jax.tree_util.tree_leaves(state)
             mut = [leaves[i] for i in mut_idx]
             const = [leaves[i] for i in const_idx]
@@ -303,11 +330,14 @@ class StreamExecutor:
         if not isinstance(prepared, PreparedStream):
             prepared = prepare_stream(self.engine, prepared)
         if state is None:
+            assert update_engine or not donate_input, (
+                "donating the engine's own state without updating the engine "
+                "would leave it pointing at deleted buffers")
             state = self.engine.state
         if not donate_input:
             state = jax.tree.map(
                 lambda x: x.copy() if hasattr(x, "copy") else x, state)
-        new_state = self.compiled(prepared)(state, prepared.xs)
+        new_state = self.compiled(prepared)(state, prepared.xs, prepared.tail)
         if update_engine:
             self.engine.set_state(new_state)
         return new_state

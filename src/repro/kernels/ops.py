@@ -5,6 +5,12 @@ Each op pads inputs to block multiples, dispatches to the Pallas kernel
 reference path, and unpads.  ``backend=`` : "pallas" | "interpret" | "jnp".
 On this CPU container the default is "jnp" (XLA), with interpret mode used
 by the kernel test suite; on TPU the default flips to "pallas".
+
+The ring scatter subsystem (⊎ into materialized views — the hot path of
+every view-maintenance trigger) lives in ``scatter_ops.py``: it adds key
+linearization, a payload-pytree shim, key-dedup compaction, and a cost
+heuristic on top of the ``ring_scatter.py`` kernels, and is what the core
+(``DenseRelation.scatter_add`` / ``BatchedDelta.apply_to``) calls.
 """
 from __future__ import annotations
 

@@ -1,0 +1,160 @@
+"""Pallas TPU kernels for the ring scatter subsystem (⊎ into dense views).
+
+F-IVM's trigger cost is dominated by ⊎ — scatter-adding a delta batch into
+a materialized view — and the sibling gathers that feed it.  XLA lowers a
+generic scatter to a per-row serialized loop on CPU/TPU; the TPU-native
+formulation is the same one-hot matmul used by ``segment_ring_sum``, here
+generalized to *accumulate into an existing view* so the whole ⊎ is one
+kernel:
+
+  ``scatter_add_onehot``     out = view + 1h(ids)ᵀ · values
+  ``gather_mul_scatter``     out = view + 1h(out_ids)ᵀ · (scale ⊙ 1h(in_ids) · src)
+
+Both build their one-hot blocks on the fly in VMEM (the one-hot matrix
+never exists in HBM) and run the contraction on the MXU.  Grid =
+(S/bs, d/bd, B/bk) with the batch innermost: the revisited output block is
+initialized from the view block once (k == 0) and accumulated into across
+batch tiles.  Out-of-range ids (padding, by convention ``-1``) match no
+segment and contribute nothing.
+
+``gather_mul_scatter`` fuses the sibling-view gather that produces the
+delta payload (``BatchedDelta.join_dense`` followed by ``apply_to``) with
+the scatter: the gather is itself a one-hot matmul against the full source
+view, so the fused kernel is two MXU contractions per tile and the [B, d]
+intermediate never exists in HBM.  The source view rides along whole on
+the feature-blocked axis, so the dispatch layer (scatter_ops) only selects
+this kernel when the source segment space fits VMEM.
+
+Key linearization (multi-column COO keys -> flat segment ids), payload
+pytree flattening, padding to block multiples, and backend choice all live
+in ``scatter_ops.py`` — these kernels see only ``[S, d]`` f32 planes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _iota_cols(rows: int, cols: int, offset=0):
+    """[rows, cols] int32 where entry (r, c) = c + offset (2-D iota: TPU has
+    no 1-D iota)."""
+    it = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1)
+    return it + offset
+
+
+def _scatter_kernel(ids_ref, vals_ref, view_ref, out_ref, *, block_s: int):
+    si = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = view_ref[...].astype(jnp.float32)
+
+    ids = ids_ref[...]  # [bk] int32
+    vals = vals_ref[...].astype(jnp.float32)  # [bk, bd]
+    local = _iota_cols(ids.shape[0], block_s, offset=si * block_s)
+    onehot = (ids[:, None] == local).astype(jnp.float32)  # [bk, bs]
+    out_ref[...] += jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def scatter_add_onehot(
+    view: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    block_s: int = 128,
+    block_d: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """view [S, d] + scatter of values [B, d] at seg_ids [B] -> [S, d] f32.
+    S, d, B must be multiples of the block sizes (scatter_ops pads)."""
+    S, d = view.shape
+    B, d2 = values.shape
+    assert d2 == d, (values.shape, view.shape)
+    assert B % block_k == 0 and d % block_d == 0 and S % block_s == 0
+    grid = (S // block_s, d // block_d, B // block_k)
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k,), lambda s, j, k: (k,)),
+            pl.BlockSpec((block_k, block_d), lambda s, j, k: (k, j)),
+            pl.BlockSpec((block_s, block_d), lambda s, j, k: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_s, block_d), lambda s, j, k: (s, j)),
+        out_shape=jax.ShapeDtypeStruct((S, d), jnp.float32),
+        interpret=interpret,
+    )(seg_ids, values, view)
+
+
+def _gms_kernel(out_ids_ref, in_ids_ref, scale_ref, src_ref, view_ref, out_ref,
+                *, block_s: int, num_src: int):
+    si = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = view_ref[...].astype(jnp.float32)
+
+    oid = out_ids_ref[...]  # [bk]
+    iid = in_ids_ref[...]  # [bk]
+    scale = scale_ref[...].astype(jnp.float32)  # [bk]
+    src = src_ref[...].astype(jnp.float32)  # [Sg, bd]
+    bk = oid.shape[0]
+    # gather = one-hot(in_ids) · src, built in VMEM, contracted on the MXU
+    oh_in = (iid[:, None] == _iota_cols(bk, num_src)).astype(jnp.float32)
+    gathered = jax.lax.dot_general(
+        oh_in, src, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bk, bd]
+    vals = gathered * scale[:, None]
+    oh_out = (oid[:, None] == _iota_cols(bk, block_s, offset=si * block_s))
+    out_ref[...] += jax.lax.dot_general(
+        oh_out.astype(jnp.float32), vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gather_mul_scatter(
+    view: jnp.ndarray,
+    out_ids: jnp.ndarray,
+    src: jnp.ndarray,
+    in_ids: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    block_s: int = 128,
+    block_d: int = 128,
+    block_k: int = 256,
+    interpret: bool = False,
+):
+    """view [S, d] + Σ_b 1h(out_ids[b]) · (scale[b] · src[in_ids[b]]) -> [S, d].
+
+    src [Sg, d] rides along whole on its segment axis (feature-blocked), so
+    callers must ensure Sg fits VMEM (scatter_ops guards and falls back to
+    gather-then-scatter otherwise).  Padding rows: out_ids/in_ids == -1 or
+    scale == 0 contribute nothing."""
+    S, d = view.shape
+    Sg, d2 = src.shape
+    B = out_ids.shape[0]
+    assert d2 == d and in_ids.shape[0] == B and scale.shape[0] == B
+    assert B % block_k == 0 and d % block_d == 0 and S % block_s == 0
+    grid = (S // block_s, d // block_d, B // block_k)
+    return pl.pallas_call(
+        functools.partial(_gms_kernel, block_s=block_s, num_src=Sg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k,), lambda s, j, k: (k,)),
+            pl.BlockSpec((block_k,), lambda s, j, k: (k,)),
+            pl.BlockSpec((block_k,), lambda s, j, k: (k,)),
+            pl.BlockSpec((Sg, block_d), lambda s, j, k: (0, j)),
+            pl.BlockSpec((block_s, block_d), lambda s, j, k: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_s, block_d), lambda s, j, k: (s, j)),
+        out_shape=jax.ShapeDtypeStruct((S, d), jnp.float32),
+        interpret=interpret,
+    )(out_ids, in_ids, scale, src, view)

@@ -1,0 +1,329 @@
+"""Dispatch layer for the ring scatter subsystem (⊎ / gather-⊗-⊎).
+
+Every view-maintenance trigger funnels its scatter-adds through here:
+``DenseRelation.scatter_add`` (hence ``IVMEngine._bump_base`` and
+``IndicatorState`` dense maintenance) and ``BatchedDelta.apply_to``.  The
+layer owns everything the kernels in ``ring_scatter.py`` don't:
+
+* **Key linearization** — multi-column COO keys ``[B, k]`` over dictionary
+  domains ``(D1..Dk)`` flatten to row-major segment ids ``[B]``, so one
+  kernel invocation serves any key arity.
+* **Payload pytree shim** — ring payloads (dicts of ``[*doms, *comp]``
+  arrays) flatten to a single ``[S, d]`` plane (components concatenated on
+  the feature axis) and unflatten after the kernel; the degree-m cofactor
+  ring's (c, s, Q) triple becomes one ``d = 1 + m + m²`` plane instead of
+  three kernel launches.
+* **Compaction** ("compact" backends) — for large segment spaces the
+  one-hot grid over the full domain product is wasted work; a sort/rank
+  pass dedups the batch's keys, a segment-sum over *local* ranks (grid
+  scales with the batch, not the domain) accumulates duplicates, and a
+  final scatter touches at most B unique rows.
+* **Backend choice** — a cost heuristic on (payload width × batch ×
+  segment space) picks the Pallas kernel flavour on TPU and the XLA
+  ``.at[].add`` path on CPU; ``REPRO_SCATTER_BACKEND`` / ``use_backend``
+  override it (tests force ``*_interpret``; CPU benches force
+  ``compact_xla``).
+
+All paths are pure jax — safe inside ``lax.scan``/``lax.switch`` trigger
+bodies and compatible with the stream executor's state donation.  The
+``jnp`` backend reproduces the legacy multi-index ``.at[idx].add`` exactly
+(it *is* the old code), so kernel-off runs are bit-identical to the seed.
+
+Backends:  ``jnp`` | ``onehot`` | ``compact`` | ``compact_xla`` |
+``onehot_interpret`` | ``compact_interpret`` | ``auto``.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .ring_scatter import gather_mul_scatter as _gms_pallas
+from .ring_scatter import scatter_add_onehot as _scatter_pallas
+from .segment_ring_sum import segment_ring_sum as _segsum_pallas
+
+ENV_VAR = "REPRO_SCATTER_BACKEND"
+
+BACKENDS = ("auto", "jnp", "onehot", "compact", "compact_xla",
+            "onehot_interpret", "compact_interpret")
+
+#: largest source segment space the fused gather-multiply-scatter kernel
+#: keeps whole in VMEM; larger sources fall back to gather-then-scatter
+MAX_FUSED_SRC = 4096
+
+_override: str | None = None
+
+
+def set_backend(backend: str | None) -> None:
+    """Process-wide backend override (None restores env/auto resolution)."""
+    global _override
+    assert backend is None or backend in BACKENDS, backend
+    _override = backend
+
+
+@contextlib.contextmanager
+def use_backend(backend: str | None):
+    """Scoped backend override — benches/tests sweep kernel-on vs kernel-off."""
+    global _override
+    prev = _override
+    set_backend(backend)
+    try:
+        yield
+    finally:
+        _override = prev
+
+
+def resolve_backend(num_segments: int, batch: int, width: int,
+                    backend: str | None = None) -> str:
+    """Explicit arg > ``use_backend`` override > env var > cost heuristic."""
+    b = backend or _override or os.environ.get(ENV_VAR) or "auto"
+    assert b in BACKENDS, b
+    if b != "auto":
+        return b
+    if jax.default_backend() != "tpu":
+        return "jnp"
+    # one-hot sweeps S·d accumulators per batch tile: worth it while the
+    # segment space is comparable to the batch; past that, compaction's
+    # O(B log B + B²·d/bk) beats the dead tiles of the full-domain grid
+    return "onehot" if num_segments <= max(4096, 8 * batch) else "compact"
+
+
+# ---------------------------------------------------------------------------
+# linearization + payload flattening
+# ---------------------------------------------------------------------------
+def linear_ids(keys: jnp.ndarray, domains) -> jnp.ndarray:
+    """Row-major flat segment ids for keys [B, k] over domains (D1..Dk)."""
+    assert keys.ndim == 2 and keys.shape[1] == len(domains), (
+        keys.shape, domains)
+    if keys.shape[1] == 0:
+        return jnp.zeros((keys.shape[0],), jnp.int32)
+    stride = 1
+    strides = []
+    for d in reversed(domains):
+        strides.append(stride)
+        stride *= int(d)
+    strides = jnp.asarray(strides[::-1], jnp.int32)
+    return jnp.sum(keys.astype(jnp.int32) * strides[None, :], axis=1)
+
+
+def _comp_width(shp) -> int:
+    w = 1
+    for s in shp:
+        w *= int(s)
+    return w
+
+
+def flatten_payload(ring, payload, lead_shape) -> jnp.ndarray:
+    """Concatenate ring components into one ``[prod(lead), d_total]`` plane."""
+    lead = _comp_width(lead_shape)
+    planes = [payload[c].reshape(lead, _comp_width(shp))
+              for c, shp in ring.components.items()]
+    return planes[0] if len(planes) == 1 else jnp.concatenate(planes, axis=1)
+
+
+def unflatten_payload(ring, flat: jnp.ndarray, lead_shape, dtype=None):
+    """Inverse of :func:`flatten_payload` (splits the feature axis)."""
+    out, off = {}, 0
+    for c, shp in ring.components.items():
+        w = _comp_width(shp)
+        plane = flat[:, off:off + w]
+        out[c] = plane.reshape(*lead_shape, *shp).astype(dtype or flat.dtype)
+        off += w
+    return out
+
+
+def kernelable(ring, *payloads) -> bool:
+    """Kernel paths accumulate in f32; any other dtype keeps the exact
+    ``.at[].add`` path (count rings are int32 — bit-exactness over speed)."""
+    if jnp.dtype(ring.dtype) != jnp.float32:
+        return False
+    return all(jnp.dtype(leaf.dtype) == jnp.float32
+               for p in payloads for leaf in jax.tree.leaves(p))
+
+
+# ---------------------------------------------------------------------------
+# flat [S, d] entry points
+# ---------------------------------------------------------------------------
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def scatter_add_flat(view, seg_ids, values, backend: str | None = None,
+                     block_s: int = 128, block_d: int = 128,
+                     block_k: int = 512):
+    """view [S, d] ⊎ values [B, d] at seg_ids [B]; ids < 0 are padding.
+
+    Resolution happens here, *outside* the jitted impl, so the jit cache is
+    keyed by the resolved backend string — an override change can never hit
+    a stale trace."""
+    S, d = view.shape
+    B = seg_ids.shape[0]
+    backend = resolve_backend(S, B, d, backend)
+    return _scatter_add_flat(view, seg_ids, values, backend=backend,
+                             block_s=block_s, block_d=block_d,
+                             block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_s", "block_d",
+                                             "block_k"))
+def _scatter_add_flat(view, seg_ids, values, backend: str,
+                      block_s: int, block_d: int, block_k: int):
+    S, d = view.shape
+    B = seg_ids.shape[0]
+    if backend == "jnp":
+        return view.at[seg_ids].add(values, mode="drop")
+    if backend.startswith("compact"):
+        return _compact_scatter(view, seg_ids, values, backend,
+                                block_s=block_s, block_d=block_d,
+                                block_k=block_k)
+    interpret = backend == "onehot_interpret"
+    bs = min(block_s, _round_up(S, 8))
+    bd = min(block_d, _round_up(d, 8))
+    bk = min(block_k, _round_up(B, 8))
+    Sp, dp, Bp = _round_up(S, bs), _round_up(d, bd), _round_up(B, bk)
+    out = _scatter_pallas(
+        jnp.pad(view.astype(jnp.float32), ((0, Sp - S), (0, dp - d))),
+        jnp.pad(seg_ids.astype(jnp.int32), (0, Bp - B), constant_values=-1),
+        jnp.pad(values.astype(jnp.float32), ((0, Bp - B), (0, dp - d))),
+        block_s=bs, block_d=bd, block_k=bk, interpret=interpret,
+    )
+    return out[:S, :d]
+
+
+def _compact_scatter(view, seg_ids, values, backend: str, *, block_s: int,
+                     block_d: int, block_k: int):
+    """Key-dedup + local accumulate: sort the batch's ids, rank distinct
+    keys, segment-sum duplicates over *local* ranks (S_local = B — the grid
+    scales with the batch's active segments, not the domain product), then
+    scatter at most B unique rows.  Padding ids (< 0) rank first and map to
+    an out-of-range target, so they drop."""
+    S, d = view.shape
+    B = seg_ids.shape[0]
+    seg_ids = seg_ids.astype(jnp.int32)
+    order = jnp.argsort(seg_ids)
+    sid = seg_ids[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sid[1:] != sid[:-1]])
+    rank_sorted = jnp.cumsum(first.astype(jnp.int32)) - 1  # [B]
+    rank = jnp.zeros((B,), jnp.int32).at[order].set(rank_sorted)
+    # unique id per rank slot; unused slots (and the padding segment) point
+    # out of range and are dropped by the final scatter
+    uniq = jnp.full((B,), S, jnp.int32).at[rank].set(
+        jnp.where(seg_ids < 0, S, seg_ids))
+    inner = {"compact": "pallas", "compact_interpret": "interpret",
+             "compact_xla": "jnp"}[backend]
+    if inner == "jnp":
+        sums = ref.segment_ring_sum_ref(values, rank, B)
+    else:
+        bs = min(block_s, _round_up(B, 8))
+        bd = min(block_d, _round_up(d, 8))
+        bk = min(block_k, _round_up(B, 8))
+        Bp, dp = _round_up(B, bk), _round_up(d, bd)
+        Sl = _round_up(B, bs)
+        sums = _segsum_pallas(
+            jnp.pad(values.astype(jnp.float32), ((0, Bp - B), (0, dp - d))),
+            jnp.pad(rank, (0, Bp - B), constant_values=-1),
+            Sl, block_s=bs, block_d=bd, block_k=bk,
+            interpret=(inner == "interpret"),
+        )[:B, :d]
+    return view.at[uniq].add(sums.astype(view.dtype), mode="drop")
+
+
+def gather_mul_scatter_flat(view, out_ids, src, in_ids, scale,
+                            backend: str | None = None, block_s: int = 128,
+                            block_d: int = 128, block_k: int = 256):
+    """view [S, d] ⊎ (scale[b] · src[in_ids[b]]) at out_ids[b] — the fused
+    sibling-gather ⊗ scatter of ``BatchedDelta.apply_to``."""
+    backend = resolve_backend(view.shape[0], out_ids.shape[0], view.shape[1],
+                              backend)
+    return _gather_mul_scatter_flat(view, out_ids, src, in_ids, scale,
+                                    backend=backend, block_s=block_s,
+                                    block_d=block_d, block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_s", "block_d",
+                                             "block_k"))
+def _gather_mul_scatter_flat(view, out_ids, src, in_ids, scale,
+                             backend: str, block_s: int, block_d: int,
+                             block_k: int):
+    S, d = view.shape
+    Sg = src.shape[0]
+    B = out_ids.shape[0]
+    if backend == "jnp":
+        vals = jnp.take(src, in_ids, axis=0, mode="clip") * scale[:, None]
+        return view.at[out_ids].add(vals, mode="drop")
+    if backend.startswith("compact") or Sg > MAX_FUSED_SRC:
+        # compaction dedups output keys; the gather stays separate
+        vals = jnp.take(src, in_ids, axis=0, mode="clip") * scale[:, None]
+        return scatter_add_flat(view, out_ids, vals, backend=backend,
+                                block_s=block_s, block_d=block_d,
+                                block_k=block_k)
+    interpret = backend == "onehot_interpret"
+    bs = min(block_s, _round_up(S, 8))
+    bd = min(block_d, _round_up(d, 8))
+    bk = min(block_k, _round_up(B, 8))
+    Sp, dp, Bp = _round_up(S, bs), _round_up(d, bd), _round_up(B, bk)
+    Sgp = _round_up(Sg, 8)
+    out = _gms_pallas(
+        jnp.pad(view.astype(jnp.float32), ((0, Sp - S), (0, dp - d))),
+        jnp.pad(out_ids.astype(jnp.int32), (0, Bp - B), constant_values=-1),
+        jnp.pad(src.astype(jnp.float32), ((0, Sgp - Sg), (0, dp - d))),
+        jnp.pad(in_ids.astype(jnp.int32), (0, Bp - B), constant_values=-1),
+        jnp.pad(scale.astype(jnp.float32), (0, Bp - B)),
+        block_s=bs, block_d=bd, block_k=bk, interpret=interpret,
+    )
+    return out[:S, :d]
+
+
+# ---------------------------------------------------------------------------
+# payload-pytree entry points (what the core calls)
+# ---------------------------------------------------------------------------
+def scatter_add_payload(view_payload, domains, keys, values, ring,
+                        backend: str | None = None):
+    """``view ⊎ COO batch`` over a ring-payload pytree.
+
+    view_payload leaves: ``[*domains, *comp]``; keys ``[B, k]``; values
+    leaves ``[B, *comp]``.  Returns a new payload dict.
+    """
+    domains = tuple(int(x) for x in domains)
+    S = _comp_width(domains)
+    B = keys.shape[0]
+    d = sum(_comp_width(shp) for shp in ring.components.values())
+    resolved = resolve_backend(S, B, d, backend)
+    if resolved == "jnp" or not kernelable(ring, view_payload, values):
+        idx = tuple(keys[:, i] for i in range(keys.shape[1]))
+        return {c: view_payload[c].at[idx].add(values[c])
+                for c in ring.components}
+    ids = linear_ids(keys, domains)
+    flat_view = flatten_payload(ring, view_payload, domains)
+    flat_vals = flatten_payload(ring, values, (B,))
+    out = scatter_add_flat(flat_view, ids, flat_vals, backend=resolved)
+    return unflatten_payload(ring, out, domains, dtype=ring.dtype)
+
+
+def gather_mul_scatter_payload(view_payload, domains, keys, src_flat, in_ids,
+                               scale, ring, backend: str | None = None):
+    """``view ⊎ (scale ⊗ src[in_ids])`` for single-scalar-component rings —
+    the deferred sibling gather of ``BatchedDelta.join_dense`` fused with
+    the final scatter.  ``src_flat``: [Sg] flattened source view plane."""
+    comp = next(iter(ring.components))
+    assert len(ring.components) == 1 and ring.components[comp] == (), (
+        "fused gather-scatter serves scalar payload rings only")
+    domains = tuple(int(x) for x in domains)
+    S = _comp_width(domains)
+    B = keys.shape[0]
+    resolved = resolve_backend(S, B, 1, backend)
+    if resolved == "jnp" or not kernelable(ring, view_payload) \
+            or jnp.dtype(src_flat.dtype) != jnp.float32:
+        idx = tuple(keys[:, i] for i in range(keys.shape[1]))
+        vals = scale * jnp.take(src_flat, in_ids, axis=0, mode="clip")
+        return {comp: view_payload[comp].at[idx].add(vals)}
+    ids = linear_ids(keys, domains)
+    out = gather_mul_scatter_flat(
+        view_payload[comp].reshape(S, 1), ids, src_flat[:, None],
+        in_ids.astype(jnp.int32), scale, backend=resolved)
+    return {comp: out.reshape(domains).astype(ring.dtype)}

@@ -73,7 +73,10 @@ except ModuleNotFoundError:
         def deco(fn):
             sig = inspect.signature(fn)
             names = list(sig.parameters)
-            strats = dict(zip(names, arg_strats))
+            # hypothesis binds positional strategies to the *rightmost*
+            # parameters (leading params are left for fixtures/parametrize)
+            strats = dict(zip(names[len(names) - len(arg_strats):],
+                              arg_strats))
             assert not (set(strats) & set(kw_strats)), "duplicate strategy"
             strats.update(kw_strats)
             salt = hash(fn.__qualname__) & 0xFFFF

@@ -280,3 +280,41 @@ def test_indicator_bounds_view_size():
     res_ind = evaluate_view(with_ind, db, q)
     np.testing.assert_allclose(np.asarray(res_plain.payload["v"]),
                                np.asarray(res_ind.payload["v"]))
+
+
+# ---------------------------------------------------------------------------
+# cost-based densify planner
+# ---------------------------------------------------------------------------
+def test_densify_planner_cost_model():
+    """The path-walk cost model: fully-bound updates never densify; wide
+    dimension-style updates densify once the modeled row cost (B·∏ dense
+    extents per node) exceeds the dense walk, including below the old flat
+    batch-32 threshold when sibling extents are large."""
+    from repro.core.delta import _should_densify
+    from repro.core.materialize import views_on_path
+
+    big = dict(A=4, B=5, C=64, D=48, E=40)
+    q = Query(
+        relations={"R": ("A", "B"), "S": ("A", "C", "E"), "T": ("C", "D")},
+        free_vars=("A", "C"), ring=sum_ring(), domains=big,
+        lifts={"B": ("value",), "D": ("value",), "E": ("value",)},
+    )
+    tree = build_view_tree(q, example_vo())
+
+    def upd(rel, batch):
+        sch = q.relations[rel]
+        keys = jnp.zeros((batch, len(sch)), jnp.int32)
+        return COOUpdate(sch, keys, {"v": jnp.zeros((batch,), jnp.float32)})
+
+    # S binds A, C, E — every sibling var it meets is bound or tiny: the
+    # pure-COO row walk is the factorized fast path at any batch size
+    path_s = views_on_path(tree, "S")
+    assert not _should_densify(path_s, upd("S", 1), q)
+    assert not _should_densify(path_s, upd("S", 4096), q)
+
+    # R (A, B) meets S/T extents (C·E, D dense axes): the row walk costs
+    # B·∏ extents per node, so the dense delta wins well below batch 32
+    path_r = views_on_path(tree, "R")
+    assert not _should_densify(path_r, upd("R", 1), q)
+    assert _should_densify(path_r, upd("R", 8), q)
+    assert _should_densify(path_r, upd("R", 256), q)

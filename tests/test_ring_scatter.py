@@ -1,0 +1,224 @@
+"""Ring scatter subsystem ≡ the ``.at[].add`` oracle, bit for bit.
+
+Property tests over the kernel dispatch layer (``repro.kernels.scatter_ops``)
+pin every backend — Pallas one-hot (interpret mode), the key-dedup compact
+path (Pallas-inner and XLA-inner), and the fused gather-multiply-scatter —
+to the legacy multi-index ``.at[idx].add`` path across payload pytrees,
+duplicate keys, padding rows (key 0 / id -1, ring-zero payload), and
+non-multiple-of-block shapes.  Payloads are integer-valued f32, so every
+accumulation order is exact and equality is bitwise.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import DegreeMRing, DenseRelation, count_ring, sum_ring
+from repro.core.contraction import BatchedDelta
+from repro.kernels import scatter_ops
+
+KERNEL_BACKENDS = ("onehot_interpret", "compact_interpret", "compact_xla")
+
+
+def _int_floats(rng, shape, lo=-4, hi=5):
+    return jnp.asarray(rng.integers(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# flat [S, d] plane
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+@given(seed=st.integers(0, 2**31 - 1), S=st.integers(1, 40),
+       B=st.integers(1, 33), d=st.integers(1, 17))
+@settings(max_examples=5, deadline=None)
+def test_scatter_add_flat_matches_oracle(backend, seed, S, B, d):
+    rng = np.random.default_rng(seed)
+    view = _int_floats(rng, (S, d))
+    ids = jnp.asarray(rng.integers(0, S, size=B).astype(np.int32))
+    vals = _int_floats(rng, (B, d))
+    got = scatter_ops.scatter_add_flat(view, ids, vals, backend=backend)
+    exp = view.at[ids].add(vals)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_scatter_add_flat_duplicate_and_padding_rows(backend):
+    rng = np.random.default_rng(0)
+    S, B, d = 11, 24, 6
+    view = _int_floats(rng, (S, d))
+    ids = jnp.asarray((rng.integers(0, 3, size=B)).astype(np.int32))  # heavy dups
+    vals = _int_floats(rng, (B, d))
+    exp = view.at[ids].add(vals)
+    got = scatter_ops.scatter_add_flat(view, ids, vals, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+    # padding: id -1 rows with ring-zero payload are exact no-ops
+    ids_p = jnp.concatenate([ids, jnp.full((5,), -1, jnp.int32)])
+    vals_p = jnp.concatenate([vals, jnp.zeros((5, d), jnp.float32)])
+    got_p = scatter_ops.scatter_add_flat(view, ids_p, vals_p, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(exp))
+
+
+def test_scatter_add_flat_all_one_segment():
+    """Worst-case duplication: the compact path collapses to one row."""
+    rng = np.random.default_rng(1)
+    S, B, d = 7, 40, 3
+    view = _int_floats(rng, (S, d))
+    ids = jnp.full((B,), 4, jnp.int32)
+    vals = _int_floats(rng, (B, d))
+    exp = view.at[ids].add(vals)
+    for backend in KERNEL_BACKENDS:
+        got = scatter_ops.scatter_add_flat(view, ids, vals, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_gather_mul_scatter_matches_compose(backend, seed):
+    rng = np.random.default_rng(seed)
+    S, Sg, B, d = 13, 9, 21, 4
+    view = _int_floats(rng, (S, d))
+    src = _int_floats(rng, (Sg, d))
+    out_ids = jnp.asarray(rng.integers(0, S, size=B).astype(np.int32))
+    in_ids = jnp.asarray(rng.integers(0, Sg, size=B).astype(np.int32))
+    scale = _int_floats(rng, (B,), -2, 3)
+    exp = view.at[out_ids].add(src[in_ids] * scale[:, None])
+    got = scatter_ops.gather_mul_scatter_flat(view, out_ids, src, in_ids,
+                                              scale, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+# ---------------------------------------------------------------------------
+# payload pytrees (the shim)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 5))
+@settings(max_examples=4, deadline=None)
+def test_scatter_payload_degree_m_pytree(backend, seed, m):
+    """(c, s, Q) cofactor payloads flatten to one [S, 1+m+m²] plane."""
+    rng = np.random.default_rng(seed)
+    ring = DegreeMRing(m)
+    doms = (3, 4)
+    B = 14
+    view = {c: _int_floats(rng, (*doms, *shp))
+            for c, shp in ring.components.items()}
+    keys = jnp.asarray(np.stack(
+        [rng.integers(0, dd, size=B) for dd in doms], axis=1).astype(np.int32))
+    vals = {c: _int_floats(rng, (B, *shp))
+            for c, shp in ring.components.items()}
+    idx = (keys[:, 0], keys[:, 1])
+    exp = {c: view[c].at[idx].add(vals[c]) for c in ring.components}
+    got = scatter_ops.scatter_add_payload(view, doms, keys, vals, ring,
+                                          backend=backend)
+    for c in ring.components:
+        np.testing.assert_array_equal(np.asarray(got[c]), np.asarray(exp[c]))
+
+
+def test_scatter_payload_int_ring_keeps_exact_path():
+    """Non-f32 payloads (count ring) must resolve to the exact jnp path."""
+    rng = np.random.default_rng(3)
+    ring = count_ring()
+    doms = (5,)
+    view = {"v": jnp.asarray(rng.integers(0, 4, size=doms).astype(np.int32))}
+    keys = jnp.asarray(rng.integers(0, 5, size=(9, 1)).astype(np.int32))
+    vals = {"v": jnp.asarray(rng.integers(-2, 3, size=(9,)).astype(np.int32))}
+    exp = view["v"].at[(keys[:, 0],)].add(vals["v"])
+    got = scatter_ops.scatter_add_payload(view, doms, keys, vals, ring,
+                                          backend="compact_xla")
+    assert got["v"].dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got["v"]), np.asarray(exp))
+
+
+def test_linear_ids_row_major():
+    keys = jnp.asarray([[0, 0], [1, 2], [2, 3]], jnp.int32)
+    ids = scatter_ops.linear_ids(keys, (3, 4))
+    np.testing.assert_array_equal(np.asarray(ids), [0, 6, 11])
+
+
+def test_backend_resolution_precedence():
+    assert scatter_ops.resolve_backend(8, 4, 1, "compact") == "compact"
+    with scatter_ops.use_backend("compact_xla"):
+        assert scatter_ops.resolve_backend(8, 4, 1) == "compact_xla"
+        assert scatter_ops.resolve_backend(8, 4, 1, "jnp") == "jnp"
+    # on CPU the auto heuristic keeps the exact XLA path
+    import jax
+    if jax.default_backend() != "tpu":
+        assert scatter_ops.resolve_backend(10**6, 16, 1) == "jnp"
+
+
+# ---------------------------------------------------------------------------
+# DenseRelation / BatchedDelta routing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_dense_relation_scatter_add_routes(backend):
+    rng = np.random.default_rng(5)
+    ring = sum_ring()
+    rel = DenseRelation(("A", "B"), ring,
+                        {"v": _int_floats(rng, (4, 6))})
+    keys = jnp.asarray(np.stack([rng.integers(0, 4, 12),
+                                 rng.integers(0, 6, 12)], axis=1).astype(np.int32))
+    vals = {"v": _int_floats(rng, (12,))}
+    exp = rel.scatter_add(keys, vals, backend="jnp")
+    got = rel.scatter_add(keys, vals, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got.payload["v"]),
+                                  np.asarray(exp.payload["v"]))
+
+
+@pytest.mark.parametrize("backend", ("jnp",) + KERNEL_BACKENDS)
+def test_apply_to_mixed_coo_dense(backend):
+    """COO × dense deltas: the kernel path flattens coo axes to segment ids
+    and dense axes into the feature plane."""
+    rng = np.random.default_rng(6)
+    ring = sum_ring()
+    B, DA, DB = 10, 5, 7
+    view = DenseRelation(("A", "B"), ring, {"v": _int_floats(rng, (DA, DB))})
+    keys = jnp.asarray(rng.integers(0, DA, size=(B, 1)).astype(np.int32))
+    delta = BatchedDelta(
+        coo_schema=("A",), dense_schema=("B",), keys=keys, ring=ring,
+        payload={"v": _int_floats(rng, (B, DB))}, dense_domains=(DB,))
+    exp = view.payload["v"].at[(keys[:, 0],)].add(delta.payload["v"])
+    got = delta.apply_to(view, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got.payload["v"]),
+                                  np.asarray(exp))
+
+
+@pytest.mark.parametrize("backend", ("jnp",) + KERNEL_BACKENDS)
+def test_deferred_sibling_gather_fuses_with_scatter(backend):
+    """join_dense against a fully-COO-bound scalar view defers the gather;
+    apply_to then matches the eager gather-multiply-scatter bit for bit."""
+    rng = np.random.default_rng(7)
+    ring = sum_ring()
+    B, DA, DB = 9, 4, 6
+    sib = DenseRelation(("A",), ring, {"v": _int_floats(rng, (DA,))})
+    target = DenseRelation(("A", "B"), ring, {"v": _int_floats(rng, (DA, DB))})
+    keys = jnp.asarray(np.stack([rng.integers(0, DA, B),
+                                 rng.integers(0, DB, B)], axis=1).astype(np.int32))
+    delta = BatchedDelta(coo_schema=("A", "B"), dense_schema=(), keys=keys,
+                         ring=ring, payload={"v": _int_floats(rng, (B,))})
+    joined = delta.join_dense(sib)
+    assert joined.pending_gather is not None, "gather should defer"
+    got = joined.apply_to(target, backend=backend)
+    vals = delta.payload["v"] * sib.payload["v"][keys[:, 0]]
+    exp = target.payload["v"].at[(keys[:, 0], keys[:, 1])].add(vals)
+    np.testing.assert_array_equal(np.asarray(got.payload["v"]), np.asarray(exp))
+    # forcing instead of fusing gives the same delta
+    forced = joined._force()
+    assert forced.pending_gather is None
+    np.testing.assert_array_equal(np.asarray(forced.payload["v"]),
+                                  np.asarray(vals))
+
+
+def test_pending_gather_forces_before_batch_collapse():
+    rng = np.random.default_rng(8)
+    ring = sum_ring()
+    B, DA = 8, 5
+    sib = DenseRelation(("A",), ring, {"v": _int_floats(rng, (DA,))})
+    keys = jnp.asarray(rng.integers(0, DA, size=(B, 1)).astype(np.int32))
+    delta = BatchedDelta(coo_schema=("A",), dense_schema=(), keys=keys,
+                         ring=ring, payload={"v": _int_floats(rng, (B,))})
+    joined = delta.join_dense(sib)
+    out = joined.marginalize("A", None)  # collapses the batch
+    assert out.pending_gather is None and out.batch == 1
+    exp = jnp.sum(delta.payload["v"] * sib.payload["v"][keys[:, 0]])
+    np.testing.assert_array_equal(np.asarray(out.payload["v"][0]),
+                                  np.asarray(exp))

@@ -150,10 +150,74 @@ def test_prepare_stream_modes_and_bucketing():
     p = prepare_stream(eng, rounds)
     assert p.mode == "rounds" and p.pattern == ("R", "S")
     assert p.buckets == (2, 5)  # per-position buckets
+    assert p.tail_len == 0
 
     aper = random_stream(rng, q, ["R", "S", "R", "R"], [2, 2, 2, 2])
     p = prepare_stream(eng, aper)
     assert p.mode == "switch"
+
+    # near-periodic: trailing partial round canonicalizes to rounds + tail
+    near = random_stream(rng, q, ["R", "S", "T"] * 2 + ["R"], [3] * 7)
+    p = prepare_stream(eng, near)
+    assert p.mode == "rounds" and p.pattern == ("R", "S", "T")
+    assert p.n_steps == 2 and p.tail_len == 1
+
+    # a rotated round-robin stream is periodic under shift-matching
+    rot = random_stream(rng, q, ["S", "R"] * 3 + ["S"], [2] * 7)
+    p = prepare_stream(eng, rot)
+    assert p.mode == "rounds" and p.pattern == ("S", "R") and p.tail_len == 1
+
+
+@pytest.mark.parametrize("strategy", ["fivm", "dbt", "fivm_1", "reeval"])
+def test_fused_near_periodic_rounds_matches_sequential(strategy):
+    """Near-periodic schedule (trailing partial round): the canonicalized
+    rounds program — scan + tail — must match per-call triggers exactly."""
+    rng = np.random.default_rng(17)
+    q = example_query()
+    db = random_db(rng, q.ring)
+    schedule = ["R", "S", "T"] * 3 + ["R", "S"]
+    batches = [int(rng.integers(1, 8)) for _ in schedule]
+    stream = random_stream(rng, q, schedule, batches)
+
+    fused = IVMEngine.build(q, db, var_order=example_vo(), strategy=strategy)
+    prepared = prepare_stream(fused, stream)
+    assert prepared.mode == "rounds" and prepared.tail_len == 2
+    StreamExecutor(fused).run(prepared)
+
+    seq = IVMEngine.build(q, db, var_order=example_vo(), strategy=strategy)
+    for rel, upd in stream:
+        seq.apply_update(rel, upd)
+
+    got = np.asarray(fused.result().transpose(("A", "C")).payload["v"])
+    ref = np.asarray(seq.result().transpose(("A", "C")).payload["v"])
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_allclose(got, py_oracle_result(q, db, stream),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_stream_with_kernel_scatter_backend():
+    """The fused executor with a kernel scatter backend (compact/XLA inner)
+    stays bit-identical to the kernel-off per-call path — integer-valued
+    payloads make every accumulation order exact."""
+    from repro.kernels import scatter_ops
+
+    rng = np.random.default_rng(23)
+    q = example_query()
+    db = random_db(rng, q.ring)
+    stream = random_stream(rng, q, ["R", "S", "T"] * 3,
+                           [int(rng.integers(1, 8)) for _ in range(9)])
+
+    seq = IVMEngine.build(q, db, var_order=example_vo(), strategy="fivm")
+    for rel, upd in stream:
+        seq.apply_update(rel, upd)
+
+    with scatter_ops.use_backend("compact_xla"):
+        fused = IVMEngine.build(q, db, var_order=example_vo(), strategy="fivm")
+        StreamExecutor(fused).run(stream)
+
+    got = np.asarray(fused.result().transpose(("A", "C")).payload["v"])
+    ref = np.asarray(seq.result().transpose(("A", "C")).payload["v"])
+    np.testing.assert_array_equal(got, ref)
 
 
 @pytest.mark.parametrize("strategy", ["fivm", "dbt"])
