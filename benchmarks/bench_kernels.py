@@ -79,11 +79,68 @@ def _ring_scatter_sweep(rng, rows, results):
                  f"compact_xla_us={case['compact_xla']*1e6:.1f}"))
 
 
+def _sparse_storage_sweep(rng, rows, results):
+    """Hashed-COO ViewStorage ops vs their dense counterparts at housing
+    scale: ⊎ (hash insert + slot scatter) and gather (probe) on a 65536-key
+    domain at sub-percent fill, scalar and cofactor-width payloads."""
+    import jax.numpy as jnp
+
+    from repro.core import DenseRelation, SparseRelation
+    from repro.core.rings import DegreeMRing, sum_ring
+
+    cases = [
+        # (label, ring, D, active, B, capacity)
+        ("scalar/housing_domain", sum_ring(), 65536, 512, 256, 2048),
+        ("scalar/housing_domain_b1024", sum_ring(), 65536, 512, 1024, 4096),
+        ("cofactor_d73/housing_domain", DegreeMRing(8), 65536, 512, 256,
+         2048),
+    ]
+    for label, ring, D, active, B, cap in cases:
+        pool = rng.choice(D, size=active, replace=False).astype(np.int32)
+        keys = rng.choice(pool, size=B)[:, None].astype(np.int32)
+        if set(ring.components) == {"v"}:
+            vals = {"v": jnp.asarray(rng.integers(-2, 3, B)
+                                     .astype(np.float32))}
+        else:
+            vals = {**ring.zeros((B,))}
+            vals["c"] = jnp.asarray(rng.integers(-2, 3, B)
+                                    .astype(np.float32))
+        keys = jnp.asarray(keys)
+        sparse = SparseRelation.from_coo(("pc",), ring, (D,), keys, vals,
+                                         capacity=cap)
+        dense = sparse.to_dense()
+        d = sum(int(np.prod(shp)) if shp else 1
+                for shp in ring.components.values())
+        # jit per op: triggers always run storage ops compiled — eager
+        # while_loop probing would measure python dispatch, not the op
+        j_scatter = jax.jit(lambda s, k, v: s.scatter_add(k, v))
+        j_gather = jax.jit(lambda s, k: s.gather(k))
+        case = {}
+        for op, fn in (
+            ("scatter", lambda s=sparse: j_scatter(s, keys, vals)),
+            ("scatter_dense", lambda d_=dense: j_scatter(d_, keys, vals)),
+            ("gather", lambda s=sparse: j_gather(s, keys)),
+            ("gather_dense", lambda d_=dense: j_gather(d_, keys)),
+        ):
+            t = _time(fn)
+            case[op] = t
+            results.append(dict(
+                op="sparse_storage", case=f"{label}/{op}", batch=B,
+                segments=D, capacity=cap, width=d, active_keys=active,
+                us_per_call=round(t * 1e6, 1)))
+        rows.append((f"kernels/sparse_storage/{label}/B={B},D={D},d={d}",
+                     round(case["scatter"] * 1e6, 1),
+                     f"dense_scatter_us={case['scatter_dense']*1e6:.1f};"
+                     f"gather_us={case['gather']*1e6:.1f};"
+                     f"dense_gather_us={case['gather_dense']*1e6:.1f}"))
+
+
 def run(seed: int = 0, json_path: str | None = JSON_PATH):
     rng = np.random.default_rng(seed)
     rows = []
     results: list[dict] = []
     _ring_scatter_sweep(rng, rows, results)
+    _sparse_storage_sweep(rng, rows, results)
     if json_path is not None:
         with open(json_path, "w") as f:
             json.dump({"benchmark": "ring_scatter_kernels",

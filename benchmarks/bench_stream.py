@@ -9,6 +9,10 @@ Three fused-stream sweeps, all written to ``BENCH_stream.json``:
 * **retailer_cofactor_degree_m** — degree-m cofactor-ring payloads
   (the (c, s, Q) triple flattens to a ``1+m+m²`` feature plane in the
   scatter shim), fivm, kernel-on vs kernel-off.
+* **housing_sparse_pc65536** — the full-width postcode dictionary at
+  sub-percent fill: dense vs hashed-COO view storage (the ViewStorage
+  planner), reporting fused throughput, *peak view bytes* under each
+  backend, and a bit-identity check of the final result.
 
 Kernel-on on this CPU container means the ``compact_xla`` dispatch path
 (key-dedup compaction; the Pallas kernels themselves target TPU and are
@@ -26,9 +30,10 @@ from repro.core import IVMEngine, Query, sum_ring
 from repro.core.apps import regression
 from repro.kernels import scatter_ops
 
-from .common import (HOUSING_DOMS, HOUSING_RELATIONS, RETAILER_DOMS,
-                     RETAILER_RELATIONS, emit, housing_vo, retailer_vo,
-                     run_engine_stream, synth_db, update_stream)
+from .common import (HOUSING_DOMS, HOUSING_DOMS_BIG, HOUSING_RELATIONS,
+                     RETAILER_DOMS, RETAILER_RELATIONS, emit, housing_vo,
+                     retailer_vo, run_engine_stream, synth_db,
+                     synth_low_fill_db, update_stream)
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_stream.json")
 
@@ -93,6 +98,51 @@ def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
                                     repeats, backend=backend)
             record("housing_sum_aggregate", "fivm", batch, n_batches,
                    backend, tps_f, tps_p)
+
+    # -- housing pc=65536: dense vs sparse view storage (ISSUE 3) ----------
+    big = dict(HOUSING_DOMS_BIG)
+    sq = Query(relations=HOUSING_RELATIONS, free_vars=(), ring=ring,
+               domains=big, lifts={"h2": ("value",)})
+    sdb, active = synth_low_fill_db(HOUSING_RELATIONS, big, ring,
+                                    np.random.default_rng(seed), "pc",
+                                    n_active=512)
+    fresh = np.setdiff1d(np.arange(big["pc"]), active)
+    pool = np.concatenate([active, np.random.default_rng(seed).choice(
+        fresh, size=256, replace=False)])
+    sparse_stream = update_stream(
+        HOUSING_RELATIONS, big, ring, np.random.default_rng(seed + 1),
+        64, 30, key_pools={"pc": pool})
+    leg = {}
+    for mode in ("dense", "auto"):
+        eng = IVMEngine.build(sq, sdb, var_order=housing_vo(),
+                              strategy="fivm", storage=mode)
+        kinds = sorted(s.kind for s in eng.storage_plan.values())
+        tps, _ = run_engine_stream(eng, sparse_stream, fused=True,
+                                   repeats=repeats)
+        leg[mode] = dict(tps=tps, bytes=eng.memory_bytes(),
+                         result=np.asarray(eng.result().payload["v"]),
+                         n_sparse=kinds.count("sparse"))
+    bit_identical = bool(np.array_equal(leg["dense"]["result"],
+                                        leg["auto"]["result"]))
+    mem_ratio = leg["dense"]["bytes"] / leg["auto"]["bytes"]
+    fill = 512 / big["pc"]
+    for mode, label in (("dense", "dense"), ("auto", "sparse")):
+        e = leg[mode]
+        rows.append((f"stream/housing_sparse_pc65536/{label}/b=64",
+                     round(1e6 * 64 / e["tps"], 1),
+                     f"fused_tps={e['tps']:.0f};view_bytes={e['bytes']};"
+                     f"mem_ratio={mem_ratio:.1f}x;"
+                     f"bit_identical={bit_identical}"))
+        results.append(dict(
+            dataset="housing_sparse_pc65536", strategy="fivm", batch=64,
+            n_batches=30, storage=label, fill=round(fill, 4),
+            sparse_views=e["n_sparse"],
+            fused_tuples_per_s=round(e["tps"]),
+            peak_view_bytes=int(e["bytes"]),
+            dense_over_sparse_mem=round(mem_ratio, 2),
+            bit_identical_to_dense=bit_identical))
+    assert bit_identical, "sparse housing run diverged from dense"
+    assert mem_ratio >= 10, f"sparse memory win below 10x: {mem_ratio:.1f}"
 
     # -- degree-m cofactor ring: wide payloads through the scatter shim ----
     cq = regression.cofactor_query(RETAILER_RELATIONS, RETAILER_DOMS)

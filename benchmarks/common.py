@@ -85,8 +85,14 @@ def synth_db(relations, doms, ring, rng, density=0.3, scale=1.0):
     return db
 
 
-def update_stream(relations, doms, ring, rng, batch: int, n_batches: int):
-    """Round-robin batched inserts/deletes over all relations (Sec. 8.1)."""
+def update_stream(relations, doms, ring, rng, batch: int, n_batches: int,
+                  key_pools=None):
+    """Round-robin batched inserts/deletes over all relations (Sec. 8.1).
+
+    ``key_pools`` optionally maps a variable to the array of values its
+    update keys are drawn from — the sparse-view scenario keeps the wide
+    ``pc`` dictionary's *active* key set small while updates still insert
+    some fresh keys (capacity-headroom realism)."""
     from repro.core import COOUpdate
 
     names = list(relations)
@@ -94,8 +100,11 @@ def update_stream(relations, doms, ring, rng, batch: int, n_batches: int):
     for i in range(n_batches):
         rel = names[i % len(names)]
         sch = relations[rel]
-        keys = np.stack([rng.integers(0, doms[v], size=batch) for v in sch],
-                        axis=1).astype(np.int32)
+        keys = np.stack(
+            [rng.choice(key_pools[v], size=batch)
+             if key_pools and v in key_pools
+             else rng.integers(0, doms[v], size=batch) for v in sch],
+            axis=1).astype(np.int32)
         vals = rng.choice([-1.0, 1.0, 1.0, 1.0], size=batch).astype(np.float32)
         if set(ring.components) == {"v"}:
             payload = {"v": jnp.asarray(vals)}
@@ -103,6 +112,29 @@ def update_stream(relations, doms, ring, rng, batch: int, n_batches: int):
             payload = {**ring.zeros((batch,)), "c": jnp.asarray(vals)}
         out.append((rel, COOUpdate(tuple(sch), jnp.asarray(keys), payload)))
     return out
+
+
+def synth_low_fill_db(relations, doms, ring, rng, wide_var: str,
+                      n_active: int, rows_per_key: int = 8):
+    """Database whose ``wide_var`` dictionary is mostly *inactive*: every
+    relation's rows land on a shared pool of ``n_active`` values, so views
+    keyed on ``wide_var`` have fill ``n_active / D`` — the housing
+    ``pc = 65536`` sparse-view scenario.  Returns (db, active_values)."""
+    from repro.core import make_base_relation
+
+    active = np.sort(rng.choice(doms[wide_var], size=n_active, replace=False))
+    db = {}
+    for name, sch in relations.items():
+        shape = tuple(doms[v] for v in sch)
+        mult = np.zeros(shape, np.float32)
+        n_rows = n_active * rows_per_key
+        cols = [rng.choice(active, size=n_rows) if v == wide_var
+                else rng.integers(0, doms[v], size=n_rows) for v in sch]
+        np.add.at(mult, tuple(cols), 1.0)
+        mult = np.minimum(mult, 1.0)  # 0/1 multiplicities
+        db[name] = make_base_relation(tuple(sch), ring,
+                                      {"v": jnp.asarray(mult)})
+    return db, active
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,17 @@ from .delta import propagate_coo, propagate_factorized
 from .indicators import IndicatorState, add_indicators, gyo_residual, indicator_of, is_acyclic
 from .ivm import IVMEngine, canonical_state
 from .stream import PreparedStream, StreamExecutor, prepare_stream
-from .materialize import choose_materialized, views_on_path
+from .materialize import choose_materialized, gather_scatter_profile, views_on_path
+from .storage import (
+    SparseRelation,
+    StorageSpec,
+    ViewStorage,
+    apply_storage_plan,
+    as_dense,
+    make_base_relation,
+    plan_storage,
+    view_nbytes,
+)
 from .query import Query
 from .relations import COOUpdate, DenseRelation, FactorizedUpdate, PyRelation
 from .rings import (
@@ -26,11 +36,13 @@ __all__ = [
     "BatchedDelta", "COOUpdate", "DegreeMRing", "DenseRelation",
     "FactorizedUpdate", "IVMEngine", "IndicatorState", "MatrixRing",
     "PreparedStream", "PyDegreeMRing", "PyNumberRing", "PyRelation",
-    "PyRelationalRing", "Query", "Ring", "ScalarRing", "StreamExecutor",
-    "TupleRing", "VariableOrder", "VONode", "ViewNode", "add_indicators",
-    "build_view_tree", "canonical_state", "chain", "choose_materialized",
-    "contract_dense", "count_ring", "evaluate_view", "gyo_residual",
-    "heuristic_order", "indicator_of", "is_acyclic", "lift_relation",
-    "marginalize_dense", "prepare_stream", "propagate_coo",
-    "propagate_factorized", "sum_ring", "views_on_path",
+    "PyRelationalRing", "Query", "Ring", "ScalarRing", "SparseRelation",
+    "StorageSpec", "StreamExecutor", "TupleRing", "VariableOrder", "VONode",
+    "ViewNode", "ViewStorage", "add_indicators", "apply_storage_plan",
+    "as_dense", "build_view_tree", "canonical_state", "chain",
+    "choose_materialized", "contract_dense", "count_ring", "evaluate_view",
+    "gather_scatter_profile", "gyo_residual", "heuristic_order",
+    "indicator_of", "is_acyclic", "lift_relation", "make_base_relation",
+    "marginalize_dense", "plan_storage", "prepare_stream", "propagate_coo",
+    "propagate_factorized", "sum_ring", "view_nbytes", "views_on_path",
 ]

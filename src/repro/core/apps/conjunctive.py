@@ -28,6 +28,7 @@ import numpy as np
 from ..py_engine import PyEngineSpec, PyIVM
 from ..query import Query
 from ..relations import DenseRelation, PyRelation
+from ..storage import make_base_relation
 from ..rings import PyNumberRing, PyRelationalRing, count_ring, sum_ring
 from ..variable_orders import VariableOrder
 from ..view_tree import ViewNode, build_view_tree
@@ -116,7 +117,8 @@ def make_factorized_engine(
     ring = count_ring(jnp.float32)
     q = Query(relations=relations, free_vars=(), ring=ring, domains=domains)
     db = {
-        name: DenseRelation(tuple(sch), ring, {"v": jnp.asarray(db_mult[name], jnp.float32)})
+        name: make_base_relation(tuple(sch), ring,
+                                 {"v": jnp.asarray(db_mult[name], jnp.float32)})
         for name, sch in relations.items()
     }
     eng = IVMEngine.build(

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from ..ivm import IVMEngine
 from ..query import Query
 from ..relations import DenseRelation, FactorizedUpdate
+from ..storage import make_base_relation
 from ..rings import ScalarRing, sum_ring
 from ..variable_orders import VariableOrder, VONode
 
@@ -67,7 +68,8 @@ def balanced_order(n: int) -> VariableOrder:
 
 def matrices_to_db(ring: ScalarRing, mats: Sequence[jnp.ndarray]) -> dict[str, DenseRelation]:
     return {
-        f"A{i+1}": DenseRelation((f"X{i+1}", f"X{i+2}"), ring, {"v": jnp.asarray(m)})
+        f"A{i+1}": make_base_relation((f"X{i+1}", f"X{i+2}"), ring,
+                                      {"v": jnp.asarray(m)})
         for i, m in enumerate(mats)
     }
 
@@ -89,8 +91,8 @@ def rank1_update(k: int, u: jnp.ndarray, v: jnp.ndarray, ring: ScalarRing) -> Fa
     return FactorizedUpdate(
         (f"X{k}", f"X{k+1}"),
         (
-            DenseRelation((f"X{k}",), ring, {"v": jnp.asarray(u)}),
-            DenseRelation((f"X{k+1}",), ring, {"v": jnp.asarray(v)}),
+            make_base_relation((f"X{k}",), ring, {"v": jnp.asarray(u)}),
+            make_base_relation((f"X{k+1}",), ring, {"v": jnp.asarray(v)}),
         ),
     )
 

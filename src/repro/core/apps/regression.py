@@ -23,6 +23,7 @@ import numpy as np
 from ..ivm import IVMEngine
 from ..query import Query
 from ..relations import DenseRelation
+from ..storage import make_base_relation
 from ..rings import DegreeMRing, ScalarRing, sum_ring
 from ..variable_orders import VariableOrder
 
@@ -63,7 +64,7 @@ def relation_from_multiplicities(
         "s": payload["s"],
         "Q": payload["Q"],
     }
-    return DenseRelation(schema, ring, payload)
+    return make_base_relation(schema, ring, payload)
 
 
 # ---------------------------------------------------------------------------

@@ -154,12 +154,19 @@ def marginalize_dense(
 class BatchedDelta:
     """payload leaves: [B, *domains(dense_schema), *comp_shape].
 
-    ``pending_gather`` is a deferred sibling-view gather ``(src_flat [Sg],
-    in_ids [B])``: for scalar-payload rings, ``join_dense`` against a view
-    fully bound by the delta's COO vars is just a per-row gather-multiply,
-    so it is left symbolic and fused with the eventual scatter in
-    ``apply_to`` (the gather-⊗-⊎ kernel); any operation that needs the
-    materialized payload forces it first (:meth:`_force`)."""
+    ``pending_gather`` is a deferred sibling-view gather ``(src_plane
+    [Sg, d], in_ids [B])``: for bilinear *commutative* rings, ``join_dense``
+    against a view fully bound by the delta's COO vars is just a per-row
+    gather-multiply, so it is left symbolic — the source payload plane is
+    the view's flattened ``[Sg, d]`` component plane (dense views flatten
+    whole; sparse views resolve hash slots at defer time and append a zero
+    row that missed probes index) — and fused with the eventual scatter in
+    ``apply_to``.  Scalar-payload rings take the single Pallas gather-⊗-⊎
+    kernel; wider rings gather the plane once and run the ring's bilinear
+    product row-wise before the scatter.  Non-commutative rings never
+    defer (the gathered factor must multiply from its original side), and
+    any operation that needs the materialized payload forces it first
+    (:meth:`_force`)."""
 
     coo_schema: tuple[str, ...]
     dense_schema: tuple[str, ...]
@@ -188,28 +195,54 @@ class BatchedDelta:
         )
 
     # -- deferred sibling gather --------------------------------------------
-    def _defer_ok(self, view: DenseRelation) -> bool:
-        """A join against ``view`` can stay symbolic when the ring payload
-        is a single scalar (the multiply is elementwise on [B]), the delta
-        carries no dense axes, and every view var is COO-bound (the join is
-        a pure per-row gather)."""
+    def _is_scalar_ring(self) -> bool:
+        comps = self.ring.components
+        return len(comps) == 1 and next(iter(comps.values())) == ()
+
+    def _defer_ok(self, view) -> bool:
+        """A join against ``view`` can stay symbolic when the ring product
+        is bilinear and commutative (deferral reorders the gathered factor
+        past later lift-multiplies), the delta carries no dense axes, and
+        every view var is COO-bound (the join is a pure per-row gather)."""
         ring = self.ring
-        if len(ring.components) != 1 or self.pending_gather is not None:
+        if self.pending_gather is not None or self.dense_schema:
             return False
-        comp = next(iter(ring.components))
-        if ring.components[comp] != () or self.dense_schema:
+        if ring.mul_terms is None or not ring.commutative:
             return False
         return bool(view.schema) and all(v in self.coo_schema
                                          for v in view.schema)
+
+    def _gather_plan(self, view) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(src_plane [Sg, d], in_ids [B]) for a deferred gather of
+        ``view`` at the delta's COO coordinates."""
+        from repro.core import storage
+
+        keys = jnp.stack([self.key_col(v) for v in view.schema], axis=1)
+        if isinstance(view, storage.SparseRelation):
+            slots, found = view.lookup(keys)
+            plane = view.gather_plane()  # [C + 1, d], zero row at C
+            ids = jnp.where(found, slots, view.capacity)
+            return plane, ids
+        plane = storage.flatten_payload(self.ring, view.payload,
+                                        view.domains)
+        return plane, storage.linear_ids(keys, view.domains)
 
     def _force(self) -> "BatchedDelta":
         """Materialize a deferred sibling gather into the payload."""
         if self.pending_gather is None:
             return self
-        src_flat, ids = self.pending_gather
-        comp = next(iter(self.ring.components))
-        g = jnp.take(src_flat, ids, axis=0, mode="clip")
-        payload = {comp: self.payload[comp] * g}
+        from repro.core import storage
+
+        src_plane, ids = self.pending_gather
+        g = jnp.take(src_plane, ids, axis=0, mode="clip")  # [B, d]
+        if self._is_scalar_ring():
+            comp = next(iter(self.ring.components))
+            payload = {comp: self.payload[comp] * g[:, 0]}
+        else:
+            gp = storage.unflatten_payload(self.ring, g, (self.batch,),
+                                           dtype=self.ring.dtype)
+            payload = _mul_broadcast(self.ring, self.payload, gp,
+                                     self.dense_schema)
         return dataclasses.replace(self, payload=payload, pending_gather=None)
 
     # -- lift-and-marginalize one variable ---------------------------------
@@ -256,22 +289,31 @@ class BatchedDelta:
         )
 
     # -- join with a materialized sibling view ------------------------------
-    def join_dense(self, view: DenseRelation) -> "BatchedDelta":
+    def join_dense(self, view) -> "BatchedDelta":
         """δ ⊗ V: coo-shared vars of V are gathered at the delta's coords;
         dense-shared vars align elementwise; fresh vars of V become new
-        dense axes."""
+        dense axes.  ``view`` is any ViewStorage: sparse siblings resolve
+        to gathers (deferred where possible) and densify only when the
+        join would grow dense axes from them."""
         ring = self.ring
         if self._defer_ok(view):
-            from repro.kernels import scatter_ops
-
-            comp = next(iter(ring.components))
-            ids = scatter_ops.linear_ids(
-                jnp.stack([self.key_col(v) for v in view.schema], axis=1),
-                view.domains)
-            src_flat = view.payload[comp].reshape(-1)
-            return dataclasses.replace(self, pending_gather=(src_flat, ids))
+            return dataclasses.replace(self,
+                                       pending_gather=self._gather_plan(view))
         if self.pending_gather is not None:
             return self._force().join_dense(view)
+        from repro.core import storage
+
+        if isinstance(view, storage.SparseRelation):
+            if view.schema and all(v in self.coo_schema for v in view.schema):
+                # per-row gather-multiply (e.g. a second sibling after a
+                # forced pending gather, or a delta carrying dense axes)
+                keys = jnp.stack([self.key_col(v) for v in view.schema],
+                                 axis=1)
+                g = view.gather(keys)  # [B, *comp]
+                payload = _mul_broadcast(ring, self.payload, g,
+                                         self.dense_schema)
+                return dataclasses.replace(self, payload=payload)
+            view = view.to_dense()  # join grows dense axes: materialize
         shared_coo = [v for v in view.schema if v in self.coo_schema]
         shared_dense = [v for v in view.schema if v in self.dense_schema]
         fresh = [v for v in view.schema if v not in shared_coo and v not in shared_dense]
@@ -329,16 +371,20 @@ class BatchedDelta:
         )
 
     # -- application ---------------------------------------------------------
-    def apply_to(self, view: DenseRelation,
-                 backend: str | None = None) -> DenseRelation:
-        """view ⊎ δ : scatter-add into the materialized dense view.
+    def apply_to(self, view, backend: str | None = None):
+        """view ⊎ δ : scatter-add into the materialized view (any storage).
 
         Scatters route through the ring scatter dispatch layer
         (``repro.kernels.scatter_ops``); a pending sibling gather fuses
-        into one gather-⊗-⊎ kernel call."""
+        into one gather-⊗-⊎ kernel call (scalar rings) or one flat
+        gather + row-wise ring product + scatter (bilinear rings)."""
         ring = self.ring
         assert set(view.schema) == set(self.coo_schema) | set(self.dense_schema), (
             view.schema, self.coo_schema, self.dense_schema)
+        from repro.core import storage
+
+        if isinstance(view, storage.SparseRelation):
+            return self._apply_sparse(view, backend)
         coo_axes = [view.schema.index(v) for v in self.coo_schema]
         dense_axes = [view.schema.index(v) for v in self.dense_schema]
         from repro.kernels import scatter_ops
@@ -348,11 +394,16 @@ class BatchedDelta:
             # its own key column — no transpose of the materialized view
             keys = jnp.stack([self.key_col(v) for v in view.schema], axis=1)
             if self.pending_gather is not None:
-                src_flat, in_ids = self.pending_gather
-                comp = next(iter(ring.components))
-                new_payload = scatter_ops.gather_mul_scatter_payload(
-                    view.payload, view.domains, keys, src_flat, in_ids,
-                    self.payload[comp], ring, backend=backend)
+                src_plane, in_ids = self.pending_gather
+                if self._is_scalar_ring():
+                    comp = next(iter(ring.components))
+                    new_payload = scatter_ops.gather_mul_scatter_payload(
+                        view.payload, view.domains, keys, src_plane, in_ids,
+                        self.payload[comp], ring, backend=backend)
+                else:
+                    new_payload = scatter_ops.gather_ringmul_scatter_payload(
+                        view.payload, view.domains, keys, src_plane, in_ids,
+                        self.payload, ring, backend=backend)
             else:
                 new_payload = scatter_ops.scatter_add_payload(
                     view.payload, view.domains, keys, self.payload, ring,
@@ -439,6 +490,46 @@ class BatchedDelta:
             new_payload[comp] = jnp.transpose(plane.reshape(pshape), inv)
             off += w
         return DenseRelation(view.schema, ring, new_payload)
+
+    def _apply_sparse(self, view, backend: str | None):
+        """⊎ into a hashed-COO view: hash-slot resolution + the same flat
+        kernel scatters.  Mixed COO×dense deltas enumerate their (static)
+        dense grid into COO rows first."""
+        import numpy as np
+
+        ring = self.ring
+        assert view.schema, "scalar-keyed views are always dense"
+        if not self.dense_schema:
+            keys = jnp.stack([self.key_col(v) for v in view.schema], axis=1)
+            if self.pending_gather is not None and self._is_scalar_ring():
+                # fused: insert slots, then one gather-⊗-⊎ over the plane
+                src_plane, in_ids = self.pending_gather
+                comp = next(iter(ring.components))
+                return view.gather_mul_scatter(keys, src_plane, in_ids,
+                                               self.payload[comp],
+                                               backend=backend)
+            slf = self._force()  # non-scalar pending: gather-then-scatter
+            return view.scatter_add(keys, slf.payload, backend=backend)
+        slf = self._force()
+        B = slf.batch
+        P = 1
+        for d in slf.dense_domains:
+            P *= int(d)
+        grid = np.stack(
+            np.meshgrid(*[np.arange(d) for d in slf.dense_domains],
+                        indexing="ij"), -1,
+        ).reshape(P, len(slf.dense_schema)).astype(np.int32)
+        cols = []
+        for v in view.schema:
+            if v in slf.coo_schema:
+                cols.append(jnp.repeat(slf.key_col(v), P))
+            else:
+                j = slf.dense_schema.index(v)
+                cols.append(jnp.tile(jnp.asarray(grid[:, j]), B))
+        keys = jnp.stack(cols, axis=1)
+        payload = {c: slf.payload[c].reshape(B * P, *shp)
+                   for c, shp in ring.components.items()}
+        return view.scatter_add(keys, payload, backend=backend)
 
     def densify(self) -> DenseRelation:
         """Materialize into a dense relation over coo+dense schema (testing,

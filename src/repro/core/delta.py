@@ -29,23 +29,28 @@ from .view_tree import ViewNode
 
 @dataclasses.dataclass
 class PropagationResult:
-    """Deltas per affected view name (leaf-to-root order) + updated views."""
+    """Deltas per affected view name (leaf-to-root order) + updated views.
+
+    ``updated`` values carry each view's planned storage backend
+    (``ViewStorage``): a dense view stays dense, a hashed-COO view stays
+    sparse — the delta algebra dispatches per storage."""
 
     deltas: dict[str, BatchedDelta | FactorizedUpdate]
-    updated: dict[str, DenseRelation]
+    updated: dict[str, object]
 
 
 def propagate_coo(
     tree: ViewNode,
-    materialized: Mapping[str, DenseRelation],
+    materialized: Mapping[str, object],
     query: Query,
     rel: str,
     upd: COOUpdate,
     indicators: Mapping[str, DenseRelation] | None = None,
 ) -> PropagationResult:
     """Propagate a COO batch update along the delta tree, updating every
-    materialized view on the path.  ``indicators`` maps node names to
-    maintained ∃-projection denses (Sec. 6)."""
+    materialized view on the path (dense or sparse storage).
+    ``indicators`` maps node names to maintained ∃-projection denses
+    (Sec. 6)."""
     ring = query.ring
     path = views_on_path(tree, rel)
     if _should_densify(path, upd, query):
@@ -224,10 +229,14 @@ def _densified_delta(query: Query, rel: str, upd: COOUpdate) -> BatchedDelta:
     )
 
 
-def _absorb(factors: list[DenseRelation], view: DenseRelation, ring) -> None:
+def _absorb(factors: list[DenseRelation], view, ring) -> None:
     """Join a materialized sibling view into the factor list.  Factors whose
     variables intersect the view's schema merge first; disjoint factors stay
-    independent (this is what preserves the factorized complexity)."""
+    independent (this is what preserves the factorized complexity).  Sparse
+    siblings materialize first (factorized updates are per-call-path only;
+    the planner keeps factor-joined views dense)."""
+    if not isinstance(view, DenseRelation):
+        view = view.to_dense()
     touching = [f for f in factors if set(f.schema) & set(view.schema)]
     if not touching:
         # cartesian sibling: keep as its own factor
@@ -250,17 +259,18 @@ def _marginalize_factor(factors: list[DenseRelation], var: str, query: Query) ->
     raise KeyError(f"variable {var} not found in any factor")
 
 
-def _apply_factorized(
-    view: DenseRelation, factors: list[DenseRelation], ring
-) -> DenseRelation:
+def _apply_factorized(view, factors: list[DenseRelation], ring):
     """view ⊎ (⊗ factors): outer-product accumulate.  Cost is the size of the
     materialized view (O(p²) for matrix views), not of any larger product.
     Scalar factors (fully-marginalized groups, e.g. ⊕_E δS_E in Example 5.2)
-    scale the product."""
+    scale the product.  A sparse view absorbs the dense product by key-grid
+    enumeration (storage-preserving; eager path only)."""
     covered = {v for f in factors for v in f.schema}
     assert covered == set(view.schema), (covered, view.schema)
     acc = factors[0]
     for f in factors[1:]:
         acc = contract_dense(acc, f, marg=())
     acc = acc.transpose(view.schema)
+    if not isinstance(view, DenseRelation):
+        return view.add_dense(acc)
     return view.add(acc)

@@ -147,7 +147,7 @@ class IndicatorState:
         gathers pre-update state once per row); the data pipeline dedupes
         batches before indicator-bearing updates.
         """
-        from repro.kernels import scatter_ops
+        from . import storage
 
         ring = query.ring
         cols = [upd.schema.index(v) for v in self.proj]
@@ -157,11 +157,12 @@ class IndicatorState:
         was_nz = ~ring.is_zero(old_payload)
         now_nz = ~ring.is_zero(new_payload)
         dcount = now_nz.astype(jnp.int32) - was_nz.astype(jnp.int32)  # [B]
-        # counts maintenance runs on the linearized key plane shared with
-        # the scatter subsystem: one flat int32 scatter + two flat gathers
-        # instead of k-dimensional indexing (counts stay int32, so the
-        # scatter itself keeps the exact XLA path)
-        ids = scatter_ops.linear_ids(proj_keys, self.counts.shape)
+        # counts maintenance runs on the linearized key plane owned by the
+        # storage layer (shared with the scatter subsystem): one flat int32
+        # scatter + two flat gathers instead of k-dimensional indexing
+        # (counts stay int32, so the scatter itself keeps the exact XLA
+        # path)
+        ids = storage.linear_ids(proj_keys, self.counts.shape)
         counts_flat = self.counts.reshape(-1)
         new_counts_flat = counts_flat.at[ids].add(dcount)
         new_counts = new_counts_flat.reshape(self.counts.shape)

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import storage as storage_mod
 from .contraction import BatchedDelta
 from .delta import PropagationResult, propagate_coo, propagate_factorized
 from .indicators import IndicatorState, add_indicators
@@ -39,12 +40,14 @@ class IVMEngine:
     query: Query
     tree: ViewNode
     materialized_names: set[str]
-    views: dict[str, DenseRelation]
+    views: dict[str, object]  # name -> ViewStorage (dense or sparse)
     base: dict[str, DenseRelation]
     indicators: dict[str, IndicatorState]  # keyed by node name carrying it
     strategy: str
     updatable: tuple[str, ...]
     store_base: bool
+    #: per-view storage decisions (repro.core.storage.plan_storage)
+    storage_plan: dict = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -58,7 +61,17 @@ class IVMEngine:
         use_indicators: bool = False,
         fuse_chains: bool = True,
         premarg: bool = False,
+        storage: str | None = None,
+        storage_overrides: Mapping[str, str] | None = None,
+        storage_opts: Mapping | None = None,
     ) -> "IVMEngine":
+        """Build an engine; ``storage`` selects the view-storage mode
+        ("auto" | "dense" | "sparse"; default: ``REPRO_VIEW_STORAGE`` env
+        var, else auto — the planner picks dense vs sparse per view from
+        modeled domain product × fill).  ``storage_overrides`` forces a
+        backend per view name; ``storage_opts`` are extra
+        :func:`repro.core.storage.plan_storage` keywords (headroom,
+        thresholds, capacities)."""
         updatable = tuple(updatable if updatable is not None else query.relations)
         vo = var_order or heuristic_order(query)
         tree = build_view_tree(query, vo, fuse_chains=fuse_chains)
@@ -98,6 +111,13 @@ class IVMEngine:
             mat |= {k for k in store if k.startswith("W:")}
         for name in mat:
             views[name] = store[name]
+        # storage planning: convert each materialized view to its planned
+        # backend (dense small views, hashed-COO sparse large/low-fill ones)
+        plan = storage_mod.plan_storage(
+            views, tree=tree, updatable=updatable, strategy=strategy,
+            mode=storage, overrides=storage_overrides,
+            **dict(storage_opts or {}))
+        views = storage_mod.apply_storage_plan(views, plan)
         # base relations are stored (as copies: leaf views alias the caller's
         # database arrays, and state donation requires every buffer in the
         # state pytree to appear exactly once) only where maintenance reads
@@ -123,32 +143,82 @@ class IVMEngine:
             strategy=strategy,
             updatable=updatable,
             store_base=store_base,
+            storage_plan=plan,
         )
 
     # ---------------------------------------------------------------- result
     def result(self) -> DenseRelation:
+        """The root view, densely materialized (reporting API: callers
+        index payload tensors positionally; a sparse root densifies here)."""
+        return storage_mod.as_dense(self.views[self.tree.name])
+
+    def result_storage(self):
+        """The root view under its planned storage backend."""
         return self.views[self.tree.name]
 
     def num_materialized(self) -> int:
         return len(self.materialized_names)
 
     def memory_bytes(self) -> int:
+        """View-state bytes under the actual storage backends (a sparse
+        view counts its key table + payload plane, not the dense extent)."""
         total = 0
         for v in self.views.values():
-            for arr in jax.tree.leaves(v.payload):
-                total += arr.size * arr.dtype.itemsize
+            total += storage_mod.view_nbytes(v)
         for ind in self.indicators.values():
             total += ind.counts.size * 4
-            for arr in jax.tree.leaves(ind.dense.payload):
-                total += arr.size * arr.dtype.itemsize
+            total += storage_mod.view_nbytes(ind.dense)
         return total
 
     # ---------------------------------------------------------------- update
     def apply_update(self, rel: str, upd: COOUpdate | FactorizedUpdate) -> None:
+        """Eager (per-call) update.  Sparse views on the update's delta
+        path rehash to 2× capacity when this batch could cross the
+        load-factor bound — growth needs a host sync, so it lives only on
+        this path; jitted triggers and the stream executor keep capacities
+        static (the planner's headroom covers them)."""
+        touched = self._touched_view_names(rel)
+        self.views = {
+            name: (storage_mod.grow_if_loaded(
+                       v, self._insert_budget(v, rel, upd))
+                   if name in touched else v)
+            for name, v in self.views.items()
+        }
         views, base, indicators = self.functional_update(
             self.views, self.base, self.indicators, rel, upd
         )
         self.views, self.base, self.indicators = views, base, indicators
+
+    def _touched_view_names(self, rel: str) -> set[str]:
+        """Views an update to ``rel`` may insert keys into: the delta path
+        (plus premarg companions) and, for indicator relations, the
+        indicator node's path to the root."""
+        names: set[str] = set()
+        for node in views_on_path(self.tree, rel):
+            names.add(node.name)
+            names.add(f"W:{node.name}")
+        for node_name, ind in self.indicators.items():
+            if ind.rel_name == rel:
+                for node in _path_to_root(self.tree, node_name):
+                    names.add(node.name)
+                    names.add(f"W:{node.name}")
+        return names
+
+    def _insert_budget(self, view, rel: str, upd) -> int:
+        """Worst-case distinct keys one update can insert into ``view``:
+        B rows × the domain product of view variables the update does not
+        bind (a mixed COO×dense apply enumerates that grid); factorized
+        updates may touch the whole key grid.  ``grow_if_loaded`` clamps
+        to the view's domain product."""
+        if not isinstance(view, storage_mod.SparseRelation):
+            return 0
+        if not isinstance(upd, COOUpdate):
+            return storage_mod.comp_width(view.domains)
+        extra = 1
+        for v in view.schema:
+            if v not in upd.schema:
+                extra *= int(self.query.domains[v])
+        return upd.batch * extra
 
     def trigger_body(self, rel: str):
         """The pure (uncompiled) maintenance trigger for updates to ``rel``:

@@ -11,6 +11,12 @@ per-variable factors — the paper's Sec. 5).
   COOUpdate          batch of (key tuple -> payload) update rows
   FactorizedUpdate   ⊗ of per-variable-group factors (rank-1 style updates)
   PyRelation         host-side exact oracle (dict keys -> payload)
+
+``DenseRelation`` is one implementation of the ``ViewStorage`` protocol
+(``repro.core.storage``, DESIGN.md §7); the hashed-COO ``SparseRelation``
+lives there and the storage planner picks between them per view.  App code
+should construct base relations through ``storage.make_base_relation``
+rather than calling ``DenseRelation(...)`` directly.
 """
 from __future__ import annotations
 
@@ -51,9 +57,19 @@ class DenseRelation:
     def domain_of(self, var: str) -> int:
         return self.domains[self.schema.index(var)]
 
-    def num_keys(self) -> int:
-        """Number of keys with non-zero payload (device reduction)."""
-        return int(jnp.sum(~self.ring.is_zero(self.payload)))
+    def num_keys(self):
+        """Number of keys with non-zero payload, as a *device* scalar —
+        hot paths (planners, admission heuristics) must not block on a
+        host sync; use :meth:`num_keys_sync` for tests and reporting."""
+        return jnp.sum(~self.ring.is_zero(self.payload))
+
+    def num_keys_sync(self) -> int:
+        """Host-synced :meth:`num_keys` (tests / reporting / planning)."""
+        return int(self.num_keys())
+
+    def nbytes(self) -> int:
+        return sum(arr.size * arr.dtype.itemsize
+                   for arr in jax.tree.leaves(self.payload))
 
     @classmethod
     def zeros(cls, schema, ring, domains):
@@ -89,11 +105,31 @@ class DenseRelation:
         idx = tuple(keys[:, i] for i in range(k))
         return {comp: self.payload[comp][idx] for comp in self.ring.components}
 
-    def add(self, other: "DenseRelation") -> "DenseRelation":
+    def add(self, other) -> "DenseRelation":
         assert self.schema == other.schema
+        if not isinstance(other, DenseRelation):
+            other = other.to_dense()
         return DenseRelation(
             self.schema, self.ring, self.ring.add(self.payload, other.payload)
         )
+
+    def marginalize(self, var: str, lift_rel=None) -> "DenseRelation":
+        """⊕_var with optional lifting (ViewStorage protocol surface)."""
+        from .contraction import marginalize_dense
+
+        return marginalize_dense(self, var, lift_rel)
+
+    def contract(self, other, marg: Sequence[str] = (),
+                 out_order=None) -> "DenseRelation":
+        """⊕_marg self ⊗ other (ViewStorage protocol surface)."""
+        from .contraction import contract_dense
+
+        if not isinstance(other, DenseRelation):
+            other = other.to_dense()
+        return contract_dense(self, other, marg=marg, out_order=out_order)
+
+    def to_dense(self) -> "DenseRelation":
+        return self
 
     def transpose(self, new_schema: Sequence[str]) -> "DenseRelation":
         perm = [self.schema.index(v) for v in new_schema]

@@ -43,6 +43,12 @@ relations' triggers.  The state is donated at the jit boundary, so a whole
 stream executes with exactly one dispatch and no per-step host round-trip.
 The per-call trigger path is kept as the correctness oracle
 (tests/test_stream.py).
+
+Mixed view storage threads through unchanged: a hashed-COO
+``SparseRelation`` (repro.core.storage) is a registered pytree whose table
+and payload plane ride in the carry next to dense views — its capacity is
+part of the (static) state signature, so sparse tables never grow inside a
+compiled stream; size them via the storage planner's headroom.
 """
 from __future__ import annotations
 

@@ -177,6 +177,8 @@ def evaluate_view(
     """
     if node.is_leaf:
         rel = db[node.relation]
+        if not isinstance(rel, DenseRelation):  # sparse/base ViewStorage
+            rel = rel.to_dense()
         out = rel
     else:
         acc: DenseRelation | None = None

@@ -5,14 +5,13 @@ Every view-maintenance trigger funnels its scatter-adds through here:
 ``IndicatorState`` dense maintenance) and ``BatchedDelta.apply_to``.  The
 layer owns everything the kernels in ``ring_scatter.py`` don't:
 
-* **Key linearization** — multi-column COO keys ``[B, k]`` over dictionary
-  domains ``(D1..Dk)`` flatten to row-major segment ids ``[B]``, so one
-  kernel invocation serves any key arity.
-* **Payload pytree shim** — ring payloads (dicts of ``[*doms, *comp]``
-  arrays) flatten to a single ``[S, d]`` plane (components concatenated on
-  the feature axis) and unflatten after the kernel; the degree-m cofactor
-  ring's (c, s, Q) triple becomes one ``d = 1 + m + m²`` plane instead of
-  three kernel launches.
+* **Key linearization + payload pytree shim** — multi-column COO keys
+  ``[B, k]`` flatten to row-major segment ids and ring payloads flatten to
+  a single ``[S, d]`` plane (the degree-m (c, s, Q) triple becomes one
+  ``d = 1 + m + m²`` plane instead of three kernel launches).  Since the
+  ViewStorage redesign this machinery is owned by the shared storage layer
+  (``repro.core.storage`` — the hashed-COO backend stores views *as* that
+  plane) and re-exported here.
 * **Compaction** ("compact" backends) — for large segment spaces the
   one-hot grid over the full domain product is wasted work; a sort/rank
   pass dedups the batch's keys, a segment-sum over *local* ranks (grid
@@ -41,10 +40,17 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core.storage import (comp_width, flatten_payload, linear_ids,
+                                unflatten_payload)
+
 from . import ref
 from .ring_scatter import gather_mul_scatter as _gms_pallas
 from .ring_scatter import scatter_add_onehot as _scatter_pallas
 from .segment_ring_sum import segment_ring_sum as _segsum_pallas
+
+#: back-compat alias — the key-linearization / payload-plane shim is owned
+#: by the storage layer (repro.core.storage) since the ViewStorage redesign
+_comp_width = comp_width
 
 ENV_VAR = "REPRO_SCATTER_BACKEND"
 
@@ -92,50 +98,6 @@ def resolve_backend(num_segments: int, batch: int, width: int,
     return "onehot" if num_segments <= max(4096, 8 * batch) else "compact"
 
 
-# ---------------------------------------------------------------------------
-# linearization + payload flattening
-# ---------------------------------------------------------------------------
-def linear_ids(keys: jnp.ndarray, domains) -> jnp.ndarray:
-    """Row-major flat segment ids for keys [B, k] over domains (D1..Dk)."""
-    assert keys.ndim == 2 and keys.shape[1] == len(domains), (
-        keys.shape, domains)
-    if keys.shape[1] == 0:
-        return jnp.zeros((keys.shape[0],), jnp.int32)
-    stride = 1
-    strides = []
-    for d in reversed(domains):
-        strides.append(stride)
-        stride *= int(d)
-    strides = jnp.asarray(strides[::-1], jnp.int32)
-    return jnp.sum(keys.astype(jnp.int32) * strides[None, :], axis=1)
-
-
-def _comp_width(shp) -> int:
-    w = 1
-    for s in shp:
-        w *= int(s)
-    return w
-
-
-def flatten_payload(ring, payload, lead_shape) -> jnp.ndarray:
-    """Concatenate ring components into one ``[prod(lead), d_total]`` plane."""
-    lead = _comp_width(lead_shape)
-    planes = [payload[c].reshape(lead, _comp_width(shp))
-              for c, shp in ring.components.items()]
-    return planes[0] if len(planes) == 1 else jnp.concatenate(planes, axis=1)
-
-
-def unflatten_payload(ring, flat: jnp.ndarray, lead_shape, dtype=None):
-    """Inverse of :func:`flatten_payload` (splits the feature axis)."""
-    out, off = {}, 0
-    for c, shp in ring.components.items():
-        w = _comp_width(shp)
-        plane = flat[:, off:off + w]
-        out[c] = plane.reshape(*lead_shape, *shp).astype(dtype or flat.dtype)
-        off += w
-    return out
-
-
 def kernelable(ring, *payloads) -> bool:
     """Kernel paths accumulate in f32; any other dtype keeps the exact
     ``.at[].add`` path (count rings are int32 — bit-exactness over speed)."""
@@ -175,7 +137,11 @@ def _scatter_add_flat(view, seg_ids, values, backend: str,
     S, d = view.shape
     B = seg_ids.shape[0]
     if backend == "jnp":
-        return view.at[seg_ids].add(values, mode="drop")
+        # negative ids wrap under XLA's drop mode; remap padding to an
+        # out-of-range row so it actually drops (the kernel/compact
+        # backends already treat ids < 0 as padding)
+        return view.at[jnp.where(seg_ids < 0, S, seg_ids)].add(
+            values, mode="drop")
     if backend.startswith("compact"):
         return _compact_scatter(view, seg_ids, values, backend,
                                 block_s=block_s, block_d=block_d,
@@ -255,7 +221,8 @@ def _gather_mul_scatter_flat(view, out_ids, src, in_ids, scale,
     B = out_ids.shape[0]
     if backend == "jnp":
         vals = jnp.take(src, in_ids, axis=0, mode="clip") * scale[:, None]
-        return view.at[out_ids].add(vals, mode="drop")
+        return view.at[jnp.where(out_ids < 0, S, out_ids)].add(
+            vals, mode="drop")
     if backend.startswith("compact") or Sg > MAX_FUSED_SRC:
         # compaction dedups output keys; the gather stays separate
         vals = jnp.take(src, in_ids, axis=0, mode="clip") * scale[:, None]
@@ -305,11 +272,14 @@ def scatter_add_payload(view_payload, domains, keys, values, ring,
     return unflatten_payload(ring, out, domains, dtype=ring.dtype)
 
 
-def gather_mul_scatter_payload(view_payload, domains, keys, src_flat, in_ids,
-                               scale, ring, backend: str | None = None):
+def gather_mul_scatter_payload(view_payload, domains, keys, src_plane,
+                               in_ids, scale, ring,
+                               backend: str | None = None):
     """``view ⊎ (scale ⊗ src[in_ids])`` for single-scalar-component rings —
     the deferred sibling gather of ``BatchedDelta.join_dense`` fused with
-    the final scatter.  ``src_flat``: [Sg] flattened source view plane."""
+    the final scatter.  ``src_plane``: [Sg, 1] flattened source payload
+    plane (dense views flatten whole; sparse views append a zero row that
+    missed probes index)."""
     comp = next(iter(ring.components))
     assert len(ring.components) == 1 and ring.components[comp] == (), (
         "fused gather-scatter serves scalar payload rings only")
@@ -318,12 +288,28 @@ def gather_mul_scatter_payload(view_payload, domains, keys, src_flat, in_ids,
     B = keys.shape[0]
     resolved = resolve_backend(S, B, 1, backend)
     if resolved == "jnp" or not kernelable(ring, view_payload) \
-            or jnp.dtype(src_flat.dtype) != jnp.float32:
+            or jnp.dtype(src_plane.dtype) != jnp.float32:
         idx = tuple(keys[:, i] for i in range(keys.shape[1]))
-        vals = scale * jnp.take(src_flat, in_ids, axis=0, mode="clip")
+        vals = scale * jnp.take(src_plane[:, 0], in_ids, axis=0, mode="clip")
         return {comp: view_payload[comp].at[idx].add(vals)}
     ids = linear_ids(keys, domains)
     out = gather_mul_scatter_flat(
-        view_payload[comp].reshape(S, 1), ids, src_flat[:, None],
+        view_payload[comp].reshape(S, 1), ids, src_plane,
         in_ids.astype(jnp.int32), scale, backend=resolved)
     return {comp: out.reshape(domains).astype(ring.dtype)}
+
+
+def gather_ringmul_scatter_payload(view_payload, domains, keys, src_plane,
+                                   in_ids, delta_payload, ring,
+                                   backend: str | None = None):
+    """``view ⊎ (delta ⊗ src[in_ids])`` for bilinear non-scalar rings: one
+    flat gather of the concatenated component plane, a row-wise ring
+    product, then the ordinary payload scatter (which dispatches to the
+    kernels).  The Pallas-fused single-kernel path stays scalar-only; this
+    is the multi-component analogue of the deferred sibling gather."""
+    B = keys.shape[0]
+    g = jnp.take(src_plane, in_ids.astype(jnp.int32), axis=0, mode="clip")
+    gp = unflatten_payload(ring, g, (B,), dtype=ring.dtype)
+    vals = ring.mul(delta_payload, gp)
+    return scatter_add_payload(view_payload, domains, keys, vals, ring,
+                               backend=backend)

@@ -1,0 +1,374 @@
+"""ViewStorage protocol: sparse ↔ dense ↔ PyRelation oracle equivalence.
+
+The hashed-COO ``SparseRelation`` (repro.core.storage) must be
+value-equivalent to ``DenseRelation`` and to the exact host oracle
+``PyRelation`` for every protocol op — gather / scatter_add / marginalize /
+contract — under duplicate keys, deletes (negative multiplicities), and
+table growth/rehash.  Payloads are integer-valued f32, so every
+accumulation order is exact and the comparisons are bit-for-bit.
+
+Also covered here: the storage planner (auto thresholds, env/override
+resolution), the mixed dense/sparse engine round-trip through the fused
+stream executor (scan, rounds, and switch dispatch), and the PR-2
+follow-on extension of the deferred sibling gather to bilinear non-scalar
+rings (with the non-commutative fallback assert path).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (COOUpdate, DenseRelation, IVMEngine, MatrixRing,
+                        PyRelation, Query, SparseRelation, StreamExecutor,
+                        chain, plan_storage, prepare_stream, sum_ring)
+from repro.core.contraction import BatchedDelta
+from repro.core.rings import DegreeMRing, PyNumberRing
+from repro.core import storage as storage_mod
+
+DOMS = (5, 4, 3)
+SCHEMA = ("A", "B", "C")
+
+
+def _rand_batch(rng, b, doms=DOMS):
+    keys = np.stack([rng.integers(0, d, size=b) for d in doms],
+                    axis=1).astype(np.int32)
+    vals = rng.integers(-3, 4, size=b).astype(np.float32)  # deletes included
+    return jnp.asarray(keys), jnp.asarray(vals)
+
+
+def _py_of(keys, vals, schema=SCHEMA):
+    py = PyRelation(schema, PyNumberRing())
+    for k, v in zip(np.asarray(keys), np.asarray(vals)):
+        py.insert(tuple(int(x) for x in k), float(v))
+    return py
+
+
+def _assert_same(sparse: SparseRelation, dense: DenseRelation,
+                 py: PyRelation | None = None):
+    got = np.asarray(sparse.to_dense().payload["v"])
+    ref = np.asarray(dense.payload["v"])
+    np.testing.assert_array_equal(got, ref)
+    if py is not None:
+        assert sparse.to_py(PyNumberRing()).equals(py)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_scatter_gather_matches_dense_and_oracle(seed):
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+    sparse = SparseRelation.zeros(SCHEMA, ring, DOMS, capacity=64)
+    dense = DenseRelation.zeros(SCHEMA, ring, DOMS)
+    py = PyRelation(SCHEMA, PyNumberRing())
+    for _ in range(3):  # duplicate keys across and within batches
+        keys, vals = _rand_batch(rng, int(rng.integers(1, 24)))
+        sparse = sparse.scatter_add(keys, {"v": vals})
+        dense = dense.scatter_add(keys, {"v": vals})
+        py = py.union(_py_of(keys, vals))
+    _assert_same(sparse, dense, py)
+    probe, _ = _rand_batch(rng, 16)
+    np.testing.assert_array_equal(np.asarray(sparse.gather(probe)["v"]),
+                                  np.asarray(dense.gather(probe)["v"]))
+    # deletes leave zombie keys: occupancy ≥ live keys, values still agree
+    assert sparse.num_slots_used_sync() >= sparse.num_keys_sync()
+    assert sparse.num_keys_sync() == dense.num_keys_sync() == len(py)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_marginalize_and_contract_match_oracle(seed):
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+    keys, vals = _rand_batch(rng, 20)
+    sparse = SparseRelation.from_coo(SCHEMA, ring, DOMS, keys, {"v": vals})
+    dense = DenseRelation.from_coo(SCHEMA, ring, DOMS, keys, {"v": vals})
+    py = _py_of(keys, vals)
+    # plain ⊕_B and lifted ⊕_B (value lift)
+    lift = DenseRelation(("B",), ring,
+                         {"v": jnp.arange(DOMS[1], dtype=jnp.float32)})
+    for lr, pylift in ((None, None), (lift, float)):
+        _assert_same(sparse.marginalize("B", lr), dense.marginalize("B", lr),
+                     py.marginalize("B", pylift))
+    # contract against a unary relation over C, marginalizing C
+    other_d = DenseRelation(("C",), ring,
+                            {"v": jnp.asarray(rng.integers(-2, 3, DOMS[2])
+                                              .astype(np.float32))})
+    other_py = PyRelation(("C",), PyNumberRing(), {
+        (i,): float(other_d.payload["v"][i]) for i in range(DOMS[2])
+        if float(other_d.payload["v"][i]) != 0})
+    got = sparse.contract(other_d, marg=("C",))
+    ref = dense.contract(other_d, marg=("C",))
+    _assert_same(got, ref, py.join(other_py).marginalize("C"))
+    # transpose re-keys the hash table
+    _assert_same(sparse.transpose(("C", "A", "B")),
+                 dense.transpose(("C", "A", "B")))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_growth_and_rehash(seed):
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+    sparse = SparseRelation.zeros(SCHEMA, ring, DOMS, capacity=4)  # tiny
+    dense = DenseRelation.zeros(SCHEMA, ring, DOMS)
+    for _ in range(4):
+        keys, vals = _rand_batch(rng, 12)
+        # eager growth policy: rehash ahead of the load-factor bound
+        sparse = storage_mod.grow_if_loaded(sparse, budget=12)
+        sparse = sparse.scatter_add(keys, {"v": vals})
+        dense = dense.scatter_add(keys, {"v": vals})
+    assert sparse.capacity > 4  # grew
+    _assert_same(sparse, dense)
+    # rehash compacts deleted (ring-zero) zombies and preserves content
+    compact = sparse.rehash()
+    assert compact.num_slots_used_sync() == compact.num_keys_sync()
+    _assert_same(compact, dense)
+    _assert_same(sparse.rehash(4 * sparse.capacity), dense)
+
+
+def test_insert_overflow_drops_not_corrupts():
+    ring = sum_ring()
+    sparse = SparseRelation.zeros(("A",), ring, (64,), capacity=4)
+    keys = jnp.asarray(np.arange(10, dtype=np.int32)[:, None])
+    vals = {"v": jnp.ones((10,), jnp.float32)}
+    out = sparse.scatter_add(keys, vals)  # 10 distinct keys, 4 slots
+    assert out.num_keys_sync() == 4  # extra rows dropped, table intact
+    assert float(jnp.sum(out.to_dense().payload["v"])) == 4.0
+
+
+def test_fused_gather_mul_scatter_dedups_duplicate_keys():
+    """Duplicate (and padding) keys on the fused sparse gather-⊗-⊎ path
+    must share one table slot — a raw parallel insert would claim several
+    slots for the same key, leaking capacity and splitting its value."""
+    ring = sum_ring()
+    sparse = SparseRelation.zeros(("A",), ring, (64,), capacity=16)
+    keys = jnp.asarray(np.array([[7], [7], [7], [0], [0]], np.int32))
+    src = jnp.asarray(np.array([[2.0], [3.0]], np.float32))
+    in_ids = jnp.asarray(np.array([0, 1, 0, 1, 1], np.int32))
+    scale = jnp.asarray(np.array([1.0, 1.0, 2.0, 1.0, 0.0], np.float32))
+    out = sparse.gather_mul_scatter(keys, src, in_ids, scale)
+    assert out.num_slots_used_sync() == 2  # one slot per distinct key
+    dense = np.asarray(out.to_dense().payload["v"])
+    assert dense[7] == 2.0 + 3.0 + 2 * 2.0 and dense[0] == 3.0
+    # and the probe sees the full accumulated value
+    assert float(out.gather(keys[:1])["v"][0]) == 9.0
+
+
+def test_num_keys_is_device_scalar():
+    ring = sum_ring()
+    dense = DenseRelation.zeros(("A",), ring, (8,))
+    sparse = SparseRelation.zeros(("A",), ring, (8,), capacity=8)
+    for rel in (dense, sparse):
+        nk = rel.num_keys()
+        assert isinstance(nk, jax.Array) and nk.shape == ()  # no host sync
+        assert isinstance(rel.num_keys_sync(), int)
+    # and it traces (a host-syncing int() would raise under jit)
+    jax.jit(lambda r: r.num_keys())(dense)
+    jax.jit(lambda r: r.num_keys())(sparse)
+
+
+# ---------------------------------------------------------------------------
+# storage planner
+# ---------------------------------------------------------------------------
+def test_planner_thresholds_and_overrides():
+    ring = sum_ring()
+    big_doms = (4096, 2)
+    keys = jnp.asarray(np.stack([np.arange(20), np.zeros(20)], 1)
+                       .astype(np.int32))
+    low_fill = DenseRelation.from_coo(("A", "B"), ring, big_doms, keys,
+                                      {"v": jnp.ones((20,), jnp.float32)})
+    small = DenseRelation.from_coo(("C",), ring, (8,), keys[:5, :1],
+                                   {"v": jnp.ones((5,), jnp.float32)})
+    views = {"V0@A": low_fill, "V1@C": small}
+    plan = plan_storage(views, mode="auto")
+    assert plan["V0@A"].kind == "sparse" and plan["V1@C"].kind == "dense"
+    assert plan["V0@A"].capacity >= 2 * low_fill.num_keys_sync()
+    # dense mode: everything dense; per-view override wins over mode
+    plan = plan_storage(views, mode="dense")
+    assert {s.kind for s in plan.values()} == {"dense"}
+    plan = plan_storage(views, mode="dense", overrides={"V1@C": "sparse"})
+    assert plan["V1@C"].kind == "sparse"
+    # env var resolution
+    os.environ[storage_mod.ENV_VAR] = "sparse"
+    try:
+        plan = plan_storage(views)
+        assert plan["V0@A"].kind == "sparse" and plan["V1@C"].kind == "sparse"
+    finally:
+        del os.environ[storage_mod.ENV_VAR]
+
+
+# ---------------------------------------------------------------------------
+# mixed dense/sparse engines through the fused stream executor
+# ---------------------------------------------------------------------------
+ENG_DOMS = dict(A=4, B=5, C=3, D=6, E=4)
+
+
+def _engine_query():
+    return Query(
+        relations={"R": ("A", "B"), "S": ("A", "C", "E"), "T": ("C", "D")},
+        free_vars=("A", "C"),
+        ring=sum_ring(),
+        domains=ENG_DOMS,
+        lifts={"B": ("value",), "D": ("value",), "E": ("value",)},
+    )
+
+
+def _engine_vo():
+    return chain(["A", "C"], {"A": [["B"]], "C": [["D"], ["E"]]})
+
+
+def _engine_db(rng, ring):
+    def rel(schema):
+        shape = tuple(ENG_DOMS[v] for v in schema)
+        mult = rng.integers(0, 3, size=shape).astype(np.float32)
+        return DenseRelation(tuple(schema), ring, {"v": jnp.asarray(mult)})
+
+    return {"R": rel("AB"), "S": rel("ACE"), "T": rel("CD")}
+
+
+def _stream(rng, q, schedule, batches):
+    out = []
+    for rel, B in zip(schedule, batches):
+        sch = q.relations[rel]
+        keys = np.stack([rng.integers(0, ENG_DOMS[v], size=B) for v in sch],
+                        axis=1).astype(np.int32)
+        vals = rng.integers(-2, 3, size=B).astype(np.float32)
+        out.append((rel, COOUpdate(sch, jnp.asarray(keys),
+                                   {"v": jnp.asarray(vals)})))
+    return out
+
+
+def _mixed_engine(q, db, strategy="fivm"):
+    """Force sparse storage, then flip one sparse view back to dense so the
+    engine genuinely mixes backends in one state pytree."""
+    probe = IVMEngine.build(q, db, var_order=_engine_vo(), strategy=strategy,
+                            storage="sparse")
+    sparse_names = [n for n, s in probe.storage_plan.items()
+                    if s.kind == "sparse"]
+    assert len(sparse_names) >= 2, sparse_names
+    eng = IVMEngine.build(
+        q, db, var_order=_engine_vo(), strategy=strategy, storage="sparse",
+        storage_overrides={sparse_names[0]: "dense"})
+    kinds = {s.kind for s in eng.storage_plan.values()}
+    assert kinds == {"dense", "sparse"}
+    return eng
+
+
+@pytest.mark.parametrize("schedule,mode", [
+    (["S"] * 5, "scan"),
+    (["R", "S", "T"] * 3, "rounds"),
+    (["R", "S", "T", "S", "R", "R", "T"], "switch"),
+])
+def test_mixed_engine_roundtrips_fused_executor(schedule, mode):
+    rng = np.random.default_rng(7)
+    q = _engine_query()
+    db = _engine_db(rng, q.ring)
+    stream = _stream(rng, q, schedule,
+                     [int(rng.integers(1, 8)) for _ in schedule])
+
+    mixed = _mixed_engine(q, db)
+    prepared = prepare_stream(mixed, stream)
+    assert prepared.mode == mode
+    StreamExecutor(mixed).run(prepared)
+
+    # oracle 1: the same mixed engine through per-call triggers
+    seq = _mixed_engine(q, db)
+    for rel, upd in stream:
+        seq.apply_update(rel, upd)
+    # oracle 2: the all-dense seed path
+    dense = IVMEngine.build(q, db, var_order=_engine_vo(), storage="dense")
+    for rel, upd in stream:
+        dense.apply_update(rel, upd)
+
+    got = np.asarray(mixed.result().transpose(("A", "C")).payload["v"])
+    np.testing.assert_array_equal(
+        got, np.asarray(seq.result().transpose(("A", "C")).payload["v"]))
+    np.testing.assert_array_equal(
+        got, np.asarray(dense.result().transpose(("A", "C")).payload["v"]))
+
+
+def test_sparse_state_donation_roundtrip():
+    """Sparse tables ride the donated scan carry: running the same prepared
+    stream twice from the advanced state must not alias deleted buffers."""
+    rng = np.random.default_rng(3)
+    q = _engine_query()
+    db = _engine_db(rng, q.ring)
+    eng = _mixed_engine(q, db)
+    stream = _stream(rng, q, ["R", "S", "T"] * 2, [4] * 6)
+    ex = StreamExecutor(eng)
+    prepared = prepare_stream(eng, stream)
+    state = ex.run(prepared, update_engine=False)
+    state = ex.run(prepared, state=state, update_engine=True,
+                   donate_input=True)
+    assert np.isfinite(
+        np.asarray(eng.result().payload["v"])).all()
+
+
+# ---------------------------------------------------------------------------
+# deferred sibling gather: bilinear non-scalar rings (PR-2 follow-on)
+# ---------------------------------------------------------------------------
+def _degree_delta(ring, rng, b=6):
+    keys = np.stack([rng.integers(0, 5, size=b), rng.integers(0, 4, size=b)],
+                    axis=1).astype(np.int32)
+    payload = {
+        "c": jnp.asarray(rng.integers(-2, 3, b).astype(np.float32)),
+        "s": jnp.asarray(rng.integers(-2, 3, (b, ring.m)).astype(np.float32)),
+        "Q": jnp.asarray(rng.integers(-2, 3, (b, ring.m, ring.m))
+                         .astype(np.float32)),
+    }
+    return BatchedDelta.from_coo(
+        ring, COOUpdate(("A", "B"), jnp.asarray(keys), payload))
+
+
+@pytest.mark.parametrize("sparse_sibling", [False, True])
+def test_nonscalar_ring_defers_sibling_gather(sparse_sibling):
+    ring = DegreeMRing(2)
+    rng = np.random.default_rng(11)
+    sib_payload = {
+        "c": jnp.asarray(rng.integers(0, 3, 5).astype(np.float32)),
+        "s": jnp.asarray(rng.integers(-2, 3, (5, 2)).astype(np.float32)),
+        "Q": jnp.asarray(rng.integers(-2, 3, (5, 2, 2)).astype(np.float32)),
+    }
+    sib = DenseRelation(("A",), ring, sib_payload)
+    if sparse_sibling:
+        sib = SparseRelation.from_dense(sib)
+    delta = _degree_delta(ring, rng)
+    joined = delta.join_dense(sib)
+    assert joined.pending_gather is not None  # deferral engages
+    view = DenseRelation.zeros(("A", "B"), ring, (5, 4))
+    got = joined.apply_to(view)  # flat-plane gather + row-wise ring product
+    ref = joined._force().apply_to(view)  # materialized fallback
+    for c in ring.components:
+        np.testing.assert_array_equal(np.asarray(got.payload[c]),
+                                      np.asarray(ref.payload[c]))
+    # deferral survives a lift-marginalization (the point of deferring):
+    lift = DenseRelation(("B",), ring, ring.lift(jnp.arange(4.0), 1))
+    marged = joined.marginalize("B", lift)
+    assert marged.pending_gather is not None
+
+
+def test_noncommutative_ring_falls_back_to_eager_join():
+    """The fallback assert path: matrix-ring products do not commute, so
+    the deferral must NOT engage (forcing later would reorder the gathered
+    factor past lift-multiplies)."""
+    ring = MatrixRing(2)
+    rng = np.random.default_rng(5)
+    b = 4
+    keys = np.stack([rng.integers(0, 3, b), rng.integers(0, 3, b)],
+                    axis=1).astype(np.int32)
+    payload = {"M": jnp.asarray(rng.integers(-2, 3, (b, 2, 2))
+                                .astype(np.float32))}
+    delta = BatchedDelta.from_coo(
+        ring, COOUpdate(("A", "B"), jnp.asarray(keys), payload))
+    sib = DenseRelation(("A",), ring, {
+        "M": jnp.asarray(rng.integers(-2, 3, (3, 2, 2)).astype(np.float32))})
+    joined = delta.join_dense(sib)
+    assert joined.pending_gather is None  # eager path taken
+    # correctness of the eager path: compare against per-row host product
+    got = np.asarray(joined.payload["M"])
+    ref = np.einsum("bik,bkj->bij", np.asarray(payload["M"]),
+                    np.asarray(sib.payload["M"])[keys[:, 0]])
+    np.testing.assert_array_equal(got, ref)
