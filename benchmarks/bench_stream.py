@@ -39,7 +39,10 @@ JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_stream.json")
 
 
 def _measure(q, db, vo, strategy, stream, repeats, backend=None):
-    """(fused tps, per-call tps) under an optional scatter-backend override."""
+    """(fused tps, per-call tps, plan stats) under an optional
+    scatter-backend override.  Plan stats come from the fused engine's
+    plan cache: total and per-plan trigger compile time plus the lookup
+    hit rate across prepare + replay (DESIGN.md §8 telemetry)."""
     with scatter_ops.use_backend(backend):
         eng_f = IVMEngine.build(q, db, var_order=vo, strategy=strategy)
         tps_fused, _ = run_engine_stream(eng_f, stream, fused=True,
@@ -47,30 +50,74 @@ def _measure(q, db, vo, strategy, stream, repeats, backend=None):
         eng_p = IVMEngine.build(q, db, var_order=vo, strategy=strategy)
         tps_percall, _ = run_engine_stream(eng_p, stream, fused=False,
                                            repeats=repeats)
-    return tps_fused, tps_percall
+    return tps_fused, tps_percall, eng_f.plans.stats()
+
+
+def _load_baseline(json_path):
+    """Prior BENCH_stream.json rows keyed for the regression guard."""
+    if json_path is None or not os.path.exists(json_path):
+        return {}
+    try:
+        with open(json_path) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    out = {}
+    for r in prev.get("results", []):
+        key = (r.get("dataset"), r.get("strategy"), r.get("batch"),
+               r.get("scatter_backend", r.get("storage", "auto")))
+        if "fused_tuples_per_s" in r:
+            out[key] = r["fused_tuples_per_s"]
+    return out
 
 
 def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
         strategies=("fivm", "fivm_1", "dbt", "reeval"), repeats: int = 5,
         json_path: str | None = JSON_PATH,
-        kernel_backends=("jnp", "compact_xla")):
+        kernel_backends=("jnp", "compact_xla"),
+        baseline_min_ratio: float | None = None):
+    """``baseline_min_ratio`` (or env ``REPRO_BENCH_BASELINE_MIN``) turns on
+    the refactor guard: every fused-throughput row is compared against the
+    previous BENCH_stream.json and must stay within the given fraction
+    (e.g. 0.5 = within 2× noise) — the plan refactor must not regress the
+    hot path."""
+    if baseline_min_ratio is None and os.environ.get("REPRO_BENCH_BASELINE_MIN"):
+        baseline_min_ratio = float(os.environ["REPRO_BENCH_BASELINE_MIN"])
+    baseline = _load_baseline(json_path)
+    baseline_ratios = []
     rng = np.random.default_rng(seed)
     ring = sum_ring()
     rows, results = [], []
 
-    def record(dataset, strategy, batch, n_b, backend, tps_fused, tps_percall):
+    def record(dataset, strategy, batch, n_b, backend, tps_fused, tps_percall,
+               plan_stats=None):
         speedup = tps_fused / tps_percall
-        rows.append((f"stream/{dataset}/{strategy}"
-                     f"{'' if backend is None else '/' + backend}/b={batch}",
-                     round(1e6 * batch / tps_fused, 1),
-                     f"fused_tps={tps_fused:.0f};percall_tps={tps_percall:.0f};"
-                     f"speedup={speedup:.2f}x"))
-        results.append(dict(
+        derived = (f"fused_tps={tps_fused:.0f};percall_tps={tps_percall:.0f};"
+                   f"speedup={speedup:.2f}x")
+        row = dict(
             dataset=dataset, strategy=strategy, batch=batch, n_batches=n_b,
             scatter_backend=backend or "auto",
             fused_tuples_per_s=round(tps_fused),
             percall_tuples_per_s=round(tps_percall),
-            speedup=round(speedup, 2)))
+            speedup=round(speedup, 2))
+        if plan_stats is not None:
+            row.update(
+                plan_compile_ms_total=plan_stats["compile_ms_total"],
+                plan_compile_ms_per_plan=plan_stats["compile_ms_per_plan"],
+                plan_cache_hit_rate=plan_stats["hit_rate"],
+                plans_compiled=plan_stats["plans"])
+            derived += (f";plan_compile_ms={plan_stats['compile_ms_total']};"
+                        f"plan_hit_rate={plan_stats['hit_rate']}")
+        prev = baseline.get((dataset, strategy, batch, backend or "auto"))
+        if prev:
+            ratio = tps_fused / prev
+            baseline_ratios.append(
+                ((dataset, strategy, batch, backend or "auto"), ratio))
+            row["fused_vs_baseline"] = round(ratio, 3)
+        rows.append((f"stream/{dataset}/{strategy}"
+                     f"{'' if backend is None else '/' + backend}/b={batch}",
+                     round(1e6 * batch / tps_fused, 1), derived))
+        results.append(row)
 
     # -- retailer sum aggregate: strategy × batch (PR-1 trajectory rows) ----
     q = Query(relations=RETAILER_RELATIONS, free_vars=(), ring=ring,
@@ -80,10 +127,10 @@ def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
         for batch in batches:
             stream = update_stream(RETAILER_RELATIONS, RETAILER_DOMS, ring,
                                    rng, batch, n_batches)
-            tps_f, tps_p = _measure(q, db, retailer_vo(), strategy, stream,
-                                    repeats)
+            tps_f, tps_p, pstats = _measure(q, db, retailer_vo(), strategy,
+                                            stream, repeats)
             record("retailer_sum_aggregate", strategy, batch, n_batches,
-                   None, tps_f, tps_p)
+                   None, tps_f, tps_p, pstats)
 
     # -- housing star schema: wide pc dictionary, kernel-on vs kernel-off --
     hq = Query(relations=HOUSING_RELATIONS, free_vars=(), ring=ring,
@@ -94,10 +141,10 @@ def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
         for batch in batches:
             stream = update_stream(HOUSING_RELATIONS, HOUSING_DOMS, ring,
                                    rng, batch, n_batches)
-            tps_f, tps_p = _measure(hq, hdb, housing_vo(), "fivm", stream,
-                                    repeats, backend=backend)
+            tps_f, tps_p, pstats = _measure(hq, hdb, housing_vo(), "fivm",
+                                            stream, repeats, backend=backend)
             record("housing_sum_aggregate", "fivm", batch, n_batches,
-                   backend, tps_f, tps_p)
+                   backend, tps_f, tps_p, pstats)
 
     # -- housing pc=65536: dense vs sparse view storage (ISSUE 3) ----------
     big = dict(HOUSING_DOMS_BIG)
@@ -121,7 +168,8 @@ def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
                                    repeats=repeats)
         leg[mode] = dict(tps=tps, bytes=eng.memory_bytes(),
                          result=np.asarray(eng.result().payload["v"]),
-                         n_sparse=kinds.count("sparse"))
+                         n_sparse=kinds.count("sparse"),
+                         pstats=eng.plans.stats())
     bit_identical = bool(np.array_equal(leg["dense"]["result"],
                                         leg["auto"]["result"]))
     mem_ratio = leg["dense"]["bytes"] / leg["auto"]["bytes"]
@@ -140,7 +188,10 @@ def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
             fused_tuples_per_s=round(e["tps"]),
             peak_view_bytes=int(e["bytes"]),
             dense_over_sparse_mem=round(mem_ratio, 2),
-            bit_identical_to_dense=bit_identical))
+            bit_identical_to_dense=bit_identical,
+            plan_compile_ms_total=e["pstats"]["compile_ms_total"],
+            plan_compile_ms_per_plan=e["pstats"]["compile_ms_per_plan"],
+            plan_cache_hit_rate=e["pstats"]["hit_rate"]))
     assert bit_identical, "sparse housing run diverged from dense"
     assert mem_ratio >= 10, f"sparse memory win below 10x: {mem_ratio:.1f}"
 
@@ -151,10 +202,24 @@ def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
         for batch in batches[:2]:
             stream = update_stream(RETAILER_RELATIONS, RETAILER_DOMS, cq.ring,
                                    rng, batch, 10)
-            tps_f, tps_p = _measure(cq, cdb, retailer_vo(), "fivm", stream,
-                                    max(2, repeats - 3), backend=backend)
+            tps_f, tps_p, pstats = _measure(cq, cdb, retailer_vo(), "fivm",
+                                            stream, max(2, repeats - 3),
+                                            backend=backend)
             record("retailer_cofactor_degree_m", "fivm", batch, 10,
-                   backend, tps_f, tps_p)
+                   backend, tps_f, tps_p, pstats)
+
+    # refactor guard: fused throughput vs the previous BENCH_stream.json
+    if baseline_ratios:
+        ratios = [r for _, r in baseline_ratios]
+        med = sorted(ratios)[len(ratios) // 2]
+        worst_key, worst = min(baseline_ratios, key=lambda kv: kv[1])
+        print(f"# fused vs baseline: median {med:.2f}x, "
+              f"worst {worst:.2f}x at {worst_key}")
+        if baseline_min_ratio is not None:
+            assert worst >= baseline_min_ratio, (
+                f"fused throughput regressed below {baseline_min_ratio}x of "
+                f"the previous BENCH_stream.json: {worst:.2f}x at "
+                f"{worst_key}")
 
     if json_path is not None:
         with open(json_path, "w") as f:

@@ -3,6 +3,7 @@ from .contraction import BatchedDelta, contract_dense, lift_relation, marginaliz
 from .delta import propagate_coo, propagate_factorized
 from .indicators import IndicatorState, add_indicators, gyo_residual, indicator_of, is_acyclic
 from .ivm import IVMEngine, canonical_state
+from .plan import PlanCache, TriggerPlan, compile_trigger, execute_trigger
 from .stream import PreparedStream, StreamExecutor, prepare_stream
 from .materialize import choose_materialized, gather_scatter_profile, views_on_path
 from .storage import (
@@ -35,12 +36,13 @@ from .view_tree import ViewNode, build_view_tree, evaluate_view
 __all__ = [
     "BatchedDelta", "COOUpdate", "DegreeMRing", "DenseRelation",
     "FactorizedUpdate", "IVMEngine", "IndicatorState", "MatrixRing",
-    "PreparedStream", "PyDegreeMRing", "PyNumberRing", "PyRelation",
-    "PyRelationalRing", "Query", "Ring", "ScalarRing", "SparseRelation",
-    "StorageSpec", "StreamExecutor", "TupleRing", "VariableOrder", "VONode",
-    "ViewNode", "ViewStorage", "add_indicators", "apply_storage_plan",
-    "as_dense", "build_view_tree", "canonical_state", "chain",
-    "choose_materialized", "contract_dense", "count_ring", "evaluate_view",
+    "PlanCache", "PreparedStream", "PyDegreeMRing", "PyNumberRing",
+    "PyRelation", "PyRelationalRing", "Query", "Ring", "ScalarRing",
+    "SparseRelation", "StorageSpec", "StreamExecutor", "TriggerPlan",
+    "TupleRing", "VariableOrder", "VONode", "ViewNode", "ViewStorage",
+    "add_indicators", "apply_storage_plan", "as_dense", "build_view_tree",
+    "canonical_state", "chain", "choose_materialized", "compile_trigger",
+    "contract_dense", "count_ring", "evaluate_view", "execute_trigger",
     "gather_scatter_profile", "gyo_residual", "heuristic_order",
     "indicator_of", "is_acyclic", "lift_relation", "make_base_relation",
     "marginalize_dense", "plan_storage", "prepare_stream", "propagate_coo",

@@ -108,9 +108,11 @@ def make_factorized_engine(
     var_order: VariableOrder,
     domains: Mapping[str, int],
     updatable: tuple[str, ...] | None = None,
+    **build_kwargs,
 ):
     """Count-ring engine that additionally maintains the pre-marginalization
     views W@X (the factorized representation).  See IVMEngine(premarg=True).
+    ``build_kwargs`` pass through to :meth:`IVMEngine.build`.
     """
     from ..ivm import IVMEngine
 
@@ -123,7 +125,7 @@ def make_factorized_engine(
     }
     eng = IVMEngine.build(
         q, db, updatable=updatable, var_order=var_order, strategy="fivm",
-        fuse_chains=False, premarg=True,
+        fuse_chains=False, premarg=True, **build_kwargs,
     )
     return eng, q
 

@@ -78,12 +78,17 @@ def build_chain_engine(
     mats: Sequence[jnp.ndarray],
     updatable: tuple[str, ...] | None = None,
     strategy: str = "fivm",
+    **build_kwargs,
 ) -> IVMEngine:
+    """``build_kwargs`` pass through to :meth:`IVMEngine.build` (storage
+    mode / overrides: a sparse chain engine applies rank-1 updates through
+    the per-factor active-key lowering, DESIGN.md §8)."""
     dims = [mats[0].shape[0]] + [m.shape[1] for m in mats]
     q = chain_query(dims, dtype=mats[0].dtype)
     vo = balanced_order(len(mats))
     db = matrices_to_db(q.ring, mats)
-    return IVMEngine.build(q, db, updatable=updatable, var_order=vo, strategy=strategy)
+    return IVMEngine.build(q, db, updatable=updatable, var_order=vo,
+                           strategy=strategy, **build_kwargs)
 
 
 def rank1_update(k: int, u: jnp.ndarray, v: jnp.ndarray, ring: ScalarRing) -> FactorizedUpdate:

@@ -67,6 +67,26 @@ def relation_from_multiplicities(
     return make_base_relation(schema, ring, payload)
 
 
+def build_cofactor_engine(
+    relations: Mapping[str, tuple[str, ...]],
+    domains: Mapping[str, int],
+    multiplicities: Mapping[str, jnp.ndarray],
+    var_order: VariableOrder | None = None,
+    domain_values: Mapping[str, jnp.ndarray] | None = None,
+    **build_kwargs,
+) -> IVMEngine:
+    """Degree-m cofactor engine over multiplicity tables — the canonical
+    regression workload as one call (benches / plan-introspection tests).
+    ``build_kwargs`` pass through to :meth:`IVMEngine.build`."""
+    q = cofactor_query(relations, domains, domain_values=domain_values)
+    db = {
+        name: relation_from_multiplicities(tuple(sch), q.ring,
+                                           multiplicities[name])
+        for name, sch in relations.items()
+    }
+    return IVMEngine.build(q, db, var_order=var_order, **build_kwargs)
+
+
 # ---------------------------------------------------------------------------
 # Learning on top of the maintained triple
 # ---------------------------------------------------------------------------

@@ -212,20 +212,25 @@ class BatchedDelta:
         return bool(view.schema) and all(v in self.coo_schema
                                          for v in view.schema)
 
-    def _gather_plan(self, view) -> tuple[jnp.ndarray, jnp.ndarray]:
+    def _gather_plan(self, view, src_plane=None
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """(src_plane [Sg, d], in_ids [B]) for a deferred gather of
-        ``view`` at the delta's COO coordinates."""
+        ``view`` at the delta's COO coordinates.  ``src_plane`` optionally
+        supplies the view's prepared payload plane (the stream executor's
+        per-step CSE memo computes shared planes once per fused step)."""
         from repro.core import storage
 
         keys = jnp.stack([self.key_col(v) for v in view.schema], axis=1)
         if isinstance(view, storage.SparseRelation):
             slots, found = view.lookup(keys)
-            plane = view.gather_plane()  # [C + 1, d], zero row at C
+            if src_plane is None:
+                src_plane = view.gather_plane()  # [C + 1, d], zero row at C
             ids = jnp.where(found, slots, view.capacity)
-            return plane, ids
-        plane = storage.flatten_payload(self.ring, view.payload,
-                                        view.domains)
-        return plane, storage.linear_ids(keys, view.domains)
+            return src_plane, ids
+        if src_plane is None:
+            src_plane = storage.flatten_payload(self.ring, view.payload,
+                                                view.domains)
+        return src_plane, storage.linear_ids(keys, view.domains)
 
     def _force(self) -> "BatchedDelta":
         """Materialize a deferred sibling gather into the payload."""
@@ -289,18 +294,20 @@ class BatchedDelta:
         )
 
     # -- join with a materialized sibling view ------------------------------
-    def join_dense(self, view) -> "BatchedDelta":
+    def join_dense(self, view, src_plane=None) -> "BatchedDelta":
         """δ ⊗ V: coo-shared vars of V are gathered at the delta's coords;
         dense-shared vars align elementwise; fresh vars of V become new
         dense axes.  ``view`` is any ViewStorage: sparse siblings resolve
         to gathers (deferred where possible) and densify only when the
-        join would grow dense axes from them."""
+        join would grow dense axes from them.  ``src_plane`` optionally
+        short-circuits the deferred gather's plane preparation (plan-level
+        CSE across a fused stream step)."""
         ring = self.ring
         if self._defer_ok(view):
-            return dataclasses.replace(self,
-                                       pending_gather=self._gather_plan(view))
+            return dataclasses.replace(
+                self, pending_gather=self._gather_plan(view, src_plane))
         if self.pending_gather is not None:
-            return self._force().join_dense(view)
+            return self._force().join_dense(view, src_plane)
         from repro.core import storage
 
         if isinstance(view, storage.SparseRelation):

@@ -12,31 +12,57 @@ Only one child changes per path node, so the product rule degenerates to
 update-bound variables × dense over sibling-contributed ones) or, when the
 update is factorizable, as a product of per-group factors that marginalize
 independently (the paper's Optimize; Example 5.2 / 7.1).
+
+Since the trigger-plan refactor (DESIGN.md §8) this module is a *thin plan
+interpreter*: the fixed propagation structure is compiled once per
+(relation, update-kind, storage layout) by ``repro.core.plan`` and these
+entry points replay it.  ``IVMEngine`` fetches plans from its cache
+directly; the functions here compile ad hoc (tests / exploratory use).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Mapping
 
-import jax.numpy as jnp
-
-from .contraction import BatchedDelta, contract_dense
+from . import plan as plan_mod
+from .plan import (PropagationResult, densified_delta, lift_or_none,
+                   should_densify)
 from .query import Query
-from .materialize import views_on_path
 from .relations import COOUpdate, DenseRelation, FactorizedUpdate
 from .view_tree import ViewNode
 
+__all__ = [
+    "PropagationResult", "propagate_coo", "propagate_factorized",
+]
 
-@dataclasses.dataclass
-class PropagationResult:
-    """Deltas per affected view name (leaf-to-root order) + updated views.
 
-    ``updated`` values carry each view's planned storage backend
-    (``ViewStorage``): a dense view stays dense, a hashed-COO view stays
-    sparse — the delta algebra dispatches per storage."""
+class _PathEngine:
+    """Minimal engine facade for compiling a standalone path plan."""
 
-    deltas: dict[str, BatchedDelta | FactorizedUpdate]
-    updated: dict[str, object]
+    def __init__(self, tree, query, views, indicators):
+        self.tree = tree
+        self.query = query
+        self.views = views
+        self.strategy = "fivm"
+        self.base = {}
+        self.indicators = indicators
+
+
+class _IndMeta:
+    def __init__(self, proj, dense):
+        self.proj = proj
+        self.dense = dense
+        self.rel_name = None  # never matches: path-only compilation
+
+
+def _compile_path(tree, materialized, query, rel, upd_sig, indicators):
+    ind_meta = {}
+    for node in tree.walk():
+        if node.indicator is not None and indicators \
+                and node.name in indicators:
+            ind_meta[node.name] = _IndMeta(tuple(node.indicator[1]),
+                                           indicators[node.name])
+    eng = _PathEngine(tree, query, materialized, ind_meta)
+    return plan_mod.compile_trigger(eng, rel, upd_sig)
 
 
 def propagate_coo(
@@ -50,51 +76,12 @@ def propagate_coo(
     """Propagate a COO batch update along the delta tree, updating every
     materialized view on the path (dense or sparse storage).
     ``indicators`` maps node names to maintained ∃-projection denses
-    (Sec. 6)."""
-    ring = query.ring
-    path = views_on_path(tree, rel)
-    if _should_densify(path, upd, query):
-        # Bulk updates that don't bind the whole path: propagate ONE dense
-        # delta relation instead of B per-row deltas ("δR can be a relation",
-        # Sec. 4) — O(|D|) instead of O(B·|D|) for dimension-table batches.
-        delta = _densified_delta(query, rel, upd)
-    else:
-        delta = BatchedDelta.from_coo(ring, upd)
-    deltas: dict[str, BatchedDelta | FactorizedUpdate] = {}
-    updated: dict[str, DenseRelation] = {}
-
-    # leaf: δ(leaf) = δR ; update the stored base relation if materialized
-    leaf = path[0]
-    deltas[leaf.name] = delta
-    if leaf.name in materialized:
-        updated[leaf.name] = delta.apply_to(materialized[leaf.name])
-
-    child = leaf
-    for node in path[1:]:
-        # join with materialized siblings
-        for sib in node.children:
-            if sib is child:
-                continue
-            assert sib.name in materialized, (
-                f"sibling {sib.name} of delta path must be materialized "
-                f"(μ guarantees this for updatable {rel})"
-            )
-            delta = delta.join_dense(materialized[sib.name])
-        if node.indicator is not None:
-            assert indicators is not None and node.name in indicators, (
-                f"maintained indicator for {node.name} required"
-            )
-            delta = delta.join_dense(indicators[node.name])
-        wname = f"W:{node.name}"
-        if wname in materialized:  # factorized result representation (Sec. 7.3)
-            updated[wname] = delta.apply_to(materialized[wname])
-        for v in node.marg_vars:
-            delta = delta.marginalize(v, _lift_or_none(query, v))
-        deltas[node.name] = delta
-        if node.name in materialized:
-            updated[node.name] = delta.apply_to(materialized[node.name])
-        child = node
-    return PropagationResult(deltas, updated)
+    (Sec. 6).  Thin interpreter over a freshly compiled
+    :class:`repro.core.plan.TriggerPlan` path section."""
+    plan = _compile_path(tree, materialized, query, rel,
+                         ("coo", tuple(upd.schema), upd.batch), indicators)
+    return plan_mod.run_coo_ops(plan.ops, materialized, query, upd,
+                                dict(indicators or {}))
 
 
 def propagate_factorized(
@@ -109,168 +96,25 @@ def propagate_factorized(
     variable groups; marginalization and sibling joins touch only the factor
     containing the variable, so a rank-1 update to a p×p 'relation' costs
     O(p²) instead of O(p³) (Example 7.1)."""
-    ring = query.ring
-    path = views_on_path(tree, rel)
-    factors: list[DenseRelation] = list(upd.factors)
-    deltas: dict[str, BatchedDelta | FactorizedUpdate] = {}
-    updated: dict[str, DenseRelation] = {}
-
-    def current(schema_hint: tuple[str, ...]) -> FactorizedUpdate:
-        sch = tuple(v for f in factors for v in f.schema)
-        return FactorizedUpdate(sch, tuple(factors))
-
-    leaf = path[0]
-    deltas[leaf.name] = current(leaf.schema)
-    if leaf.name in materialized:
-        updated[leaf.name] = _apply_factorized(materialized[leaf.name], factors, ring)
-
-    child = leaf
-    for node in path[1:]:
-        for sib in node.children:
-            if sib is child:
-                continue
-            assert sib.name in materialized, f"sibling {sib.name} not materialized"
-            _absorb(factors, materialized[sib.name], ring)
-        if node.indicator is not None:
-            assert indicators is not None and node.name in indicators
-            _absorb(factors, indicators[node.name], ring)
-        wname = f"W:{node.name}"
-        if wname in materialized:
-            updated[wname] = _apply_factorized(materialized[wname], factors, ring)
-        for v in node.marg_vars:
-            _marginalize_factor(factors, v, query)
-        deltas[node.name] = current(node.schema)
-        if node.name in materialized:
-            updated[node.name] = _apply_factorized(materialized[node.name], factors, ring)
-        child = node
-    return PropagationResult(deltas, updated)
+    plan = _compile_path(tree, materialized, query, rel,
+                         ("factorized", tuple(upd.schema)), indicators)
+    return plan_mod.run_factorized_ops(plan.ops, materialized, query, upd,
+                                       dict(indicators or {}))
 
 
 def _lift_or_none(query: Query, var: str):
-    """None for identity lifts: g(x)=1 multiplies by ring one, so the
-    marginalization is a plain sum — skipping the gather+einsum halves the
-    op count of unlifted variables (most join variables)."""
-    if query.lift_spec(var) == ("one",):
-        return None
-    return query.lift_rel(var)
+    """Superseded pointer: the identity-lift skip is a plan-time decision
+    (``repro.core.plan.lift_or_none``); kept for call sites and tests."""
+    return lift_or_none(query, var)
 
 
 def _should_densify(path, upd: COOUpdate, query: Query) -> bool:
-    """Cost-based densify planner: walk the delta path once per
-    representation and compare modeled element counts (ROADMAP cost model).
-
-    * **Row (COO) propagation** streams ``[B, D_dense...]`` slices: each
-      node costs ``B_eff · ∏ dense-axis domains``, where dense axes are the
-      sibling/indicator variables the update doesn't bind, and ``B_eff``
-      drops to 1 once the COO schema empties (batch collapse).
-    * **Dense-delta propagation** materializes one relation over the
-      delta's variable set: the leaf pays the full update-schema domain
-      product (the initial scatter), and each node pays the domain product
-      of the current delta schema after sibling joins.
-
-    Densify when the dense walk is strictly cheaper.  Updates that bind
-    every sibling variable never grow dense axes, so the row walk is the
-    factorized fast path and wins regardless of batch size; dimension-table
-    updates (wide sibling extents, e.g. Item in the retailer schema) tip to
-    the dense delta well below the old flat batch-32 threshold."""
-    B = upd.batch
-    dom = query.domains
-    bound = set(upd.schema)
-
-    def extent(vars_):
-        e = 1
-        for v in vars_:
-            e *= int(dom[v])
-        return e
-
-    coo = set(upd.schema)  # row delta: vars still COO-bound
-    row_dense: set[str] = set()  # row delta: dense axes grown so far
-    dense_vars = set(upd.schema)  # dense delta: current schema
-    cost_row = B  # leaf: stream the batch
-    cost_dense = extent(upd.schema)  # leaf: materialize the dense delta
-    grew_dense = False
-    child = path[0]
-    for node in path[1:]:
-        sib_schemas = [set(sib.schema) for sib in node.children
-                       if sib is not child]
-        if node.indicator is not None:
-            sib_schemas.append(set(node.indicator[1]))
-        for sch in sib_schemas:
-            row_dense |= sch - bound
-            dense_vars |= sch
-        grew_dense = grew_dense or bool(row_dense)
-        b_eff = B if coo else 1
-        cost_row += b_eff * extent(row_dense)
-        cost_dense += extent(dense_vars)
-        for v in node.marg_vars:
-            coo.discard(v)
-            row_dense.discard(v)
-            dense_vars.discard(v)
-        child = node
-    if not grew_dense:
-        return False  # fully-bound update: pure-COO row propagation is O(B)
-    return cost_dense < cost_row
+    """Cost-based densify planner (ROADMAP cost model), now one annotation
+    of the trigger-plan compiler: see ``repro.core.plan.should_densify`` /
+    ``path_costs`` for the model.  Kept as the historical entry point."""
+    return should_densify(path, upd.schema, upd.batch, query)
 
 
-def _densified_delta(query: Query, rel: str, upd: COOUpdate) -> BatchedDelta:
-    """Scatter the COO batch into a dense delta relation over the update
-    schema, carried as a BatchedDelta with batch=1 and no COO vars."""
-    ring = query.ring
-    doms = tuple(query.domains[v] for v in upd.schema)
-    dense = DenseRelation.from_coo(upd.schema, ring, doms, upd.keys, upd.payload)
-    payload = {c: dense.payload[c][None] for c in ring.components}
-    return BatchedDelta(
-        coo_schema=(),
-        dense_schema=tuple(upd.schema),
-        keys=jnp.zeros((1, 0), jnp.int32),
-        ring=ring,
-        payload=payload,
-        dense_domains=doms,
-    )
-
-
-def _absorb(factors: list[DenseRelation], view, ring) -> None:
-    """Join a materialized sibling view into the factor list.  Factors whose
-    variables intersect the view's schema merge first; disjoint factors stay
-    independent (this is what preserves the factorized complexity).  Sparse
-    siblings materialize first (factorized updates are per-call-path only;
-    the planner keeps factor-joined views dense)."""
-    if not isinstance(view, DenseRelation):
-        view = view.to_dense()
-    touching = [f for f in factors if set(f.schema) & set(view.schema)]
-    if not touching:
-        # cartesian sibling: keep as its own factor
-        factors.append(view)
-        return
-    for f in touching:
-        factors.remove(f)
-    acc = touching[0]
-    for f in touching[1:]:
-        acc = contract_dense(acc, f, marg=())
-    acc = contract_dense(acc, view, marg=())
-    factors.append(acc)
-
-
-def _marginalize_factor(factors: list[DenseRelation], var: str, query: Query) -> None:
-    for i, f in enumerate(factors):
-        if var in f.schema:
-            factors[i] = contract_dense(f, query.lift_rel(var), marg=(var,))
-            return
-    raise KeyError(f"variable {var} not found in any factor")
-
-
-def _apply_factorized(view, factors: list[DenseRelation], ring):
-    """view ⊎ (⊗ factors): outer-product accumulate.  Cost is the size of the
-    materialized view (O(p²) for matrix views), not of any larger product.
-    Scalar factors (fully-marginalized groups, e.g. ⊕_E δS_E in Example 5.2)
-    scale the product.  A sparse view absorbs the dense product by key-grid
-    enumeration (storage-preserving; eager path only)."""
-    covered = {v for f in factors for v in f.schema}
-    assert covered == set(view.schema), (covered, view.schema)
-    acc = factors[0]
-    for f in factors[1:]:
-        acc = contract_dense(acc, f, marg=())
-    acc = acc.transpose(view.schema)
-    if not isinstance(view, DenseRelation):
-        return view.add_dense(acc)
-    return view.add(acc)
+def _densified_delta(query: Query, rel: str, upd: COOUpdate):
+    """Superseded pointer: lives in ``repro.core.plan.densified_delta``."""
+    return densified_delta(query, rel, upd)

@@ -12,8 +12,13 @@ Strategies:
                   apps/regression.py).
   * ``reeval``  — full recomputation from stored base relations per update.
 
-The DBToaster runtime role (codegen of triggers) is played by jax.jit: each
-(tree, updated-relation) pair compiles into one XLA program.
+The DBToaster runtime role (codegen of triggers) is played in two stages
+(DESIGN.md §8): ``repro.core.plan.compile_trigger`` compiles each
+(relation, update-kind, storage layout) into a cached :class:`TriggerPlan`
+— the fixed hierarchy of view updates the paper proves is task-independent
+— and jax.jit lowers the plan's replay into one XLA program.  Eager
+per-call updates, jitted triggers, and the fused stream executor all
+execute the same plans.
 """
 from __future__ import annotations
 
@@ -24,11 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import plan as plan_mod
 from . import storage as storage_mod
-from .contraction import BatchedDelta
-from .delta import PropagationResult, propagate_coo, propagate_factorized
 from .indicators import IndicatorState, add_indicators
-from .materialize import choose_materialized, views_on_path
+from .materialize import choose_materialized
 from .query import Query
 from .relations import COOUpdate, DenseRelation, FactorizedUpdate
 from .variable_orders import VariableOrder, heuristic_order
@@ -48,6 +52,10 @@ class IVMEngine:
     store_base: bool
     #: per-view storage decisions (repro.core.storage.plan_storage)
     storage_plan: dict = dataclasses.field(default_factory=dict)
+    #: compiled trigger plans (repro.core.plan), keyed per (relation,
+    #: update signature, storage layout, backend override)
+    plans: plan_mod.PlanCache = dataclasses.field(
+        default_factory=plan_mod.PlanCache)
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -170,14 +178,30 @@ class IVMEngine:
             total += storage_mod.view_nbytes(ind.dense)
         return total
 
+    # ----------------------------------------------------------------- plans
+    def trigger_plan(self, rel: str, upd) -> plan_mod.TriggerPlan:
+        """The cached maintenance plan for an update like ``upd``."""
+        return self.plans.lookup(self, rel, upd)
+
+    def precompile(self, batch: int = 1) -> dict[str, plan_mod.TriggerPlan]:
+        """Compile (and cache) the COO trigger plan of every updatable
+        relation at the given batch size; returns them by relation."""
+        return {
+            rel: self.plans.lookup_sig(
+                self, rel, ("coo", tuple(self.query.relations[rel]), batch))
+            for rel in self.updatable
+        }
+
     # ---------------------------------------------------------------- update
     def apply_update(self, rel: str, upd: COOUpdate | FactorizedUpdate) -> None:
-        """Eager (per-call) update.  Sparse views on the update's delta
-        path rehash to 2× capacity when this batch could cross the
+        """Eager (per-call) update.  Sparse views in the trigger plan's
+        write-set rehash to 2× capacity when this batch could cross the
         load-factor bound — growth needs a host sync, so it lives only on
         this path; jitted triggers and the stream executor keep capacities
-        static (the planner's headroom covers them)."""
-        touched = self._touched_view_names(rel)
+        static (the planner's headroom covers them, and prepared streams
+        grow between segments, see stream.StreamExecutor.run)."""
+        assert rel in self.updatable, f"{rel} not declared updatable"
+        touched, _, _ = self.plans.write_sets(self, rel)
         self.views = {
             name: (storage_mod.grow_if_loaded(
                        v, self._insert_budget(v, rel, upd))
@@ -189,57 +213,64 @@ class IVMEngine:
         )
         self.views, self.base, self.indicators = views, base, indicators
 
-    def _touched_view_names(self, rel: str) -> set[str]:
-        """Views an update to ``rel`` may insert keys into: the delta path
-        (plus premarg companions) and, for indicator relations, the
-        indicator node's path to the root."""
-        names: set[str] = set()
-        for node in views_on_path(self.tree, rel):
-            names.add(node.name)
-            names.add(f"W:{node.name}")
-        for node_name, ind in self.indicators.items():
-            if ind.rel_name == rel:
-                for node in _path_to_root(self.tree, node_name):
-                    names.add(node.name)
-                    names.add(f"W:{node.name}")
-        return names
-
     def _insert_budget(self, view, rel: str, upd) -> int:
         """Worst-case distinct keys one update can insert into ``view``:
         B rows × the domain product of view variables the update does not
-        bind (a mixed COO×dense apply enumerates that grid); factorized
-        updates may touch the whole key grid.  ``grow_if_loaded`` clamps
-        to the view's domain product."""
+        bind (a mixed COO×dense apply enumerates that grid).  Factorized
+        updates enumerate the cartesian product of per-factor *active* key
+        sets (the sparse lowering never touches the full grid), so their
+        budget is that product — bounded per variable by the factor's
+        non-zero count.  ``grow_if_loaded`` clamps to the view's domain
+        product."""
         if not isinstance(view, storage_mod.SparseRelation):
             return 0
         if not isinstance(upd, COOUpdate):
-            return storage_mod.comp_width(view.domains)
+            ring = self.query.ring
+            budget, seen = 1, set()
+            for v in view.schema:
+                if v in upd.schema:
+                    f = upd.factor_for(v)
+                    if id(f) in seen:
+                        continue
+                    seen.add(id(f))
+                    active = int(np.asarray(
+                        jnp.sum(~ring.is_zero(f.payload))))
+                    budget *= active
+                else:
+                    budget *= int(self.query.domains[v])
+            return budget
         extra = 1
         for v in view.schema:
             if v not in upd.schema:
                 extra *= int(self.query.domains[v])
         return upd.batch * extra
 
-    def trigger_body(self, rel: str):
+    def trigger_body(self, rel: str, plan: plan_mod.TriggerPlan | None = None):
         """The pure (uncompiled) maintenance trigger for updates to ``rel``:
             body(state, upd) -> state
         with ``state = (views, base, indicators)``.  The output is
         canonicalized (see :func:`canonical_state`) so that every relation's
         trigger shares one stable state-pytree signature — the invariant the
         stream executor relies on to thread the state through ``lax.scan``
-        carries and across ``lax.switch`` branches."""
+        carries and across ``lax.switch`` branches.  ``plan`` pins the
+        compiled trigger plan (the stream executor embeds per-position
+        plans); without it the engine's plan cache resolves per update
+        signature.  ``memo`` carries per-step CSE results (shared sibling
+        gather planes) inside fused rounds bodies."""
 
-        def body(state, upd):
+        def body(state, upd, memo=None):
             views, base, indicators = state
             return canonical_state(
-                self.functional_update(views, base, indicators, rel, upd)
+                self.functional_update(views, base, indicators, rel, upd,
+                                       plan=plan, memo=memo)
             )
 
         return body
 
     def make_trigger(self, rel: str):
         """Compile the maintenance trigger for updates to ``rel`` (the role
-        DBToaster's code generator plays; here the backend is XLA).
+        DBToaster's code generator plays; here the backend is XLA and the
+        source is the cached TriggerPlan).
 
         Returns a jitted pure function
             trigger(state, upd) -> state
@@ -262,40 +293,18 @@ class IVMEngine:
     def set_state(self, state) -> None:
         self.views, self.base, self.indicators = state
 
-    def functional_update(self, views, base, indicators, rel: str, upd):
-        """Pure update: returns new (views, base, indicators)."""
+    def functional_update(self, views, base, indicators, rel: str, upd,
+                          plan: plan_mod.TriggerPlan | None = None,
+                          memo=None):
+        """Pure update: returns new (views, base, indicators).  Fetches the
+        cached :class:`TriggerPlan` for ``(rel, upd signature, storage
+        layout)`` and replays it — the single execution path behind eager
+        updates, jitted triggers, and every fused-stream dispatch mode."""
         assert rel in self.updatable, f"{rel} not declared updatable"
-        if self.strategy == "reeval":
-            return self._apply_reeval(views, base, indicators, rel, upd)
-        if self.strategy == "fivm_1":
-            return self._apply_first_order(views, base, indicators, rel, upd)
-        # fivm / dbt: higher-order propagation along the delta tree
-        views = dict(views)
-        base = dict(base)
-        indicators = dict(indicators)
-        old_base = base.get(rel)
-        ind_dense = {name: st.dense for name, st in indicators.items()}
-        if isinstance(upd, FactorizedUpdate):
-            res = propagate_factorized(
-                self.tree, views, self.query, rel, upd, indicators=ind_dense
-            )
-        else:
-            res = propagate_coo(
-                self.tree, views, self.query, rel, upd, indicators=ind_dense
-            )
-        views.update(res.updated)
-        if rel in base:
-            base[rel] = self._bump_base(base[rel], upd)
-        # indicator second pass (Sec. 6): updates to R may change ∃R
-        for node_name, ind in list(indicators.items()):
-            if ind.rel_name != rel:
-                continue
-            assert isinstance(upd, COOUpdate), "indicator maintenance needs COO updates"
-            assert old_base is not None, "indicator relations must be stored"
-            new_state, dind = ind.delta_for_update(self.query, upd, old_base)
-            indicators[node_name] = new_state
-            views = self._propagate_indicator_delta(views, indicators, node_name, dind)
-        return views, base, indicators
+        if plan is None:
+            plan = self.plans.lookup(self, rel, upd, views=views)
+        return plan_mod.execute_trigger(self, plan, views, base, indicators,
+                                        upd, memo=memo)
 
     def _bump_base(self, rel: DenseRelation, upd) -> DenseRelation:
         """Base-relation ⊎: COO batches go through the ring scatter
@@ -307,82 +316,6 @@ class IVMEngine:
             dense = upd.densify(self.query.ring).transpose(rel.schema)
             return rel.add(dense)
         return rel.scatter_add(upd.keys, upd.payload)
-
-    # -- strategy: reevaluation --------------------------------------------
-    def _apply_reeval(self, views, base, indicators, rel: str, upd):
-        views, base = dict(views), dict(base)
-        base[rel] = self._bump_base(base[rel], upd)
-        store: dict[str, DenseRelation] = {}
-        evaluate_view(self.tree, base, self.query, store=store)
-        views[self.tree.name] = store[self.tree.name]
-        return views, base, indicators
-
-    # -- strategy: first-order IVM ------------------------------------------
-    def _apply_first_order(self, views, base, indicators, rel: str, upd):
-        """δQ from base relations only: evaluate the delta tree but recompute
-        sibling views from scratch (no auxiliary materialization)."""
-        views, base = dict(views), dict(base)
-        if isinstance(upd, FactorizedUpdate):
-            # 1-IVM takes the full (densified) delta — that is the point of
-            # the comparison in Sec. 8.3
-            dense = upd.densify(self.query.ring)
-            b = int(np.prod([dense.domain_of(v) for v in dense.schema]))
-            keys = _all_keys(dense)
-            payload = {
-                c: dense.payload[c].reshape((b, *self.query.ring.components[c]))
-                for c in self.query.ring.components
-            }
-            upd = COOUpdate(dense.schema, keys, payload)
-        store: dict[str, DenseRelation] = {}
-        evaluate_view(self.tree, base, self.query, store=store)
-        from .indicators import indicator_of
-
-        ind_dense = {
-            name: indicator_of(base[st.rel_name], st.proj, self.query)
-            for name, st in indicators.items()
-        }
-        res = propagate_coo(self.tree, store, self.query, rel, upd, indicators=ind_dense)
-        root = self.tree.name
-        delta = res.deltas[root]
-        assert isinstance(delta, BatchedDelta)
-        views[root] = delta.apply_to(views[root])
-        base[rel] = self._bump_base(base[rel], upd)
-        return views, base, indicators
-
-    # -- indicator propagation (second pass) ---------------------------------
-    def _propagate_indicator_delta(self, views, indicators, node_name: str,
-                                   dind: COOUpdate):
-        from .contraction import BatchedDelta as BD
-        from .delta import _lift_or_none
-
-        views = dict(views)
-        node = self.tree.find(node_name)
-        delta = BD.from_coo(self.query.ring, dind)
-        # at the indicator node, join with ALL children views
-        for sib in node.children:
-            assert sib.name in views, f"{sib.name} must be materialized"
-            delta = delta.join_dense(views[sib.name])
-        for v in node.marg_vars:
-            delta = delta.marginalize(v, _lift_or_none(self.query, v))
-        if node.name in views:
-            views[node.name] = delta.apply_to(views[node.name])
-        # continue upward along node -> root
-        path = _path_to_root(self.tree, node_name)
-        child = node
-        for parent in path[1:]:
-            for sib in parent.children:
-                if sib is child:
-                    continue
-                assert sib.name in views, f"{sib.name} must be materialized"
-                delta = delta.join_dense(views[sib.name])
-            if parent.indicator is not None and parent.name != node_name:
-                delta = delta.join_dense(indicators[parent.name].dense)
-            for v in parent.marg_vars:
-                delta = delta.marginalize(v, _lift_or_none(self.query, v))
-            if parent.name in views:
-                views[parent.name] = delta.apply_to(views[parent.name])
-            child = parent
-        return views
 
 
 def canonical_state(state):
@@ -396,28 +329,3 @@ def canonical_state(state):
     return jax.tree.map(
         lambda x: jax.lax.convert_element_type(x, jnp.asarray(x).dtype), state
     )
-
-
-def _path_to_root(tree: ViewNode, name: str) -> list[ViewNode]:
-    path: list[ViewNode] = []
-
-    def rec(node: ViewNode) -> bool:
-        if node.name == name:
-            path.append(node)
-            return True
-        for c in node.children:
-            if rec(c):
-                path.append(node)
-                return True
-        return False
-
-    assert rec(tree)
-    return path
-
-
-def _all_keys(rel: DenseRelation) -> jnp.ndarray:
-    import numpy as np
-
-    doms = [rel.domain_of(v) for v in rel.schema]
-    grids = np.meshgrid(*[np.arange(d) for d in doms], indexing="ij")
-    return jnp.asarray(np.stack([g.ravel() for g in grids], axis=1).astype(np.int32))

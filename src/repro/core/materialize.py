@@ -33,36 +33,13 @@ def gather_scatter_profile(tree: ViewNode, updatable: Iterable[str]
     """Names of views whose delta interactions are *not* purely
     gather/scatter shaped — the storage planner's sparse-hostile set.
 
-    Walking every updatable relation's delta path once: a sibling view
-    joined while some of its variables are not COO-bound forces a densify
-    (or grows dense delta axes), and a view whose ⊎ arrives with dense
-    axes takes the mixed (grid-enumerating) apply.  Sparse storage remains
-    *correct* for these views — the fallbacks in the delta algebra cover
-    them — but the auto planner keeps them dense."""
-    hostile: set[str] = set()
-    for rel in updatable:
-        path = views_on_path(tree, rel)
-        child = path[0]
-        coo = set(child.schema)
-        dense: set[str] = set()
-        for node in path[1:]:
-            sib_schemas = [(sib.name, set(sib.schema))
-                           for sib in node.children if sib is not child]
-            for name, sch in sib_schemas:
-                if not sch <= coo:
-                    hostile.add(name)
-                    dense |= sch - coo
-            if node.indicator is not None:
-                dense |= set(node.indicator[1]) - coo
-            if dense:
-                hostile.add(f"W:{node.name}")
-            for v in node.marg_vars:
-                coo.discard(v)
-                dense.discard(v)
-            if dense:
-                hostile.add(node.name)
-            child = node
-    return hostile
+    Since the trigger-plan refactor (DESIGN.md §8) this is derived from
+    the same symbolic path walk the plan compiler uses, so the storage
+    eligibility model and the densify cost model read one analysis:
+    see ``repro.core.plan.storage_hostility``."""
+    from .plan import storage_hostility
+
+    return storage_hostility(tree, updatable)
 
 
 def views_on_path(tree: ViewNode, rel: str) -> list[ViewNode]:

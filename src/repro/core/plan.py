@@ -1,0 +1,1292 @@
+"""Trigger-plan IR (DESIGN.md §8): delta propagation as a compiled artifact.
+
+F-IVM's central claim is that maintenance reduces to a *fixed* hierarchy of
+view updates per trigger — the key/update computation is the same for every
+task, only the ring payload differs.  Historically the engine re-discovered
+that fixed structure interpretively on every update: ``propagate_coo`` /
+``propagate_factorized`` walked the view-tree path per call, and the three
+planning decisions of higher-order IVM — densify-vs-factorized delta
+carriage, dense-vs-sparse view storage, scatter kernel backend — were made
+ad hoc in three different layers (``delta.py``, ``storage.py``,
+``kernels/scatter_ops.py``).
+
+This module makes the trigger an explicit compiled object:
+
+* a small typed IR (:class:`Gather`, :class:`Lift`, :class:`JoinContract`,
+  :class:`Marginalize`, :class:`ScatterAccum`, :class:`IndicatorBump`,
+  :class:`BaseBump`, :class:`Reevaluate`), each op carrying schema, storage
+  class, and backend annotations;
+* a compiler :func:`compile_trigger` that runs **once per (relation,
+  update-kind, batch, storage layout, backend override)** and is cached on
+  the engine (:class:`PlanCache`, with hit/miss counters and op interning);
+* one unified planning pass: the densify cost model
+  (:func:`should_densify`), the storage planner's sparse-hostility
+  eligibility walk (:func:`storage_hostility`), and the scatter-backend
+  resolution all read the same symbolic path analysis, so they trade off
+  against each other in one place;
+* thin interpreters (:func:`execute_trigger`) that replay a plan with the
+  exact same delta-algebra calls the old tree-walk made — eager triggers,
+  jitted triggers, and the fused stream executor's scan/rounds/switch
+  bodies are all generated from the same plans (``stream.prepare_stream``
+  embeds them; the switch-mode mutable/const partition derives from each
+  plan's write-set via :func:`state_write_mask`);
+* plan-level CSE: ops are interned per engine, and
+  :func:`shared_prep_ops` / :func:`build_prep_memo` let a fused rounds
+  step compute sibling gather planes / densified sparse siblings once per
+  step when several positions' plans read a view no trigger in the pattern
+  writes.
+
+The symbolic state tracked during compilation mirrors
+``contraction.BatchedDelta`` exactly (COO schema, dense schema, effective
+batch incl. collapse, pending deferred gather), so every runtime decision
+the delta algebra makes is known — and recorded — at compile time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .contraction import BatchedDelta
+from .materialize import views_on_path
+from .query import Query
+from .relations import COOUpdate, DenseRelation, FactorizedUpdate
+from .view_tree import ViewNode, evaluate_view
+
+#: indicator dense relations are referenced by this name prefix in op
+#: ``view`` fields (mirrors the host oracle's ``∃<node>`` naming)
+IND_PREFIX = "∃"
+
+
+# ---------------------------------------------------------------------------
+# The op vocabulary.  Frozen dataclasses: hashable (interning / memo keys)
+# and printable in a stable text form (golden-plan tests).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlanOp:
+    def label(self) -> str:  # pragma: no cover - overridden
+        return type(self).__name__
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafDelta(PlanOp):
+    """Build the leaf delta: COO rows, or one densified delta relation."""
+
+    rel: str
+    schema: tuple
+    batch: int
+    densify: bool
+
+    def label(self):
+        if self.densify:
+            form = f"densified[{','.join(self.schema)}]"
+        elif self.batch == 0:
+            form = f"factors[{','.join(self.schema)}]"
+        else:
+            form = f"rows[{','.join(self.schema)}; B={self.batch}]"
+        return f"Leaf {form}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Gather(PlanOp):
+    """Deferred sibling gather: the join stays symbolic (pending_gather)
+    and fuses into the eventual scatter / a later forced materialize."""
+
+    view: str
+    vars: tuple
+    storage: str  # "dense" | "sparse"
+    forces: bool = False  # materializes a previously pending gather first
+
+    def label(self):
+        f = " !force" if self.forces else ""
+        return f"Gather[{self.view} {self.storage}]{f}"
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinContract(PlanOp):
+    """Eager join with a materialized sibling (einsum per bilinear term)."""
+
+    view: str
+    vars: tuple
+    storage: str
+    grows: tuple = ()  # fresh dense axes grown by this join
+    densifies: bool = False  # sparse sibling materializes to dense first
+    gathers: bool = False  # fully-bound per-row gather-multiply path
+    forces: bool = False
+
+    def label(self):
+        tags = []
+        if self.densifies:
+            tags.append("densify")
+        if self.gathers:
+            tags.append("gather")
+        if self.grows:
+            tags.append(f"+[{','.join(self.grows)}]")
+        if self.forces:
+            tags.append("!force")
+        t = (" " + " ".join(tags)) if tags else ""
+        return f"Join[{self.view} {self.storage}]{t}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Lift(PlanOp):
+    """Gather the lift relation g_var at the delta's keys (identity lifts
+    compile to *no* Lift op — the skip is a plan-time decision)."""
+
+    var: str
+    spec: tuple
+
+    def label(self):
+        return f"Lift[{self.var} {'.'.join(str(s) for s in self.spec)}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Marginalize(PlanOp):
+    var: str
+    axis: str  # "coo" | "dense"
+    collapses: bool = False  # batch collapse fires after this ⊕
+    forces: bool = False
+
+    def label(self):
+        tags = []
+        if self.collapses:
+            tags.append("collapse")
+        if self.forces:
+            tags.append("!force")
+        t = (" " + " ".join(tags)) if tags else ""
+        return f"Marg[{self.var} {self.axis}]{t}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Emit(PlanOp):
+    """Record the current delta as this view's delta (PropagationResult)."""
+
+    view: str
+
+    def label(self):
+        return f"Emit[{self.view}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScatterAccum(PlanOp):
+    """view ⊎ δ into the materialized view under its storage backend."""
+
+    view: str
+    storage: str
+    backend: str | None = None  # scatter kernel backend (plan-time resolved)
+    fused: bool = False  # a pending gather fuses into this scatter
+    mixed: bool = False  # delta carries dense axes (grid / mixed apply)
+
+    def label(self):
+        tags = [self.storage]
+        if self.backend is not None:
+            tags.append(self.backend)
+        if self.fused:
+            tags.append("fused")
+        if self.mixed:
+            tags.append("mixed")
+        return f"Scatter[{self.view} {' '.join(tags)}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class BaseBump(PlanOp):
+    rel: str
+    backend: str | None = None
+
+    def label(self):
+        b = f" {self.backend}" if self.backend is not None else ""
+        return f"BaseBump[{self.rel}{b}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class IndicatorBump(PlanOp):
+    """Transition-count maintenance of ∃_proj rel; starts an indicator
+    propagation section (the δ∃ becomes the current delta)."""
+
+    node: str
+    rel: str
+    proj: tuple
+
+    def label(self):
+        return f"IndicatorBump[{IND_PREFIX}{self.node} ← {self.rel}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Reevaluate(PlanOp):
+    """Evaluate the view tree bottom-up from stored base relations."""
+
+    scope: str  # "root" (reeval) | "store" (1-IVM sibling recompute)
+
+    def label(self):
+        return f"Reevaluate[{self.scope}]"
+
+
+# ---------------------------------------------------------------------------
+# TriggerPlan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TriggerPlan:
+    """A compiled maintenance trigger: the fixed op sequence for one
+    (relation, update-kind, batch, storage layout)."""
+
+    rel: str
+    kind: str  # "coo" | "factorized" | "first_order" | "reeval"
+    strategy: str
+    schema: tuple
+    batch: int | None  # None for factorized updates
+    densify: bool
+    ops: tuple  # main delta-path section
+    ind_ops: tuple  # indicator sections (each led by an IndicatorBump)
+    write_views: frozenset
+    write_base: frozenset
+    write_indicators: frozenset
+    cost: int  # modeled element count of the chosen delta walk
+
+    def write_sets(self):
+        return self.write_views, self.write_base, self.write_indicators
+
+    def pretty(self) -> str:
+        """Stable text form (golden-plan tests pin this)."""
+        b = "-" if self.batch is None else str(self.batch)
+        head = (f"trigger {self.rel} kind={self.kind} strategy={self.strategy}"
+                f" schema=[{','.join(self.schema)}] batch={b}"
+                f" densify={'yes' if self.densify else 'no'}"
+                f" cost={self.cost}")
+        lines = [head]
+        for op in self.ops:
+            lines.append(f"  {op.label()}")
+        for op in self.ind_ops:
+            pad = "  " if isinstance(op, IndicatorBump) else "    "
+            lines.append(f"{pad}{op.label()}")
+        lines.append(
+            "  writes: views=[%s] base=[%s] indicators=[%s]" % (
+                ",".join(sorted(self.write_views)),
+                ",".join(sorted(self.write_base)),
+                ",".join(sorted(self.write_indicators))))
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Unified cost model (the PR-2 densify planner, now a plan-time pass)
+# ---------------------------------------------------------------------------
+def path_costs(path: Sequence[ViewNode], upd_schema: Sequence[str],
+               batch: int, query: Query):
+    """(cost_row, cost_dense, grew_dense): modeled element counts of the two
+    delta representations along the path.
+
+    * **Row (COO) propagation** streams ``[B, D_dense...]`` slices: each
+      node costs ``B_eff · ∏ dense-axis domains`` where dense axes are the
+      sibling/indicator variables the update doesn't bind, and ``B_eff``
+      drops to 1 once the COO schema empties (batch collapse).
+    * **Dense-delta propagation** materializes one relation over the
+      delta's variable set: the leaf pays the full update-schema domain
+      product, each node the domain product of the current delta schema.
+    """
+    B = batch
+    dom = query.domains
+    bound = set(upd_schema)
+
+    def extent(vars_):
+        e = 1
+        for v in vars_:
+            e *= int(dom[v])
+        return e
+
+    coo = set(upd_schema)
+    row_dense: set[str] = set()
+    dense_vars = set(upd_schema)
+    cost_row = B
+    cost_dense = extent(upd_schema)
+    grew_dense = False
+    child = path[0]
+    for node in path[1:]:
+        sib_schemas = [set(sib.schema) for sib in node.children
+                       if sib is not child]
+        if node.indicator is not None:
+            sib_schemas.append(set(node.indicator[1]))
+        for sch in sib_schemas:
+            row_dense |= sch - bound
+            dense_vars |= sch
+        grew_dense = grew_dense or bool(row_dense)
+        b_eff = B if coo else 1
+        cost_row += b_eff * extent(row_dense)
+        cost_dense += extent(dense_vars)
+        for v in node.marg_vars:
+            coo.discard(v)
+            row_dense.discard(v)
+            dense_vars.discard(v)
+        child = node
+    return cost_row, cost_dense, grew_dense
+
+
+def should_densify(path: Sequence[ViewNode], upd_schema: Sequence[str],
+                   batch: int, query: Query) -> bool:
+    """Densify when the dense walk is strictly cheaper.  Updates that bind
+    every sibling variable never grow dense axes, so the row walk is the
+    factorized fast path and wins regardless of batch size."""
+    cost_row, cost_dense, grew_dense = path_costs(path, upd_schema, batch,
+                                                  query)
+    if not grew_dense:
+        return False
+    return cost_dense < cost_row
+
+
+def storage_hostility(tree: ViewNode, updatable) -> set[str]:
+    """Names of views whose delta interactions are *not* purely
+    gather/scatter shaped — the storage planner's sparse-hostile set.
+
+    Derived from the same symbolic path walk the trigger compiler uses:
+    a sibling joined while some of its variables are not COO-bound forces
+    a densify (or grows dense delta axes), and a view whose ⊎ arrives with
+    dense axes takes the mixed (grid-enumerating) apply.  Sparse storage
+    remains *correct* for these views — the delta-algebra fallbacks cover
+    them — but the auto planner keeps them dense."""
+    hostile: set[str] = set()
+    for rel in updatable:
+        path = views_on_path(tree, rel)
+        child = path[0]
+        coo = set(child.schema)
+        dense: set[str] = set()
+        for node in path[1:]:
+            for sib in node.children:
+                if sib is child:
+                    continue
+                sch = set(sib.schema)
+                if not sch <= coo:
+                    hostile.add(sib.name)
+                    dense |= sch - coo
+            if node.indicator is not None:
+                dense |= set(node.indicator[1]) - coo
+            if dense:
+                hostile.add(f"W:{node.name}")
+            for v in node.marg_vars:
+                coo.discard(v)
+                dense.discard(v)
+            if dense:
+                hostile.add(node.name)
+            child = node
+    return hostile
+
+
+# ---------------------------------------------------------------------------
+# Compile-time helpers
+# ---------------------------------------------------------------------------
+def _storage_kind(view) -> str:
+    from . import storage
+
+    return "sparse" if isinstance(view, storage.SparseRelation) else "dense"
+
+
+def _payload_width(ring) -> int:
+    w = 0
+    for shp in ring.components.values():
+        c = 1
+        for s in shp:
+            c *= int(s)
+        w += c
+    return w
+
+
+def active_backend_override() -> str | None:
+    """The globally forced scatter backend (``use_backend`` / env), if any —
+    part of the plan-cache key so an override change can never replay a
+    stale plan."""
+    from repro.kernels import scatter_ops
+
+    return scatter_ops.active_override()
+
+
+def _resolve_scatter_backend(num_segments: int, batch: int, width: int):
+    from repro.kernels import scatter_ops
+
+    return scatter_ops.resolve_backend(num_segments, batch, width, None)
+
+
+@dataclasses.dataclass
+class _SymDelta:
+    """Compile-time mirror of ``BatchedDelta``'s state machine: the exact
+    fields its join/marginalize/apply decisions read."""
+
+    coo: tuple
+    dense: tuple
+    b: int
+    pending: bool
+    ring: Any
+
+    def b_eff(self) -> int:
+        return self.b
+
+    def defer_ok(self, view_vars, view_nonempty=True) -> bool:
+        if self.pending or self.dense:
+            return False
+        if self.ring.mul_terms is None or not self.ring.commutative:
+            return False
+        return bool(view_vars) and all(v in self.coo for v in view_vars)
+
+
+def _domain_extent(query: Query, vars_) -> int:
+    e = 1
+    for v in vars_:
+        e *= int(query.domains[v])
+    return e
+
+
+def _scatter_op(query: Query, name: str, view, st: _SymDelta) -> ScatterAccum:
+    """Annotate a ⊎ site: storage class + the kernel backend the dispatch
+    layer will resolve for its primary scatter (the three scattered
+    planners, decided together at plan time)."""
+    ring = st.ring
+    kind = _storage_kind(view)
+    d = _payload_width(ring)
+    if kind == "sparse":
+        backend = _resolve_scatter_backend(view.capacity, st.b, d)
+        return ScatterAccum(name, kind, backend=backend,
+                            fused=st.pending, mixed=bool(st.dense))
+    if st.coo and not st.dense:
+        S = 1
+        for v in view.schema:
+            S *= int(view.domain_of(v))
+        backend = _resolve_scatter_backend(S, st.b, d)
+        return ScatterAccum(name, kind, backend=backend, fused=st.pending)
+    if st.coo:  # mixed COO×dense apply
+        S = _domain_extent(query, st.coo)
+        dd = d * _domain_extent(query, st.dense)
+        backend = _resolve_scatter_backend(S, st.b, dd)
+        return ScatterAccum(name, kind, backend=backend, mixed=True)
+    # dense-axes-only delta: plain elementwise add, no scatter involved
+    return ScatterAccum(name, kind, backend=None, mixed=bool(st.dense))
+
+
+# ---------------------------------------------------------------------------
+# The compiler
+# ---------------------------------------------------------------------------
+def _emit_join(ops: list, st: _SymDelta, name: str, view, view_vars,
+               intern) -> None:
+    """Emit the op for ``delta.join_dense(view)`` and advance the symbolic
+    state, mirroring contraction.BatchedDelta.join_dense exactly."""
+    kind = _storage_kind(view)
+    if st.defer_ok(view_vars):
+        ops.append(intern(Gather(name, tuple(view_vars), kind)))
+        st.pending = True
+        return
+    forces = st.pending
+    st.pending = False  # join_dense forces before any eager path
+    if st.defer_ok(view_vars):  # re-dispatch after force (second sibling)
+        ops.append(intern(Gather(name, tuple(view_vars), kind,
+                                 forces=forces)))
+        st.pending = True
+        return
+    fully_bound = bool(view_vars) and all(v in st.coo for v in view_vars)
+    if kind == "sparse":
+        if fully_bound:
+            ops.append(intern(JoinContract(name, tuple(view_vars), kind,
+                                           gathers=True, forces=forces)))
+            return
+        densifies = True
+    else:
+        densifies = False
+    shared_coo = [v for v in view_vars if v in st.coo]
+    v_rest = [v for v in view_vars if v not in shared_coo]
+    grows = tuple(v for v in v_rest if v not in st.dense)
+    st.dense = tuple(st.dense) + grows
+    ops.append(intern(JoinContract(name, tuple(view_vars), kind,
+                                   grows=grows, densifies=densifies,
+                                   forces=forces)))
+
+
+def _emit_marginalize(ops: list, st: _SymDelta, query: Query, var: str,
+                      intern) -> None:
+    """Emit Lift?/Marginalize for ``delta.marginalize(var, lift_or_none)``,
+    mirroring the identity-lift skip and the batch-collapse rule."""
+    lifted = query.lift_spec(var) != ("one",)
+    if lifted:
+        ops.append(intern(Lift(var, tuple(query.lift_spec(var)))))
+    if var in st.coo:
+        forces = st.pending and st.b > 1 and len(st.coo) == 1
+        if forces:
+            st.pending = False
+        st.coo = tuple(v for v in st.coo if v != var)
+        collapses = (not st.coo) and st.b > 1
+        if collapses:
+            st.b = 1
+        ops.append(intern(Marginalize(var, "coo", collapses=collapses,
+                                      forces=forces)))
+    else:
+        st.dense = tuple(v for v in st.dense if v != var)
+        ops.append(intern(Marginalize(var, "dense")))
+
+
+def _compile_path_ops(tree: ViewNode, query: Query, rel: str,
+                      upd_schema, batch: int, views: Mapping,
+                      ind_meta: Mapping[str, tuple], densify: bool,
+                      intern, apply_views: bool = True):
+    """Compile the leaf-to-root delta path into ops.  ``views`` maps the
+    materialized view names to their storage objects (storage classes and
+    capacities are read off them); ``ind_meta`` maps indicator node names
+    to (proj, dense_view).  ``apply_views=False`` skips ScatterAccum ops
+    (1-IVM computes the root delta from recomputed stores and applies only
+    at the root)."""
+    ring = query.ring
+    path = views_on_path(tree, rel)
+    ops: list = []
+    if densify:
+        st = _SymDelta(coo=(), dense=tuple(upd_schema), b=1, pending=False,
+                       ring=ring)
+    else:
+        st = _SymDelta(coo=tuple(upd_schema), dense=(), b=batch,
+                       pending=False, ring=ring)
+    ops.append(intern(LeafDelta(rel, tuple(upd_schema), batch, densify)))
+    write_views: set[str] = set()
+
+    leaf = path[0]
+    ops.append(intern(Emit(leaf.name)))
+    if apply_views and leaf.name in views:
+        ops.append(intern(_scatter_op(query, leaf.name,
+                                     views[leaf.name], st)))
+        write_views.add(leaf.name)
+
+    child = leaf
+    for node in path[1:]:
+        for sib in node.children:
+            if sib is child:
+                continue
+            assert sib.name in views, (
+                f"sibling {sib.name} of delta path must be materialized "
+                f"(μ guarantees this for updatable {rel})")
+            _emit_join(ops, st, sib.name, views[sib.name], sib.schema,
+                       intern)
+        if node.indicator is not None:
+            assert node.name in ind_meta, (
+                f"maintained indicator for {node.name} required")
+            proj, ind_view = ind_meta[node.name]
+            _emit_join(ops, st, IND_PREFIX + node.name, ind_view, proj,
+                       intern)
+        wname = f"W:{node.name}"
+        if apply_views and wname in views:
+            ops.append(intern(_scatter_op(query, wname,
+                                         views[wname], st)))
+            write_views.add(wname)
+        for v in node.marg_vars:
+            _emit_marginalize(ops, st, query, v, intern)
+        ops.append(intern(Emit(node.name)))
+        if apply_views and node.name in views:
+            ops.append(intern(_scatter_op(query, node.name,
+                                         views[node.name], st)))
+            write_views.add(node.name)
+        child = node
+    return tuple(ops), write_views
+
+
+def _compile_indicator_ops(tree: ViewNode, query: Query, rel: str,
+                           batch: int, views: Mapping,
+                           indicators: Mapping, intern):
+    """Compile the indicator second pass (Sec. 6): for every maintained
+    ∃-projection over ``rel``, count maintenance plus the δ∃ propagation
+    path from the indicator node to the root."""
+    ring = query.ring
+    ops: list = []
+    write_views: set[str] = set()
+    write_inds: set[str] = set()
+    for node_name, ind in indicators.items():
+        if ind.rel_name != rel:
+            continue
+        write_inds.add(node_name)
+        ops.append(intern(IndicatorBump(node_name, rel, tuple(ind.proj))))
+        st = _SymDelta(coo=tuple(ind.proj), dense=(), b=batch,
+                       pending=False, ring=ring)
+        node = tree.find(node_name)
+        for sib in node.children:
+            assert sib.name in views, f"{sib.name} must be materialized"
+            _emit_join(ops, st, sib.name, views[sib.name], sib.schema,
+                       intern)
+        for v in node.marg_vars:
+            _emit_marginalize(ops, st, query, v, intern)
+        if node.name in views:
+            ops.append(intern(_scatter_op(query, node.name,
+                                         views[node.name], st)))
+            write_views.add(node.name)
+        path = path_to_root(tree, node_name)
+        child = node
+        for parent in path[1:]:
+            for sib in parent.children:
+                if sib is child:
+                    continue
+                assert sib.name in views, f"{sib.name} must be materialized"
+                _emit_join(ops, st, sib.name, views[sib.name], sib.schema,
+                           intern)
+            if parent.indicator is not None and parent.name != node_name:
+                proj, ind_view = (tuple(indicators[parent.name].proj),
+                                  indicators[parent.name].dense)
+                _emit_join(ops, st, IND_PREFIX + parent.name, ind_view,
+                           proj, intern)
+            for v in parent.marg_vars:
+                _emit_marginalize(ops, st, query, v, intern)
+            if parent.name in views:
+                ops.append(intern(_scatter_op(query, parent.name,
+                                          views[parent.name], st)))
+                write_views.add(parent.name)
+            child = parent
+    return tuple(ops), write_views, write_inds
+
+
+def compile_trigger(engine, rel: str, upd_sig, intern=None,
+                    views=None) -> TriggerPlan:
+    """Compile the maintenance trigger for updates to ``rel``.
+
+    ``upd_sig`` is ``("coo", schema, batch)`` or ``("factorized", schema)``.
+    ``views`` defaults to the engine's materialized views; pass the state
+    actually being updated when it may differ in storage layout.  The
+    result is a pure metadata object: compiling never touches device
+    state, so plans cache across jit traces, scan bodies, and switch
+    branches (one compiler, every execution path).
+    """
+    intern = intern or (lambda op: op)
+    kind, schema = upd_sig[0], tuple(upd_sig[1])
+    batch = upd_sig[2] if kind == "coo" else None
+    query, tree, strategy = engine.query, engine.tree, engine.strategy
+    views = engine.views if views is None else views
+    root = tree.name
+
+    if strategy == "reeval":
+        ops = (intern(BaseBump(rel, active_backend_override())),
+               intern(Reevaluate("root")))
+        return TriggerPlan(
+            rel=rel, kind="reeval", strategy=strategy, schema=schema,
+            batch=batch, densify=False, ops=ops, ind_ops=(),
+            write_views=frozenset({root}), write_base=frozenset({rel}),
+            write_indicators=frozenset(), cost=0)
+
+    if strategy == "fivm_1":
+        # 1-IVM: recompute sibling views from base, run the delta path over
+        # the recomputed store (all views present), apply only at the root.
+        if kind == "factorized":
+            # the full densified delta is the point of the comparison
+            batch = _domain_extent(query, schema)
+        path = views_on_path(tree, rel)
+        densify = should_densify(path, schema, batch, query)
+        store_views = {n.name: views.get(n.name, _DenseProxy(n, query))
+                       for n in tree.walk()}
+        path_ops, _ = _compile_path_ops(
+            tree, query, rel, schema, batch, store_views, {}, densify,
+            intern, apply_views=False)
+        cost_row, cost_dense, _ = path_costs(path, schema, batch, query)
+        ops = (intern(Reevaluate("store")),) + path_ops + (
+            _scatter_op(query, root, views[root],
+                        _SymDelta(coo=(), dense=(), b=1, pending=False,
+                                  ring=query.ring)),
+            intern(BaseBump(rel, active_backend_override())))
+        return TriggerPlan(
+            rel=rel, kind="first_order", strategy=strategy, schema=schema,
+            batch=batch, densify=densify, ops=ops, ind_ops=(),
+            write_views=frozenset({root}), write_base=frozenset({rel}),
+            write_indicators=frozenset(),
+            cost=cost_dense if densify else cost_row)
+
+    # fivm / dbt: higher-order propagation along the delta tree
+    ind_meta = {name: (tuple(ind.proj), ind.dense)
+                for name, ind in engine.indicators.items()}
+    path = views_on_path(tree, rel)
+    if kind == "coo":
+        densify = should_densify(path, schema, batch, query)
+    else:
+        densify = False
+    if kind == "factorized":
+        ops, write_views = _compile_factorized_ops(
+            tree, query, rel, schema, views, ind_meta, intern)
+        cost = 0
+    else:
+        ops, write_views = _compile_path_ops(
+            tree, query, rel, schema, batch, views, ind_meta, densify,
+            intern)
+        cost_row, cost_dense, _ = path_costs(path, schema, batch, query)
+        cost = cost_dense if densify else cost_row
+    write_base = frozenset({rel}) & frozenset(engine.base)
+    ind_ops, ind_write_views, write_inds = _compile_indicator_ops(
+        tree, query, rel, batch or 1, views, engine.indicators, intern)
+    if ind_ops and kind == "factorized":
+        raise AssertionError("indicator maintenance needs COO updates")
+    return TriggerPlan(
+        rel=rel, kind=kind, strategy=strategy, schema=schema, batch=batch,
+        densify=densify, ops=ops, ind_ops=ind_ops,
+        write_views=frozenset(write_views | ind_write_views),
+        write_base=write_base, write_indicators=frozenset(write_inds),
+        cost=cost)
+
+
+class _DenseProxy:
+    """Compile-time stand-in for a 1-IVM recomputed store view (always
+    dense: ``evaluate_view`` materializes densely)."""
+
+    def __init__(self, node: ViewNode, query: Query):
+        self.schema = tuple(node.schema)
+        self._query = query
+
+    def domain_of(self, var: str) -> int:
+        return int(self._query.domains[var])
+
+
+def _compile_factorized_ops(tree: ViewNode, query: Query, rel: str,
+                            upd_schema, views: Mapping, ind_meta, intern):
+    """Sec. 5 Optimize: the same path, interpreted over a factor list.
+    Joins absorb into touching factors, marginalization always contracts
+    against the lift relation (no identity skip — mirror of the eager
+    factorized walk), application is the outer-product accumulate."""
+    path = views_on_path(tree, rel)
+    ops: list = []
+    write_views: set[str] = set()
+
+    def scatter(name):
+        view = views[name]
+        ops.append(intern(ScatterAccum(name, _storage_kind(view),
+                                       backend=None)))
+        write_views.add(name)
+
+    leaf = path[0]
+    ops.append(intern(LeafDelta(rel, tuple(upd_schema), 0, False)))
+    ops.append(intern(Emit(leaf.name)))
+    if leaf.name in views:
+        scatter(leaf.name)
+    child = leaf
+    for node in path[1:]:
+        for sib in node.children:
+            if sib is child:
+                continue
+            assert sib.name in views, f"sibling {sib.name} not materialized"
+            ops.append(intern(JoinContract(
+                sib.name, tuple(sib.schema), _storage_kind(views[sib.name]),
+                densifies=_storage_kind(views[sib.name]) == "sparse")))
+        if node.indicator is not None:
+            proj, _ind = ind_meta[node.name]
+            ops.append(intern(JoinContract(IND_PREFIX + node.name, proj,
+                                           "dense")))
+        wname = f"W:{node.name}"
+        if wname in views:
+            scatter(wname)
+        for v in node.marg_vars:
+            ops.append(intern(Lift(v, tuple(query.lift_spec(v)))))
+            ops.append(intern(Marginalize(v, "factor")))
+        ops.append(intern(Emit(node.name)))
+        if node.name in views:
+            scatter(node.name)
+        child = node
+    return tuple(ops), write_views
+
+
+def path_to_root(tree: ViewNode, name: str) -> list[ViewNode]:
+    """Node-to-root spine (indicator propagation paths)."""
+    path: list[ViewNode] = []
+
+    def rec(node: ViewNode) -> bool:
+        if node.name == name:
+            path.append(node)
+            return True
+        for c in node.children:
+            if rec(c):
+                path.append(node)
+                return True
+        return False
+
+    assert rec(tree)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# The plan cache
+# ---------------------------------------------------------------------------
+def storage_signature(views: Mapping) -> tuple:
+    """Hashable storage-layout fingerprint: a plan is only valid for the
+    exact (backend kind, capacity) layout it was compiled against — a
+    sparse rehash between stream segments recompiles."""
+    from . import storage
+
+    sig = []
+    for name in sorted(views):
+        v = views[name]
+        if isinstance(v, storage.SparseRelation):
+            sig.append((name, "s", v.capacity))
+        else:
+            sig.append((name, "d", 0))
+    return tuple(sig)
+
+
+class PlanCache:
+    """Per-engine trigger-plan cache with op interning.
+
+    Keys: (rel, update signature, storage layout, scatter-backend
+    override).  ``hits``/``misses``/``compile_seconds`` feed the bench
+    telemetry; interned ops let sibling triggers share structurally
+    identical subtrees (the plan-level CSE substrate)."""
+
+    def __init__(self):
+        self.plans: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self.compile_seconds = 0.0
+        self._interned: dict = {}
+        self._write_sets: dict = {}
+
+    def intern(self, op: PlanOp) -> PlanOp:
+        return self._interned.setdefault(op, op)
+
+    def lookup_sig(self, engine, rel: str, upd_sig,
+                   views=None) -> TriggerPlan:
+        views = engine.views if views is None else views
+        key = (rel, upd_sig, storage_signature(views),
+               active_backend_override())
+        plan = self.plans.get(key)
+        if plan is not None:
+            self.hits += 1
+            return plan
+        self.misses += 1
+        t0 = time.perf_counter()
+        plan = compile_trigger(engine, rel, upd_sig, intern=self.intern,
+                               views=views)
+        self.compile_seconds += time.perf_counter() - t0
+        self.plans[key] = plan
+        return plan
+
+    def lookup(self, engine, rel: str, upd, views=None) -> TriggerPlan:
+        if isinstance(upd, FactorizedUpdate):
+            sig = ("factorized", tuple(upd.schema))
+        else:
+            sig = ("coo", tuple(upd.schema), upd.batch)
+        return self.lookup_sig(engine, rel, sig, views=views)
+
+    def write_sets(self, engine, rel: str):
+        """Structural write sets for ``rel`` (independent of batch size and
+        storage layout): the views/base/indicator entries any trigger for
+        ``rel`` may replace.  Drives eager-path growth and the stream
+        executor's mutable/const state partition."""
+        if rel not in self._write_sets:
+            # representative signature: write sets do not depend on the
+            # update's batch or on densification
+            sig = ("coo", tuple(engine.query.relations[rel]), 1)
+            plan = self.lookup_sig(engine, rel, sig)
+            self._write_sets[rel] = plan.write_sets()
+        return self._write_sets[rel]
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        n = len(self.plans)
+        return dict(
+            plans=n,
+            hits=self.hits,
+            misses=self.misses,
+            hit_rate=round(self.hits / total, 4) if total else 0.0,
+            #: cumulative across every compile on this engine
+            compile_ms_total=round(1e3 * self.compile_seconds, 3),
+            #: average per compiled trigger plan
+            compile_ms_per_plan=round(1e3 * self.compile_seconds / n, 3)
+            if n else 0.0,
+            interned_ops=len(self._interned),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Interpreters
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PropagationResult:
+    """Deltas per affected view name (leaf-to-root order) + updated views.
+
+    ``updated`` values carry each view's planned storage backend
+    (``ViewStorage``): a dense view stays dense, a hashed-COO view stays
+    sparse — the delta algebra dispatches per storage."""
+
+    deltas: dict
+    updated: dict
+
+
+def _resolve_view(name: str, views: Mapping, ind_dense: Mapping):
+    if name.startswith(IND_PREFIX):
+        return ind_dense[name[len(IND_PREFIX):]]
+    return views[name]
+
+
+def run_coo_ops(ops, views: Mapping, query: Query, upd: COOUpdate,
+                ind_dense: Mapping, memo: Mapping | None = None,
+                delta: BatchedDelta | None = None,
+                updated: dict | None = None) -> PropagationResult:
+    """Replay a compiled COO path section.  Performs exactly the
+    delta-algebra calls the interpretive walk made (bit-identical); the
+    plan's annotations only *direct* — backend hints thread into the
+    scatters, memoized sibling planes short-circuit the prepare step."""
+    ring = query.ring
+    deltas: dict = {}
+    updated = {} if updated is None else updated
+    pending_lift = None
+    for op in ops:
+        if isinstance(op, LeafDelta):
+            delta = (densified_delta(query, op.rel, upd) if op.densify
+                     else BatchedDelta.from_coo(ring, upd))
+        elif isinstance(op, Gather):
+            view = _resolve_view(op.view, views, ind_dense)
+            plane = memo.get(("plane", op.view)) if memo else None
+            delta = delta.join_dense(view, src_plane=plane)
+        elif isinstance(op, JoinContract):
+            view = _resolve_view(op.view, views, ind_dense)
+            if op.densifies and memo:
+                view = memo.get(("dense", op.view), view)
+            delta = delta.join_dense(view)
+        elif isinstance(op, Lift):
+            pending_lift = query.lift_rel(op.var)
+        elif isinstance(op, Marginalize):
+            delta = delta.marginalize(op.var, pending_lift)
+            pending_lift = None
+        elif isinstance(op, Emit):
+            deltas[op.view] = delta
+        elif isinstance(op, ScatterAccum):
+            updated[op.view] = delta.apply_to(views[op.view],
+                                              backend=op.backend)
+        else:  # pragma: no cover
+            raise TypeError(op)
+    return PropagationResult(deltas, updated)
+
+
+def run_factorized_ops(ops, views: Mapping, query: Query,
+                       upd: FactorizedUpdate,
+                       ind_dense: Mapping) -> PropagationResult:
+    """Replay a compiled factorized (Sec. 5 Optimize) path section over a
+    factor list: joins absorb, marginalization touches only the factor
+    containing the variable, application is the outer-product ⊎."""
+    ring = query.ring
+    factors: list[DenseRelation] = list(upd.factors)
+    deltas: dict = {}
+    updated: dict = {}
+
+    def current() -> FactorizedUpdate:
+        sch = tuple(v for f in factors for v in f.schema)
+        return FactorizedUpdate(sch, tuple(factors))
+
+    for op in ops:
+        if isinstance(op, LeafDelta):
+            pass  # the factor list IS the leaf delta
+        elif isinstance(op, JoinContract):
+            view = _resolve_view(op.view, views, ind_dense)
+            absorb_factor(factors, view, ring)
+        elif isinstance(op, Lift):
+            pass  # factorized marginalization always contracts the lift
+        elif isinstance(op, Marginalize):
+            marginalize_factor(factors, op.var, query)
+        elif isinstance(op, Emit):
+            deltas[op.view] = current()
+        elif isinstance(op, ScatterAccum):
+            updated[op.view] = apply_factorized(views[op.view], factors,
+                                                ring)
+        else:  # pragma: no cover
+            raise TypeError(op)
+    return PropagationResult(deltas, updated)
+
+
+def run_indicator_ops(ops, views: dict, indicators: dict, query: Query,
+                      upd: COOUpdate, old_base) -> None:
+    """Replay indicator sections *in place*: each IndicatorBump computes
+    the transition-count delta δ∃ and the following ops propagate it to
+    the root, reading (and immediately writing) the already-updated
+    views."""
+    ring = query.ring
+    delta = None
+    pending_lift = None
+    for op in ops:
+        if isinstance(op, IndicatorBump):
+            st = indicators[op.node]
+            assert isinstance(upd, COOUpdate), (
+                "indicator maintenance needs COO updates")
+            assert old_base is not None, (
+                "indicator relations must be stored")
+            new_state, dind = st.delta_for_update(query, upd, old_base)
+            indicators[op.node] = new_state
+            delta = BatchedDelta.from_coo(ring, dind)
+        elif isinstance(op, (Gather, JoinContract)):
+            ind_dense = {n: s.dense for n, s in indicators.items()}
+            view = _resolve_view(op.view, views, ind_dense)
+            delta = delta.join_dense(view)
+        elif isinstance(op, Lift):
+            pending_lift = query.lift_rel(op.var)
+        elif isinstance(op, Marginalize):
+            delta = delta.marginalize(op.var, pending_lift)
+            pending_lift = None
+        elif isinstance(op, ScatterAccum):
+            views[op.view] = delta.apply_to(views[op.view],
+                                            backend=op.backend)
+        else:  # pragma: no cover
+            raise TypeError(op)
+
+
+def execute_trigger(engine, plan: TriggerPlan, views, base, indicators,
+                    upd, memo: Mapping | None = None):
+    """Run a compiled trigger: the single execution entry shared by eager
+    ``apply_update``, jitted per-call triggers, and every fused-stream
+    dispatch mode.  Returns new ``(views, base, indicators)``."""
+    query = engine.query
+    views = dict(views)
+    base = dict(base)
+    indicators = dict(indicators)
+
+    if plan.kind == "reeval":
+        base[plan.rel] = engine._bump_base(base[plan.rel], upd)
+        store: dict = {}
+        evaluate_view(engine.tree, base, query, store=store)
+        views[engine.tree.name] = store[engine.tree.name]
+        return views, base, indicators
+
+    if plan.kind == "first_order":
+        if isinstance(upd, FactorizedUpdate):
+            upd = densify_update_to_coo(query, upd)
+        store: dict = {}
+        evaluate_view(engine.tree, base, query, store=store)
+        from .indicators import indicator_of
+
+        ind_dense = {
+            name: indicator_of(base[st.rel_name], st.proj, query)
+            for name, st in indicators.items()
+        }
+        path_ops = tuple(op for op in plan.ops
+                         if not isinstance(op, (Reevaluate, BaseBump,
+                                                ScatterAccum)))
+        res = run_coo_ops(path_ops, store, query, upd, ind_dense)
+        root = engine.tree.name
+        delta = res.deltas[root]
+        assert isinstance(delta, BatchedDelta)
+        views[root] = delta.apply_to(views[root])
+        base[plan.rel] = engine._bump_base(base[plan.rel], upd)
+        return views, base, indicators
+
+    # fivm / dbt
+    old_base = base.get(plan.rel)
+    ind_dense = {name: st.dense for name, st in indicators.items()}
+    if plan.kind == "factorized":
+        res = run_factorized_ops(plan.ops, views, query, upd, ind_dense)
+    else:
+        res = run_coo_ops(plan.ops, views, query, upd, ind_dense, memo=memo)
+    views.update(res.updated)
+    if plan.write_base:
+        base[plan.rel] = engine._bump_base(base[plan.rel], upd)
+    if plan.ind_ops:
+        run_indicator_ops(plan.ind_ops, views, indicators, query, upd,
+                          old_base)
+    return views, base, indicators
+
+
+# ---------------------------------------------------------------------------
+# Delta-construction helpers (shared with the eager wrappers in delta.py)
+# ---------------------------------------------------------------------------
+def densified_delta(query: Query, rel: str, upd: COOUpdate) -> BatchedDelta:
+    """Scatter the COO batch into a dense delta relation over the update
+    schema, carried as a BatchedDelta with batch=1 and no COO vars."""
+    ring = query.ring
+    doms = tuple(query.domains[v] for v in upd.schema)
+    dense = DenseRelation.from_coo(upd.schema, ring, doms, upd.keys,
+                                   upd.payload)
+    payload = {c: dense.payload[c][None] for c in ring.components}
+    return BatchedDelta(
+        coo_schema=(),
+        dense_schema=tuple(upd.schema),
+        keys=jnp.zeros((1, 0), jnp.int32),
+        ring=ring,
+        payload=payload,
+        dense_domains=doms,
+    )
+
+
+def densify_update_to_coo(query: Query, upd: FactorizedUpdate) -> COOUpdate:
+    """1-IVM takes the full (densified) delta — that is the point of the
+    comparison in Sec. 8.3."""
+    ring = query.ring
+    dense = upd.densify(ring)
+    b = int(np.prod([dense.domain_of(v) for v in dense.schema]))
+    doms = [dense.domain_of(v) for v in dense.schema]
+    grids = np.meshgrid(*[np.arange(d) for d in doms], indexing="ij")
+    keys = jnp.asarray(np.stack([g.ravel() for g in grids],
+                                axis=1).astype(np.int32))
+    payload = {
+        c: dense.payload[c].reshape((b, *ring.components[c]))
+        for c in ring.components
+    }
+    return COOUpdate(dense.schema, keys, payload)
+
+
+def lift_or_none(query: Query, var: str):
+    """None for identity lifts: g(x)=1 multiplies by ring one, so the
+    marginalization is a plain sum — skipping the gather+einsum halves the
+    op count of unlifted variables (most join variables)."""
+    if query.lift_spec(var) == ("one",):
+        return None
+    return query.lift_rel(var)
+
+
+def absorb_factor(factors: list, view, ring) -> None:
+    """Join a materialized sibling view into the factor list.  Factors
+    whose variables intersect the view's schema merge first; disjoint
+    factors stay independent (this is what preserves the factorized
+    complexity).  Sparse siblings materialize first (the planner keeps
+    factor-joined views dense)."""
+    from .contraction import contract_dense
+
+    if not isinstance(view, DenseRelation):
+        view = view.to_dense()
+    touching = [f for f in factors if set(f.schema) & set(view.schema)]
+    if not touching:
+        factors.append(view)  # cartesian sibling: keep as its own factor
+        return
+    for f in touching:
+        factors.remove(f)
+    acc = touching[0]
+    for f in touching[1:]:
+        acc = contract_dense(acc, f, marg=())
+    acc = contract_dense(acc, view, marg=())
+    factors.append(acc)
+
+
+def marginalize_factor(factors: list, var: str, query: Query) -> None:
+    from .contraction import contract_dense
+
+    for i, f in enumerate(factors):
+        if var in f.schema:
+            factors[i] = contract_dense(f, query.lift_rel(var), marg=(var,))
+            return
+    raise KeyError(f"variable {var} not found in any factor")
+
+
+def apply_factorized(view, factors: list, ring):
+    """view ⊎ (⊗ factors): outer-product accumulate.  Cost is the size of
+    the materialized view (O(p²) for matrix views), not of any larger
+    product.  Scalar factors (fully-marginalized groups, e.g. ⊕_E δS_E in
+    Example 5.2) scale the product.  A sparse view absorbs the product by
+    *per-factor active-key enumeration* + slot scatter — the key grid never
+    materializes over the full domain (eager path only; the active sets
+    are read host-side)."""
+    from .contraction import contract_dense
+
+    covered = {v for f in factors for v in f.schema}
+    assert covered == set(view.schema), (covered, view.schema)
+    if not isinstance(view, DenseRelation):
+        return apply_factorized_sparse(view, factors, ring)
+    acc = factors[0]
+    for f in factors[1:]:
+        acc = contract_dense(acc, f, marg=())
+    acc = acc.transpose(view.schema)
+    return view.add(acc)
+
+
+def apply_factorized_sparse(view, factors: list, ring):
+    """Lower a FactorizedUpdate onto a hashed-COO view without densifying:
+    enumerate each keyed factor's *active* (non-ring-zero) keys host-side,
+    form the cartesian product of active rows, compute each row's payload
+    as the ordered ring product of its factor values (the same multiply
+    order as the dense outer product — bit-identical), and slot-scatter.
+    Inserts ∏ active_i keys instead of the full domain product."""
+    keyed = [f for f in factors if f.schema]
+    actives = []
+    for f in keyed:
+        nz = np.argwhere(np.asarray(ring.is_zero(f.payload)) == False)  # noqa: E712
+        if nz.shape[0] == 0:
+            return view  # a ring-zero factor annihilates the product
+        actives.append(nz.astype(np.int32))
+    counts = [a.shape[0] for a in actives]
+    B = 1
+    for c in counts:
+        B *= c
+    grids = (np.meshgrid(*[np.arange(c) for c in counts], indexing="ij")
+             if counts else [])
+    rows = [jnp.asarray(g.ravel().astype(np.int32)) for g in grids]
+    # per-row payload: multiply factor values in factor-list order (the
+    # order the dense path's contract_dense chain uses)
+    payload = None
+    ki = 0
+    for f in factors:
+        if f.schema:
+            idx = tuple(jnp.asarray(actives[ki][:, j])[rows[ki]]
+                        for j in range(len(f.schema)))
+            vals = {c: f.payload[c][idx] for c in ring.components}
+            ki += 1
+        else:
+            vals = {c: jnp.broadcast_to(
+                f.payload[c], (max(B, 1), *ring.components[c]))
+                for c in ring.components}
+        payload = vals if payload is None else ring.mul(payload, vals)
+    # assemble key columns in the view's schema order
+    cols = []
+    for v in view.schema:
+        for ki2, f in enumerate(keyed):
+            if v in f.schema:
+                j = f.schema.index(v)
+                cols.append(jnp.asarray(actives[ki2][:, j])[rows[ki2]])
+                break
+    keys = jnp.stack(cols, axis=1) if cols else jnp.zeros((B, 0), jnp.int32)
+    return view.scatter_add(keys, payload)
+
+
+# ---------------------------------------------------------------------------
+# Write-set → state-leaf mask (the switch-mode mutable/const partition)
+# ---------------------------------------------------------------------------
+def state_write_mask(state, write_views, write_base,
+                     write_indicators) -> tuple:
+    """Per-state-leaf mask (tree_flatten order): True iff the leaf belongs
+    to an entry some plan's write-set names.  Replaces the old
+    identity-diffing of representative trigger applications — the plan
+    *is* the authority on what a trigger replaces."""
+    views, base, indicators = state
+    mask_tree = (
+        {n: jax.tree.map(lambda _: n in write_views, v)
+         for n, v in views.items()},
+        {n: jax.tree.map(lambda _: n in write_base, v)
+         for n, v in base.items()},
+        {n: jax.tree.map(lambda _: n in write_indicators, v)
+         for n, v in indicators.items()},
+    )
+    return tuple(jax.tree_util.tree_leaves(mask_tree))
+
+
+# ---------------------------------------------------------------------------
+# Plan-level CSE across a fused stream step
+# ---------------------------------------------------------------------------
+def shared_prep_ops(plans: Sequence[TriggerPlan]) -> tuple:
+    """Sibling-view prepare steps shared by ≥ 2 plans of one fused stream
+    step whose source view no plan in the step writes: their gather planes
+    / densified forms are loop-computed once per step instead of once per
+    position (the common gather/lift prefix of sibling triggers)."""
+    # only fivm/dbt COO plans read carried views in their gather ops —
+    # first_order/reeval plans gather from trigger-internal recomputed
+    # stores, which never ride the carry
+    plans = [p for p in plans if p.kind == "coo"]
+    write_union: set[str] = set()
+    for p in plans:
+        write_union |= set(p.write_views)
+    counts: dict = {}
+    for p in plans:
+        seen = set()
+        for op in p.ops:
+            key = None
+            if isinstance(op, Gather) and not op.view.startswith(IND_PREFIX):
+                key = ("plane", op.view)
+            elif isinstance(op, JoinContract) and op.densifies \
+                    and not op.view.startswith(IND_PREFIX):
+                key = ("dense", op.view)
+            if key is not None and key not in seen:
+                seen.add(key)
+                counts[key] = counts.get(key, 0) + 1
+    return tuple(sorted(k for k, n in counts.items()
+                        if n >= 2 and k[1] not in write_union))
+
+
+def build_prep_memo(shared: tuple, views: Mapping) -> dict:
+    """Materialize the shared prepare steps against the current state."""
+    from . import storage
+
+    memo: dict = {}
+    for form, name in shared:
+        v = views[name]
+        if form == "plane":
+            if isinstance(v, storage.SparseRelation):
+                memo[(form, name)] = v.gather_plane()
+            else:
+                memo[(form, name)] = storage.flatten_payload(
+                    v.ring, v.payload, v.domains)
+        else:  # "dense"
+            memo[(form, name)] = storage.as_dense(v)
+    return memo

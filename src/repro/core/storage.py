@@ -618,9 +618,12 @@ def plan_storage(
     overrides = dict(overrides or {})
     hostile: set[str] = set()
     if tree is not None and mode == "auto":
-        from .materialize import gather_scatter_profile
+        # the eligibility walk is the trigger-plan compiler's symbolic path
+        # analysis (DESIGN.md §8): storage class, densify cost, and scatter
+        # backend are decided against one model
+        from .plan import storage_hostility
 
-        hostile = gather_scatter_profile(tree, updatable)
+        hostile = storage_hostility(tree, updatable)
     plan: dict[str, StorageSpec] = {}
     for name, v in views.items():
         kind = overrides.get(name)

@@ -33,9 +33,19 @@ compiles an *entire multi-relation stream* into a single program:
        yields a fresh copy of everything it returns), so the state is
        partitioned into the leaves some trigger actually replaces (threaded
        through the carry and the switch) and the provably-constant rest
-       (passed as a non-donated loop invariant).  The partition is computed
-       by identity-diffing one representative trigger application per
-       relation.
+       (passed as a non-donated loop invariant).  The partition derives
+       from the embedded trigger plans' write-sets
+       (``plan.state_write_mask``) — the plan is the authority on what a
+       trigger replaces.
+
+Since the trigger-plan refactor (DESIGN.md §8) every dispatch mode is
+generated from the same compiled :class:`repro.core.plan.TriggerPlan`
+objects the eager path executes: ``prepare_stream`` fetches one plan per
+schedule position from the engine's plan cache and embeds them in the
+:class:`PreparedStream`; ``_build`` replays those plans inside the scan /
+rounds / switch bodies.  Rounds bodies additionally apply plan-level CSE:
+sibling gather planes shared by several positions' plans (and written by
+none) are computed once per step (``plan.shared_prep_ops``).
 
 Every trigger body emits the canonical state signature
 (``ivm.canonical_state``), which is what lets one scan carry serve all
@@ -48,7 +58,11 @@ Mixed view storage threads through unchanged: a hashed-COO
 ``SparseRelation`` (repro.core.storage) is a registered pytree whose table
 and payload plane ride in the carry next to dense views — its capacity is
 part of the (static) state signature, so sparse tables never grow inside a
-compiled stream; size them via the storage planner's headroom.
+compiled stream.  A raw stream whose worst-case insert budget would cross
+the load-factor bound mid-run is split into **segments**: between segments
+the affected tables rehash to a larger capacity and the remainder is
+re-prepared (plans recompile against the new storage layout) instead of
+silently dropping rows.
 """
 from __future__ import annotations
 
@@ -59,6 +73,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import plan as plan_mod
+from . import storage as storage_mod
 from .ivm import IVMEngine, canonical_state
 from .relations import COOUpdate
 
@@ -81,12 +97,27 @@ class PreparedStream:
     n_tuples: int  # true (unpadded) tuple count across the stream
     tail: Any = ()  # per-position (keys, payload) of the trailing partial round
     tail_len: int = 0
+    #: embedded trigger plans: per pattern position (scan/rounds) or per
+    #: rel_order entry (switch) — the same compiled plans the eager path
+    #: executes, fetched from the engine's plan cache at prepare time
+    plans: tuple = ()
+    #: storage layout the plans were compiled against
+    #: (``plan.storage_signature`` of the engine views at prepare time)
+    storage_sig: tuple = ()
+    #: scatter-backend override active at prepare time (plans bake the
+    #: resolved backends in)
+    backend_sig: str | None = None
 
     @property
     def signature(self):
-        """Compilation cache key: everything the traced program depends on."""
+        """Compilation cache key: everything the traced program depends on.
+        Includes the storage layout and the scatter-backend override — a
+        stream prepared after a rehash (or under a different
+        ``use_backend`` scope) embeds plans compiled for that layout /
+        backend and must not replay a program built around another."""
         return (self.mode, self.rel_order, self.schemas, self.pattern,
-                self.n_steps, self.buckets, self.tail_len)
+                self.n_steps, self.buckets, self.tail_len, self.storage_sig,
+                self.backend_sig)
 
 
 def _schedule_period(sched: Sequence[str]) -> int | None:
@@ -113,7 +144,10 @@ def _schedule_period(sched: Sequence[str]) -> int | None:
 def prepare_stream(
     engine: IVMEngine, stream: Sequence[tuple[str, COOUpdate]]
 ) -> PreparedStream:
-    """Bucket, pad, and stack a ``[(rel, COOUpdate), ...]`` stream."""
+    """Bucket, pad, and stack a ``[(rel, COOUpdate), ...]`` stream, and
+    fetch the trigger plan of every schedule position from the engine's
+    plan cache (compiled once per (relation, schema, bucket, storage
+    layout); replayed streams hit the cache)."""
     assert stream, "empty update stream"
     ring = engine.query.ring
     sched = [rel for rel, _ in stream]
@@ -128,6 +162,12 @@ def prepare_stream(
             f"inconsistent update schemas for {rel}")
     n_tuples = sum(upd.batch for _, upd in stream)
     comp_names = tuple(ring.components)
+    storage_sig = plan_mod.storage_signature(engine.views)
+    backend_sig = plan_mod.active_backend_override()
+
+    def plan_for(rel: str, bucket: int):
+        return engine.plans.lookup_sig(
+            engine, rel, ("coo", schemas[rel], bucket))
 
     def stack(upds: list[COOUpdate], bucket: int):
         padded = [u.pad_to(ring, bucket) for u in upds]
@@ -165,6 +205,9 @@ def prepare_stream(
             n_tuples=n_tuples,
             tail=tail,
             tail_len=tail_len,
+            plans=tuple(plan_for(r, b) for r, b in zip(pattern, buckets)),
+            storage_sig=storage_sig,
+            backend_sig=backend_sig,
         )
 
     # aperiodic: uniform bucket + key width, switch over the schedule
@@ -188,6 +231,9 @@ def prepare_stream(
         n_steps=len(stream),
         buckets=(bucket,),
         n_tuples=n_tuples,
+        plans=tuple(plan_for(r, bucket) for r in rel_order),
+        storage_sig=storage_sig,
+        backend_sig=backend_sig,
     )
 
 
@@ -201,70 +247,67 @@ class StreamExecutor:
     def __init__(self, engine: IVMEngine):
         self.engine = engine
         self._compiled: dict[Any, Any] = {}
-        self._masks: dict[tuple[str, ...], tuple[bool, ...]] = {}
+        #: shared prep-op keys of the last rounds build (CSE telemetry)
+        self.last_shared_ops: tuple = ()
 
     # ------------------------------------------------------- mutable leaves
     def _mutable_mask(self, prepared: PreparedStream) -> tuple[bool, ...]:
-        """Per-state-leaf mask: True iff some relation's trigger replaces
-        the leaf.  Computed by identity-diffing one eager trigger
-        application per relation — ``functional_update`` passes untouched
-        leaves through by object identity, so ``a is b`` is exact.  The
-        touched set depends only on the view-tree paths, not on update
-        values, so one representative update per relation suffices."""
-        key = prepared.rel_order
-        if key in self._masks:
-            return self._masks[key]
-        engine = self.engine
-        state = engine.state
-        in_leaves, _ = jax.tree_util.tree_flatten(state)
-        mask = [False] * len(in_leaves)
-        ring = engine.query.ring
-        for rel, sch in zip(prepared.rel_order, prepared.schemas):
-            upd = COOUpdate(
-                sch,
-                jnp.zeros((1, len(sch)), jnp.int32),
-                {c: jnp.zeros((1, *shp), ring.dtype)
-                 for c, shp in ring.components.items()},
-            )
-            out = engine.functional_update(*state, rel, upd)
-            out_leaves = jax.tree_util.tree_leaves(out)
-            assert len(out_leaves) == len(in_leaves)
-            for i, (a, b) in enumerate(zip(in_leaves, out_leaves)):
-                if a is not b:
-                    mask[i] = True
-        self._masks[key] = tuple(mask)
-        return self._masks[key]
+        """Per-state-leaf mask: True iff some embedded plan's write-set
+        names the leaf's state entry.  Derived straight from the trigger
+        plans (one compiler feeds eager, per-call, and fused execution), so
+        the switch partition can never drift from what triggers write."""
+        wv: set[str] = set()
+        wb: set[str] = set()
+        wi: set[str] = set()
+        for p in prepared.plans:
+            v, b, i = p.write_sets()
+            wv |= set(v)
+            wb |= set(b)
+            wi |= set(i)
+        return plan_mod.state_write_mask(self.engine.state, wv, wb, wi)
 
     # ---------------------------------------------------------------- build
     def _build(self, prepared: PreparedStream):
         engine = self.engine
-        bodies = {rel: engine.trigger_body(rel) for rel in prepared.rel_order}
         schema_of = dict(zip(prepared.rel_order, prepared.schemas))
 
         if prepared.mode in ("scan", "rounds"):
             pattern = prepared.pattern
             tail_pattern = pattern[:prepared.tail_len]
+            bodies = [engine.trigger_body(rel, plan)
+                      for rel, plan in zip(pattern, prepared.plans)]
+            # plan-level CSE: sibling prepare steps shared by ≥ 2 positions
+            # (and written by none) compute once per round, not per position
+            shared = (plan_mod.shared_prep_ops(prepared.plans)
+                      if prepared.mode == "rounds" else ())
+            self.last_shared_ops = shared
 
             def step(state, x):
                 cols = (x,) if prepared.mode == "scan" else x
-                for rel, (keys, payload) in zip(pattern, cols):
-                    state = bodies[rel](
-                        state, COOUpdate(schema_of[rel], keys, payload))
+                memo = (plan_mod.build_prep_memo(shared, state[0])
+                        if shared else None)
+                for rel, body, (keys, payload) in zip(pattern, bodies, cols):
+                    state = body(state,
+                                 COOUpdate(schema_of[rel], keys, payload),
+                                 memo)
                 return state, None
 
             def run_stream(state, xs, tail):
                 state = canonical_state(state)
                 state, _ = jax.lax.scan(step, state, xs)
                 # trailing partial round of a near-periodic schedule
-                for rel, (keys, payload) in zip(tail_pattern, tail):
-                    state = bodies[rel](
-                        state, COOUpdate(schema_of[rel], keys, payload))
+                for rel, body, (keys, payload) in zip(tail_pattern, bodies,
+                                                      tail):
+                    state = body(state,
+                                 COOUpdate(schema_of[rel], keys, payload))
                 return state
 
             return jax.jit(run_stream, donate_argnums=(0,)), None
 
-        # switch mode: thread only trigger-replaced leaves through the
+        # switch mode: thread only plan-written leaves through the
         # carry/branches; pass the constant rest as a loop invariant
+        bodies = {rel: engine.trigger_body(rel, plan)
+                  for rel, plan in zip(prepared.rel_order, prepared.plans)}
         mask = self._mutable_mask(prepared)
         treedef = jax.tree_util.tree_structure(engine.state)
         mut_idx = [i for i, m in enumerate(mask) if m]
@@ -323,6 +366,67 @@ class StreamExecutor:
             entry = self._compiled[prepared.signature] = self._build(prepared)
         return entry[0]
 
+    # ------------------------------------------------- capacity segmentation
+    def _capacity_segments(self, stream):
+        """Split a raw stream so no sparse view's worst-case insert budget
+        crosses the load-factor bound inside one prepared segment.
+
+        Returns ``[(sub_stream, grow_caps), ...]``: ``grow_caps`` maps view
+        names to the capacity they must rehash to *before* the segment
+        runs.  Budgets are worst-case (B × unbound-domain product, as in
+        the eager growth path) and occupancy is tracked conservatively, so
+        a compiled segment can never overflow-drop; capacities stop
+        growing at the domain product (such a table cannot overflow)."""
+        engine = self.engine
+        caps: dict[str, int] = {}
+        occ: dict[str, int] = {}
+        full: dict[str, int] = {}
+        for name, v in engine.views.items():
+            if isinstance(v, storage_mod.SparseRelation):
+                caps[name] = v.capacity
+                occ[name] = v.num_slots_used_sync()
+                full[name] = storage_mod.next_pow2(
+                    storage_mod.comp_width(v.domains))
+        if not caps:
+            return [(list(stream), {})]
+        touched: dict[str, list[str]] = {}
+        for rel in {r for r, _ in stream}:
+            wv, _, _ = engine.plans.write_sets(engine, rel)
+            touched[rel] = [n for n in wv if n in caps]
+
+        def budget(name: str, rel: str, upd: COOUpdate) -> int:
+            # the eager growth path's worst-case model, clamped to the
+            # domain product (there are never more distinct keys)
+            v = engine.views[name]
+            return min(engine._insert_budget(v, rel, upd),
+                       storage_mod.comp_width(v.domains))
+
+        segments: list = []
+        cur: list = []
+        grow: dict[str, int] = {}
+        for rel, upd in stream:
+            need: dict[str, int] = {}
+            for name in touched[rel]:
+                b = budget(name, rel, upd)
+                c = caps[name]
+                while (c < full[name]
+                       and occ[name] + b > storage_mod.LOAD_FACTOR * c):
+                    c *= 2
+                if c != caps[name]:
+                    need[name] = c
+            if need and cur:
+                segments.append((cur, grow))
+                cur, grow = [], {}
+            if need:
+                grow.update(need)
+                caps.update(need)
+            cur.append((rel, upd))
+            for name in touched[rel]:
+                occ[name] = min(occ[name] + budget(name, rel, upd),
+                                full[name])
+        segments.append((cur, grow))
+        return segments
+
     # ------------------------------------------------------------------ run
     def run(self, stream_or_prepared, state=None, update_engine: bool = True,
             donate_input: bool = False):
@@ -331,10 +435,32 @@ class StreamExecutor:
         Unless ``donate_input=True``, the input state is copied before the
         call: the compiled program donates its state argument, and both the
         engine's state and states derived from it can alias the caller's
-        database buffers (materialized leaf views alias the database)."""
+        database buffers (materialized leaf views alias the database).
+
+        A *raw* stream run against the engine's own state (``state=None``)
+        is first split into capacity segments (see
+        :meth:`_capacity_segments`): sparse tables that would cross the
+        load-factor bound mid-stream rehash to a larger capacity between
+        segments and the remainder re-prepares (the plan cache recompiles
+        for the new storage layout).  With ``update_engine=False`` the
+        engine is restored afterwards and only the returned state carries
+        the grown tables.  Prepared streams and explicit-state runs keep
+        the caller's sizing."""
         prepared = stream_or_prepared
         if not isinstance(prepared, PreparedStream):
-            prepared = prepare_stream(self.engine, prepared)
+            stream = list(prepared)
+            if state is None:
+                assert update_engine or not donate_input, (
+                    "donating the engine's own state without updating the "
+                    "engine would leave it pointing at deleted buffers")
+                segments = self._capacity_segments(stream)
+                if len(segments) > 1 or segments[0][1]:
+                    saved = None if update_engine else self.engine.state
+                    new_state = self._run_segmented(segments)
+                    if saved is not None:
+                        self.engine.set_state(saved)
+                    return new_state
+            prepared = prepare_stream(self.engine, stream)
         if state is None:
             assert update_engine or not donate_input, (
                 "donating the engine's own state without updating the engine "
@@ -347,3 +473,19 @@ class StreamExecutor:
         if update_engine:
             self.engine.set_state(new_state)
         return new_state
+
+    def _run_segmented(self, segments):
+        """Run capacity segments in order, rehashing the named sparse views
+        (which also compacts ring-zero zombies) before each segment."""
+        engine = self.engine
+        state = None
+        for sub_stream, grow_caps in segments:
+            if grow_caps:
+                engine.views = {
+                    name: (v.rehash(grow_caps[name]) if name in grow_caps
+                           else v)
+                    for name, v in engine.views.items()
+                }
+            prepared = prepare_stream(engine, sub_stream)
+            state = self.run(prepared, update_engine=True)
+        return state

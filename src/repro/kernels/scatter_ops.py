@@ -83,6 +83,14 @@ def use_backend(backend: str | None):
         _override = prev
 
 
+def active_override() -> str | None:
+    """The currently forced backend (``use_backend`` scope / ``set_backend``
+    / env var), or None when resolution is the cost heuristic.  Part of the
+    trigger-plan cache key (``repro.core.plan``): plans bake their resolved
+    scatter backends in, so an override change must recompile them."""
+    return _override or os.environ.get(ENV_VAR)
+
+
 def resolve_backend(num_segments: int, batch: int, width: int,
                     backend: str | None = None) -> str:
     """Explicit arg > ``use_backend`` override > env var > cost heuristic."""

@@ -1,0 +1,390 @@
+"""Trigger-plan IR (DESIGN.md §8): golden plans, cache behavior, and the
+plan-only execution paths.
+
+* **Golden plans** — compiled plans for the three apps (regression
+  cofactor, matrix chain, conjunctive) pinned in their stable text form:
+  any change to op emission, storage/backend annotation, densify decision,
+  or write-set derivation shows up as a golden diff.
+* **Plan-cache hit counter** — a second ``apply_update`` with the same
+  update signature compiles nothing.
+* **Sparse factorized lowering** — FactorizedUpdate onto a hashed-COO view
+  via per-factor active-key enumeration + slot scatter, bit-identical to
+  the dense oracle and never touching the full key grid.
+* **Segment growth** — a raw stream whose worst-case insert budget crosses
+  the 0.7 load factor mid-run splits into segments, rehashes between them,
+  and recompiles (plans are keyed on the storage layout).
+* **Plan-level CSE** — a fused rounds step computes sibling gather planes
+  shared across positions (and written by none) once per step.
+"""
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (COOUpdate, DenseRelation, IVMEngine, Query,
+                        SparseRelation, StreamExecutor, chain,
+                        prepare_stream, sum_ring)
+from repro.core import plan as plan_mod
+from repro.core.apps import conjunctive, matrix_chain, regression
+
+
+@pytest.fixture
+def plain_env(monkeypatch):
+    """Golden plans bake storage kinds and resolved scatter backends in;
+    pin the environment the goldens were generated under (CPU auto
+    resolution, auto storage) so the matrix CI legs that force sparse
+    storage / kernel backends still compare against one text.  Scoped to
+    the golden tests only — every other test in this file must run under
+    whatever lowering the CI matrix forces."""
+    monkeypatch.delenv("REPRO_VIEW_STORAGE", raising=False)
+    monkeypatch.delenv("REPRO_SCATTER_BACKEND", raising=False)
+
+
+# ---------------------------------------------------------------------------
+# golden plans
+# ---------------------------------------------------------------------------
+def _regression_engine():
+    rng = np.random.default_rng(0)
+    rels = {"R": ("A", "B"), "S": ("A", "C")}
+    doms = dict(A=3, B=4, C=5)
+    mult = {n: jnp.asarray(rng.integers(0, 2, size=tuple(doms[v] for v in sch))
+                           .astype(np.float32))
+            for n, sch in rels.items()}
+    return regression.build_cofactor_engine(
+        rels, doms, mult, var_order=chain(["A"], {"A": [["B"], ["C"]]}))
+
+
+GOLDEN_REGRESSION_R = """\
+trigger R kind=coo strategy=fivm schema=[A,B] batch=4 densify=no cost=12
+  Leaf rows[A,B; B=4]
+  Emit[R]
+  Lift[B degree.1]
+  Marg[B coo]
+  Emit[V0@B]
+  Scatter[V0@B dense jnp]
+  Gather[V1@C dense]
+  Lift[A degree.0]
+  Marg[A coo] collapse !force
+  Emit[V2@A]
+  Scatter[V2@A dense]
+  writes: views=[V0@B,V2@A] base=[] indicators=[]"""
+
+GOLDEN_REGRESSION_S = """\
+trigger S kind=coo strategy=fivm schema=[A,C] batch=1 densify=no cost=3
+  Leaf rows[A,C; B=1]
+  Emit[S]
+  Lift[C degree.2]
+  Marg[C coo]
+  Emit[V1@C]
+  Scatter[V1@C dense jnp]
+  Gather[V0@B dense]
+  Lift[A degree.0]
+  Marg[A coo]
+  Emit[V2@A]
+  Scatter[V2@A dense]
+  writes: views=[V1@C,V2@A] base=[] indicators=[]"""
+
+GOLDEN_CHAIN_A2 = """\
+trigger A2 kind=factorized strategy=fivm schema=[X2,X3] batch=- densify=no cost=0
+  Leaf factors[X2,X3]
+  Emit[A2]
+  Scatter[A2 dense]
+  Join[A3 dense]
+  Lift[X3 one]
+  Marg[X3 factor]
+  Emit[V0@X3]
+  Scatter[V0@X3 dense]
+  Join[A1 dense]
+  Lift[X2 one]
+  Marg[X2 factor]
+  Emit[V3@X1]
+  Scatter[V3@X1 dense]
+  writes: views=[A2,V0@X3,V3@X1] base=[] indicators=[]"""
+
+GOLDEN_CONJUNCTIVE_R = """\
+trigger R kind=coo strategy=fivm schema=[A,B] batch=2 densify=no cost=6
+  Leaf rows[A,B; B=2]
+  Emit[R]
+  Scatter[R dense jnp]
+  Gather[V0@C dense]
+  Scatter[W:V1@B dense jnp fused]
+  Marg[B coo]
+  Emit[V1@B]
+  Scatter[W:V2@A dense jnp fused]
+  Marg[A coo] collapse !force
+  Emit[V2@A]
+  Scatter[V2@A dense]
+  writes: views=[R,V2@A,W:V1@B,W:V2@A] base=[] indicators=[]"""
+
+
+def test_golden_plan_regression_cofactor(plain_env):
+    eng = _regression_engine()
+    assert eng.plans.lookup_sig(
+        eng, "R", ("coo", ("A", "B"), 4)).pretty() == GOLDEN_REGRESSION_R
+    assert eng.plans.lookup_sig(
+        eng, "S", ("coo", ("A", "C"), 1)).pretty() == GOLDEN_REGRESSION_S
+
+
+def test_golden_plan_matrix_chain_factorized(plain_env):
+    rng = np.random.default_rng(0)
+    mats = [jnp.asarray(rng.random((4, 3)).astype(np.float32)),
+            jnp.asarray(rng.random((3, 5)).astype(np.float32)),
+            jnp.asarray(rng.random((5, 2)).astype(np.float32))]
+    eng = matrix_chain.build_chain_engine(mats)
+    assert eng.plans.lookup_sig(
+        eng, "A2", ("factorized", ("X2", "X3"))).pretty() == GOLDEN_CHAIN_A2
+
+
+def test_golden_plan_conjunctive_factorized_representation(plain_env):
+    rng = np.random.default_rng(0)
+    rels = {"R": ("A", "B"), "S": ("B", "C")}
+    doms = dict(A=3, B=3, C=3)
+    mult = {n: rng.integers(0, 2, size=tuple(doms[v] for v in sch))
+            .astype(np.float32) for n, sch in rels.items()}
+    eng, _ = conjunctive.make_factorized_engine(
+        rels, mult, chain(["A", "B", "C"]), doms)
+    assert eng.plans.lookup_sig(
+        eng, "R", ("coo", ("A", "B"), 2)).pretty() == GOLDEN_CONJUNCTIVE_R
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+def test_plan_cache_second_update_compiles_nothing():
+    eng = _regression_engine()
+    ring = eng.query.ring
+
+    def upd(b):
+        keys = np.stack([np.arange(b) % 3, np.arange(b) % 4], 1)
+        payload = {**ring.zeros((b,)),
+                   "c": jnp.asarray(np.ones(b, np.float32))}
+        return COOUpdate(("A", "B"), jnp.asarray(keys.astype(np.int32)),
+                         payload)
+
+    eng.apply_update("R", upd(4))
+    misses = eng.plans.misses
+    assert misses >= 1 and eng.plans.plans
+    eng.apply_update("R", upd(4))  # same signature: pure cache hit
+    assert eng.plans.misses == misses
+    assert eng.plans.hits >= 1
+    eng.apply_update("R", upd(7))  # new batch size: one new plan
+    assert eng.plans.misses == misses + 1
+    stats = eng.plans.stats()
+    assert stats["plans"] == len(eng.plans.plans)
+    assert 0.0 <= stats["hit_rate"] <= 1.0
+    assert stats["compile_ms_total"] >= stats["compile_ms_per_plan"] >= 0.0
+
+
+def test_stream_prepare_embeds_cached_plans():
+    rng = np.random.default_rng(3)
+    q = Query(relations={"R": ("A", "B"), "S": ("A", "C")},
+              free_vars=("A",), ring=sum_ring(),
+              domains=dict(A=4, B=5, C=3),
+              lifts={"B": ("value",), "C": ("value",)})
+    vo = chain(["A"], {"A": [["B"], ["C"]]})
+
+    def rel(schema):
+        shape = tuple(dict(A=4, B=5, C=3)[v] for v in schema)
+        return DenseRelation(tuple(schema), q.ring, {"v": jnp.asarray(
+            rng.integers(0, 2, size=shape).astype(np.float32))})
+
+    eng = IVMEngine.build(q, {"R": rel("AB"), "S": rel("AC")}, var_order=vo)
+
+    def stream_of(schedule, b):
+        out = []
+        for r in schedule:
+            sch = q.relations[r]
+            keys = np.stack([rng.integers(0, eng.query.domains[v], size=b)
+                             for v in sch], 1).astype(np.int32)
+            out.append((r, COOUpdate(sch, jnp.asarray(keys),
+                                     {"v": jnp.asarray(
+                                         np.ones(b, np.float32))})))
+        return out
+
+    prepared = prepare_stream(eng, stream_of(["R", "S"] * 3, 4))
+    assert prepared.mode == "rounds" and len(prepared.plans) == 2
+    assert all(isinstance(p, plan_mod.TriggerPlan) for p in prepared.plans)
+    misses = eng.plans.misses
+    # a replayed same-shape stream fetches every plan from the cache
+    prepare_stream(eng, stream_of(["R", "S"] * 3, 4))
+    assert eng.plans.misses == misses
+    # the eager path and the fused path share the same compiled plans
+    rel_, upd = stream_of(["R"], 4)[0]
+    assert eng.trigger_plan(rel_, upd) is prepared.plans[0]
+
+
+def test_write_mask_matches_identity_diff():
+    """The plan-derived switch partition must mark every leaf a trigger
+    actually replaces (identity-diff of a representative application)."""
+    eng = _regression_engine()
+    ring = eng.query.ring
+    state = eng.state
+    in_leaves = jax.tree_util.tree_leaves(state)
+    keys = jnp.zeros((1, 2), jnp.int32)
+    payload = {**ring.zeros((1,)), "c": jnp.asarray(np.ones(1, np.float32))}
+    out = eng.functional_update(*state, "R", COOUpdate(("A", "B"), keys,
+                                                       payload))
+    out_leaves = jax.tree_util.tree_leaves(out)
+    wv, wb, wi = eng.plans.write_sets(eng, "R")
+    mask = plan_mod.state_write_mask(state, wv, wb, wi)
+    for i, (a, b) in enumerate(zip(in_leaves, out_leaves)):
+        if a is not b:
+            assert mask[i], f"leaf {i} replaced but not in the write mask"
+
+
+# ---------------------------------------------------------------------------
+# sparse factorized-update lowering (no densify)
+# ---------------------------------------------------------------------------
+def test_sparse_factorized_apply_bit_identical_and_sparse():
+    rng = np.random.default_rng(1)
+    ring = sum_ring()
+    keys = np.stack([rng.integers(0, 6, 8), rng.integers(0, 5, 8)],
+                    1).astype(np.int32)
+    dense = DenseRelation.from_coo(
+        ("X", "Y"), ring, (6, 5), jnp.asarray(keys),
+        {"v": jnp.asarray(rng.integers(-2, 3, 8).astype(np.float32))})
+    sparse = SparseRelation.from_dense(dense, capacity=64)
+    u = np.zeros(6, np.float32)
+    u[[1, 4]] = [2.0, -3.0]
+    v = np.zeros(5, np.float32)
+    v[[0, 2, 3]] = [1.0, 5.0, -1.0]
+    factors = [DenseRelation(("X",), ring, {"v": jnp.asarray(u)}),
+               DenseRelation((), ring, {"v": jnp.asarray(np.float32(2.5))}),
+               DenseRelation(("Y",), ring, {"v": jnp.asarray(v)})]
+    before = sparse.num_slots_used_sync()
+    got = plan_mod.apply_factorized(sparse, factors, ring)
+    ref = plan_mod.apply_factorized(dense, factors, ring)
+    np.testing.assert_array_equal(np.asarray(got.to_dense().payload["v"]),
+                                  np.asarray(ref.payload["v"]))
+    # per-factor active-key enumeration: at most 2×3 fresh keys, never the
+    # 30-key dense grid (the pre-refactor fallback enumerated the grid)
+    assert got.num_slots_used_sync() <= before + 2 * 3
+
+
+def test_sparse_chain_engine_rank1_updates_match_dense():
+    rng = np.random.default_rng(7)
+    mats = [jnp.asarray(rng.random((6, 5)).astype(np.float32)),
+            jnp.asarray(rng.random((5, 4)).astype(np.float32))]
+    eng_d = matrix_chain.build_chain_engine(mats, storage="dense")
+    eng_s = matrix_chain.build_chain_engine(mats, storage="sparse")
+    assert any(s.kind == "sparse" for s in eng_s.storage_plan.values())
+    ring = eng_d.query.ring
+    for k, p in ((1, 6), (2, 5)):
+        u = np.zeros(p, np.float32)
+        u[rng.integers(0, p)] = float(rng.integers(1, 4))
+        w = np.zeros(mats[k - 1].shape[1], np.float32)
+        w[rng.integers(0, w.size)] = float(rng.integers(1, 4))
+        upd = matrix_chain.rank1_update(k, jnp.asarray(u), jnp.asarray(w),
+                                        ring)
+        eng_d.apply_update(f"A{k}", upd)
+        eng_s.apply_update(f"A{k}", upd)
+    np.testing.assert_array_equal(
+        np.asarray(matrix_chain.result_matrix(eng_d)),
+        np.asarray(matrix_chain.result_matrix(eng_s)))
+
+
+def test_zero_factor_annihilates_without_inserts():
+    ring = sum_ring()
+    sparse = SparseRelation.zeros(("X", "Y"), ring, (8, 8), capacity=16)
+    factors = [DenseRelation(("X",), ring,
+                             {"v": jnp.zeros((8,), jnp.float32)}),
+               DenseRelation(("Y",), ring,
+                             {"v": jnp.ones((8,), jnp.float32)})]
+    out = plan_mod.apply_factorized(sparse, factors, ring)
+    assert out.num_slots_used_sync() == 0
+
+
+# ---------------------------------------------------------------------------
+# segment growth across a prepared stream
+# ---------------------------------------------------------------------------
+def test_stream_grows_sparse_tables_between_segments():
+    """A stream whose inserts cross the 0.7 load factor mid-run must split,
+    rehash between segments, recompile, and stay bit-identical to the
+    dense oracle (regression for the old silent-drop behavior)."""
+    rng = np.random.default_rng(5)
+    doms = dict(A=16, B=4, C=12, D=4)
+    q = Query(relations={"R": ("A", "B"), "S": ("A", "C"), "T": ("C", "D")},
+              free_vars=("A", "C"), ring=sum_ring(), domains=doms,
+              lifts={"B": ("value",), "D": ("value",)})
+    vo = chain(["A", "C"], {"A": [["B"]], "C": [["D"]]})
+
+    def rel(schema):
+        shape = tuple(doms[v] for v in schema)
+        mult = (rng.random(size=shape) < 0.03).astype(np.float32)
+        return DenseRelation(tuple(schema), q.ring,
+                             {"v": jnp.asarray(mult)})
+
+    db = {"R": rel("AB"), "S": rel("AC"), "T": rel("CD")}
+    stream = []
+    for _ in range(6):
+        b = 12
+        keys = np.stack([rng.integers(0, doms[v], size=b)
+                         for v in ("A", "C")], 1).astype(np.int32)
+        vals = rng.integers(1, 3, size=b).astype(np.float32)
+        stream.append(("S", COOUpdate(("A", "C"), jnp.asarray(keys),
+                                      {"v": jnp.asarray(vals)})))
+
+    opts = dict(storage="sparse", storage_opts=dict(headroom=1.0,
+                                                    min_capacity=8))
+    fused = IVMEngine.build(q, db, var_order=vo, **opts)
+    caps0 = {n: v.capacity for n, v in fused.views.items()
+             if isinstance(v, SparseRelation)}
+    ex = StreamExecutor(fused)
+    segments = ex._capacity_segments(stream)
+    assert len(segments) >= 2, "stream must cross the load factor mid-run"
+    ex.run(stream)
+    caps1 = {n: v.capacity for n, v in fused.views.items()
+             if isinstance(v, SparseRelation)}
+    assert any(caps1[n] > caps0[n] for n in caps0), (caps0, caps1)
+
+    oracle = IVMEngine.build(q, db, var_order=vo, storage="dense")
+    for r, u in stream:
+        oracle.apply_update(r, u)
+    np.testing.assert_array_equal(
+        np.asarray(fused.result().transpose(("A", "C")).payload["v"]),
+        np.asarray(oracle.result().transpose(("A", "C")).payload["v"]))
+
+
+# ---------------------------------------------------------------------------
+# plan-level CSE inside a fused rounds step
+# ---------------------------------------------------------------------------
+def test_rounds_step_shares_stream_constant_sibling_planes():
+    """R and S both gather the T-subtree view at the root join; T never
+    updates in the stream, so the plan-level CSE computes that plane once
+    per round instead of once per position — and results stay exact."""
+    rng = np.random.default_rng(9)
+    doms = dict(A=6, B=4, C=5, D=3)
+    q = Query(relations={"R": ("A", "B"), "S": ("A", "C"), "T": ("A", "D")},
+              free_vars=(), ring=sum_ring(), domains=doms,
+              lifts={"B": ("value",), "C": ("value",), "D": ("value",)})
+    vo = chain(["A"], {"A": [["B"], ["C"], ["D"]]})
+
+    def rel(schema):
+        shape = tuple(doms[v] for v in schema)
+        return DenseRelation(tuple(schema), q.ring, {"v": jnp.asarray(
+            rng.integers(0, 3, size=shape).astype(np.float32))})
+
+    db = {"R": rel("AB"), "S": rel("AC"), "T": rel("AD")}
+    stream = []
+    for r in ["R", "S"] * 3:
+        sch = q.relations[r]
+        keys = np.stack([rng.integers(0, doms[v], size=4)
+                         for v in sch], 1).astype(np.int32)
+        vals = rng.integers(-2, 3, size=4).astype(np.float32)
+        stream.append((r, COOUpdate(sch, jnp.asarray(keys),
+                                    {"v": jnp.asarray(vals)})))
+
+    fused = IVMEngine.build(q, db, var_order=vo)
+    ex = StreamExecutor(fused)
+    prepared = prepare_stream(fused, stream)
+    assert prepared.mode == "rounds"
+    ex.run(prepared)
+    # the T-subtree view is read by both plans and written by neither
+    assert ex.last_shared_ops, "expected a shared sibling prepare op"
+    assert all(name not in {"R", "S"} for _, name in ex.last_shared_ops)
+
+    seq = IVMEngine.build(q, db, var_order=vo)
+    for r, u in stream:
+        seq.apply_update(r, u)
+    np.testing.assert_array_equal(np.asarray(fused.result().payload["v"]),
+                                  np.asarray(seq.result().payload["v"]))
