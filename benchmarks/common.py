@@ -140,25 +140,31 @@ def synth_low_fill_db(relations, doms, ring, rng, wide_var: str,
 # ---------------------------------------------------------------------------
 # Timing + reporting
 # ---------------------------------------------------------------------------
-def run_engine_stream(engine, stream, fused: bool = True, repeats: int = 3):
+def run_engine_stream(engine, stream, fused: bool = True, repeats: int = 3,
+                      shard=None):
     """Apply a pre-built stream; returns (tuples/s, seconds).
 
     ``fused=True`` (default) compiles the whole stream into one XLA program
     via the stream executor (scan/switch dispatch, state donated through the
     scan carry).  ``fused=False`` dispatches one jitted trigger per batch
     from the host loop — kept as the measurement baseline and correctness
-    oracle.  The stream is replayed ``repeats`` times and the best pass is
-    reported (timed regions are short; best-of-N rejects scheduler noise).
+    oracle.  ``shard`` (a ``repro.core.shard.ShardPlan``) runs the fused
+    program SPMD over the plan's mesh, state placed per the plan.  The
+    stream is replayed ``repeats`` times and the best pass is reported
+    (timed regions are short; best-of-N rejects scheduler noise).
     """
     if fused:
-        return _run_fused(engine, stream, repeats)
+        return _run_fused(engine, stream, repeats, shard=shard)
+    assert shard is None, "per-call dispatch is single-placement"
     return _run_percall(engine, stream, repeats)
 
 
-def _run_fused(engine, stream, repeats: int):
+def _run_fused(engine, stream, repeats: int, shard=None):
     from repro.core import StreamExecutor, prepare_stream
 
-    ex = StreamExecutor(engine)
+    if shard is not None:
+        engine.shard_state(shard)
+    ex = StreamExecutor(engine, shard=shard)
     prepared = prepare_stream(engine, stream)
     # warmup: compile + absorb any first-call constant folding
     state = ex.run(prepared, update_engine=False)

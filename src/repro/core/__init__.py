@@ -4,7 +4,15 @@ from .delta import propagate_coo, propagate_factorized
 from .indicators import IndicatorState, add_indicators, gyo_residual, indicator_of, is_acyclic
 from .ivm import IVMEngine, canonical_state
 from .plan import PlanCache, TriggerPlan, compile_trigger, execute_trigger
-from .stream import PreparedStream, StreamExecutor, prepare_stream
+from .shard import ShardPlan, ShardSpec, make_mesh, plan_shards, shard_executor
+from .stream import (
+    PreparedStream,
+    StreamCapacityError,
+    StreamExecutor,
+    capacity_segments,
+    check_stream_capacity,
+    prepare_stream,
+)
 from .materialize import choose_materialized, gather_scatter_profile, views_on_path
 from .storage import (
     SparseRelation,
@@ -38,13 +46,16 @@ __all__ = [
     "FactorizedUpdate", "IVMEngine", "IndicatorState", "MatrixRing",
     "PlanCache", "PreparedStream", "PyDegreeMRing", "PyNumberRing",
     "PyRelation", "PyRelationalRing", "Query", "Ring", "ScalarRing",
-    "SparseRelation", "StorageSpec", "StreamExecutor", "TriggerPlan",
+    "ShardPlan", "ShardSpec", "SparseRelation", "StorageSpec",
+    "StreamCapacityError", "StreamExecutor", "TriggerPlan",
     "TupleRing", "VariableOrder", "VONode", "ViewNode", "ViewStorage",
     "add_indicators", "apply_storage_plan", "as_dense", "build_view_tree",
-    "canonical_state", "chain", "choose_materialized", "compile_trigger",
+    "canonical_state", "capacity_segments", "chain", "check_stream_capacity",
+    "choose_materialized", "compile_trigger",
     "contract_dense", "count_ring", "evaluate_view", "execute_trigger",
     "gather_scatter_profile", "gyo_residual", "heuristic_order",
     "indicator_of", "is_acyclic", "lift_relation", "make_base_relation",
-    "marginalize_dense", "plan_storage", "prepare_stream", "propagate_coo",
-    "propagate_factorized", "sum_ring", "view_nbytes", "views_on_path",
+    "make_mesh", "marginalize_dense", "plan_shards", "plan_storage",
+    "prepare_stream", "propagate_coo", "propagate_factorized",
+    "shard_executor", "sum_ring", "view_nbytes", "views_on_path",
 ]

@@ -293,6 +293,15 @@ class IVMEngine:
     def set_state(self, state) -> None:
         self.views, self.base, self.indicators = state
 
+    def shard_state(self, shard_plan) -> None:
+        """Place the canonical state under a :class:`repro.core.shard.
+        ShardPlan` — every leaf device_put to its planned NamedSharding
+        (sharded views split their key/slot axis across the mesh, the
+        rest replicate).  The sharded analogue of :meth:`canonical_state`:
+        triggers and the stream executor run on the placed state
+        unchanged, with GSPMD inserting the plan's collectives."""
+        self.set_state(shard_plan.place(self.canonical_state()))
+
     def functional_update(self, views, base, indicators, rel: str, upd,
                           plan: plan_mod.TriggerPlan | None = None,
                           memo=None):

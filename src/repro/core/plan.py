@@ -249,6 +249,19 @@ class TriggerPlan:
     def write_sets(self):
         return self.write_views, self.write_base, self.write_indicators
 
+    def read_views(self) -> frozenset:
+        """View names this plan reads *by key* through sibling
+        Gather/JoinContract ops (indicator dense planes keep their
+        ``∃`` prefix).  These are the cross-shard read sites of the
+        multi-device placement pass (:func:`collective_placement`): a
+        gather at arbitrary delta keys must see the view's whole key
+        axis, so reading a sharded view lowers to a collective."""
+        out = set()
+        for op in self.ops + self.ind_ops:
+            if isinstance(op, (Gather, JoinContract)):
+                out.add(op.view)
+        return frozenset(out)
+
     def pretty(self) -> str:
         """Stable text form (golden-plan tests pin this)."""
         b = "-" if self.batch is None else str(self.batch)
@@ -1240,6 +1253,51 @@ def state_write_mask(state, write_views, write_base,
          for n, v in indicators.items()},
     )
     return tuple(jax.tree_util.tree_leaves(mask_tree))
+
+
+# ---------------------------------------------------------------------------
+# Collective placement (the multi-device sharding pass, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def read_sets(plans: Sequence[TriggerPlan]) -> frozenset:
+    """Union of :meth:`TriggerPlan.read_views` across plans."""
+    out: set = set()
+    for p in plans:
+        out |= p.read_views()
+    return frozenset(out)
+
+
+def collective_placement(plans: Sequence[TriggerPlan],
+                         shardable) -> dict:
+    """Decide, per view named by any plan, how it participates in a
+    sharded carry — the plan-time collective pass consumed by
+    ``repro.core.shard.plan_shards``.
+
+    ``shardable`` maps view names to whether their storage layout *can*
+    split along its key/slot axis (leading extent divisible by the mesh).
+    The placement derives entirely from the compiled plans' op graph:
+
+    * ``"scatter"``  — written via ScatterAccum and never read by key:
+      the ⊎ routes each row to the shard owning its key/slot range; no
+      read collective ever materializes the full axis.
+    * ``"all_gather"`` — written *and* read by key (a sibling gather at
+      arbitrary delta keys): the view shards for its writes, and each
+      read lowers to gather-then-all-gather chosen here, at plan time.
+    * ``"replicate"`` — read-only views, layouts that cannot split, and
+      indicator planes: reads stay local, writes (if any) broadcast.
+    """
+    write_v: set = set()
+    for p in plans:
+        write_v |= set(p.write_views)
+    read_v = read_sets(plans)
+    placement: dict = {}
+    for name in sorted(write_v | set(read_v)):
+        if not shardable.get(name, False) or name not in write_v:
+            placement[name] = "replicate"
+        elif name in read_v:
+            placement[name] = "all_gather"
+        else:
+            placement[name] = "scatter"
+    return placement
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,36 @@ import numpy as np
 from .rings import Payload, PyRing, Ring
 
 
+def axis0_leaf_shardings(tree, mesh, axis_name: str, shard: bool):
+    """``NamedSharding`` per array leaf of ``tree``: axis 0 split over
+    ``axis_name`` when ``shard``, else fully replicated.  The one
+    partitioning convention every storage backend shares (dense leading
+    key axis, sparse slot axis) — keep it single-sourced so the backends
+    can never drift apart."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def spec(leaf):
+        if shard:
+            return NamedSharding(mesh, PartitionSpec(
+                axis_name, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, PartitionSpec())
+
+    return jax.tree.map(spec, tree)
+
+
+def host_payload(payload: Payload) -> dict:
+    """Explicitly sync a ring payload to host numpy.
+
+    This is *the* blocking device→host transfer point for payload access —
+    the reporting/oracle analogue of ``num_keys_sync``.  Reporting paths
+    (``to_py``, host oracles, bench assertions) convert once through here;
+    hot paths (triggers, the stream executor) must never touch it — the
+    sync-guard test in tests/test_stream.py pins the replay path
+    transfer-free.
+    """
+    return {c: np.asarray(jax.device_get(v)) for c, v in payload.items()}
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class DenseRelation:
@@ -66,6 +96,28 @@ class DenseRelation:
     def num_keys_sync(self) -> int:
         """Host-synced :meth:`num_keys` (tests / reporting / planning)."""
         return int(self.num_keys())
+
+    def payload_sync(self) -> dict:
+        """Host-synced payload (see :func:`host_payload`)."""
+        return host_payload(self.payload)
+
+    def shard_axis(self) -> int | None:
+        """Axis along which this storage's key space splits across devices
+        (the leading key axis — parent-var-first layout makes it the axis
+        delta scatters index first); None when there is nothing to split
+        (scalar views)."""
+        return 0 if self.schema else None
+
+    def shard_extent(self) -> int:
+        """Size of the shard axis (0 when unshardable)."""
+        return int(self.domains[0]) if self.schema else 0
+
+    def leaf_shardings(self, mesh, axis_name: str, shard: bool):
+        """Pytree (matching this relation's array leaves) of
+        ``NamedSharding``: leading key axis split over ``axis_name`` when
+        ``shard``, else fully replicated."""
+        return axis0_leaf_shardings(self, mesh, axis_name,
+                                    shard and bool(self.schema))
 
     def nbytes(self) -> int:
         return sum(arr.size * arr.dtype.itemsize
@@ -142,9 +194,15 @@ class DenseRelation:
         return DenseRelation(tuple(new_schema), self.ring, new)
 
     def to_py(self, py_ring: PyRing, to_payload=None) -> "PyRelation":
-        """Densify to the host oracle (test helper; small relations only)."""
+        """Densify to the host oracle (test helper; small relations only).
+
+        Syncs exactly once, through :func:`host_payload` — per-element
+        payload access below touches host numpy only, never a device
+        array (``.item()`` on a lazy device value is a blocking sync
+        reachable from reporting paths; see the sync-guard test).
+        """
         comp0, shp0 = next(iter(self.ring.components.items()))
-        arrs = {c: np.asarray(v) for c, v in self.payload.items()}
+        arrs = self.payload_sync()
         nk = len(self.schema)
         doms = arrs[comp0].shape[:nk]
         out = PyRelation(self.schema, py_ring)

@@ -1,0 +1,215 @@
+"""Plan-driven multi-device sharding of the scan carry (DESIGN.md §9).
+
+The fused stream executor threads the whole engine state through one
+``lax.scan`` carry (DESIGN.md §4).  On a multi-device host that carry can
+be *partitioned*: each device owns a contiguous range of every large
+view's key space — the leading key axis of a dense view, the slot range of
+a hashed-COO table — and the compiled stream program runs SPMD over a
+``jax.sharding.Mesh``, with cross-device movement only where the trigger
+plans say a read crosses shards.
+
+The placement is decided entirely at plan time, from the same compiled
+:class:`repro.core.plan.TriggerPlan` objects every execution path replays:
+
+* **write sets** (``PlanCache.write_sets``) name the views whose ⊎ sites
+  (ScatterAccum ops) want their key space split — a scatter routes each
+  row to the shard owning its slot/key range;
+* **read views** (``TriggerPlan.read_views``) name the views sibling
+  gathers / joins read *by key* — reading a sharded view must see the
+  whole axis, so those reads lower to gather-then-all-gather collectives;
+* everything else — read-only views, indicator planes, base relations
+  (read wholesale by 1-IVM/reeval recompute and indicator transition
+  counting), layouts whose leading extent does not divide the mesh —
+  stays **replicated**: reads are local and writes broadcast.
+
+:func:`plan.collective_placement` performs that classification;
+:func:`plan_shards` turns it into a :class:`ShardPlan` carrying the mesh
+and one :class:`ShardSpec` per state entry.  The storage layer owns the
+per-backend leaf layout (``ViewStorage.leaf_shardings``: dense payloads
+split their leading key axis, sparse tables their slot axis — table row
+and payload row co-locate so slot scatters stay shard-local).
+
+Execution is GSPMD: ``ShardPlan.place`` device_puts the state under the
+planned ``NamedSharding``s and ``ShardPlan.constrain`` re-asserts them on
+the carry inside the compiled scan body, so the SPMD partitioner keeps
+scatters routed to the owning shard and materializes the planned
+collectives (and only those) at the read sites.  Results are the same
+computation in a different partition: bit-identical for integer-valued
+payloads, within reduction-order tolerance for general floats
+(tests/test_shard.py pins both against the single-device executor).
+
+On CPU this runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+(the CI ``multi-device`` leg and the BENCH_stream sharded sweep); the same
+code places on real TPU/GPU meshes unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from . import plan as plan_mod
+
+#: mesh axis every sharded view axis maps onto
+AXIS = "view"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Placement decision for one state entry."""
+
+    name: str
+    kind: str  # "shard" | "replicate"
+    axis: str | None  # "lead" (dense key axis) | "slot" (sparse) | None
+    collective: str | None  # "scatter" | "all_gather" | None (replicated)
+    extent: int  # size of the sharded axis (0 when replicated)
+    reason: str
+
+    def label(self) -> str:
+        if self.kind == "replicate":
+            return f"{self.name}: replicate ({self.reason})"
+        return (f"{self.name}: shard {self.axis}[{self.extent}]"
+                f" reads={self.collective} ({self.reason})")
+
+
+@dataclasses.dataclass
+class ShardPlan:
+    """A mesh plus per-state-entry placement, applied via GSPMD.
+
+    ``specs`` covers the engine's views; base relations and indicator
+    states always replicate (see module docstring).  One plan serves an
+    executor for its whole lifetime, across capacity-segment rehashes:
+    a shard/replicate decision only depends on whether the view's axis
+    extent divides the mesh, sparse capacities are powers of two, and
+    rehash only ever doubles them — so divisibility (and with it every
+    spec) is invariant under segment growth for the power-of-two meshes
+    in practice, and ``leaf_shardings`` re-derives the per-leaf
+    ``NamedSharding``s from the live storage objects each time.
+    """
+
+    mesh: Mesh
+    axis_name: str
+    specs: dict[str, ShardSpec]
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(list(self.mesh.shape.values())))
+
+    # -------------------------------------------------------------- shardings
+    def _view_shardings(self, name: str, view):
+        spec = self.specs.get(name)
+        shard = spec is not None and spec.kind == "shard"
+        return view.leaf_shardings(self.mesh, self.axis_name, shard)
+
+    def _replicated(self, tree):
+        rep = NamedSharding(self.mesh, PartitionSpec())
+        return jax.tree.map(lambda _: rep, tree)
+
+    def state_shardings(self, state):
+        """Pytree of ``NamedSharding`` matching the state's leaves."""
+        views, base, indicators = state
+        return (
+            {n: self._view_shardings(n, v) for n, v in views.items()},
+            self._replicated(base),
+            self._replicated(indicators),
+        )
+
+    # -------------------------------------------------------------- placement
+    def place(self, state):
+        """device_put the state under the planned shardings (host call)."""
+        return jax.device_put(state, self.state_shardings(state))
+
+    def replicate(self, tree):
+        """device_put a pytree fully replicated over the mesh (stream
+        ``xs`` and tails: every shard reads every update row)."""
+        return jax.device_put(tree, self._replicated(tree))
+
+    def constrain(self, state):
+        """Re-assert the planned shardings inside a traced computation —
+        the scan-body hook that keeps the carry partitioned step to step
+        (GSPMD routes ScatterAccum writes to the owning shard and places
+        the planned read collectives against this constraint)."""
+        return jax.lax.with_sharding_constraint(
+            state, self.state_shardings(state))
+
+    # -------------------------------------------------------------- reporting
+    def pretty(self) -> str:
+        head = (f"mesh[{self.axis_name}={self.n_devices}]")
+        lines = [head] + [f"  {self.specs[n].label()}"
+                          for n in sorted(self.specs)]
+        return "\n".join(lines)
+
+    def sharded_views(self) -> tuple:
+        return tuple(sorted(n for n, s in self.specs.items()
+                            if s.kind == "shard"))
+
+
+def make_mesh(devices=None, axis_name: str = AXIS) -> Mesh:
+    """A 1-D mesh over the given (default: all local) devices."""
+    devices = list(devices) if devices is not None else list(jax.devices())
+    return Mesh(np.array(devices), (axis_name,))
+
+
+def plan_shards(engine, rels: Sequence[str] | None = None,
+                devices=None, axis_name: str = AXIS) -> ShardPlan:
+    """Derive a :class:`ShardPlan` for an engine from its trigger plans.
+
+    ``rels`` are the relations whose triggers the plan must serve
+    (default: everything updatable); their compiled plans' write sets and
+    read views drive :func:`plan.collective_placement`.  Derived against
+    the engine's current views; the resulting specs stay valid across
+    segment rehashes (see :class:`ShardPlan`).
+    """
+    mesh = make_mesh(devices, axis_name)
+    n = int(np.prod(list(mesh.shape.values())))
+    rels = tuple(rels if rels is not None else engine.updatable)
+    views = engine.views
+
+    plans = [engine.plans.lookup_sig(
+        engine, rel, ("coo", tuple(engine.query.relations[rel]), 1))
+        for rel in rels]
+
+    def divisible(v) -> bool:
+        ax = v.shard_axis()
+        return ax is not None and v.shard_extent() % n == 0 \
+            and v.shard_extent() >= n
+
+    shardable = {name: divisible(v) for name, v in views.items()}
+    placement = plan_mod.collective_placement(plans, shardable)
+
+    from . import storage as storage_mod
+
+    specs: dict[str, ShardSpec] = {}
+    for name, v in views.items():
+        place = placement.get(name, "replicate")
+        axis = ("slot" if isinstance(v, storage_mod.SparseRelation)
+                else "lead")
+        if place == "replicate":
+            if not shardable[name]:
+                reason = "indivisible axis"
+            elif name not in placement:
+                reason = "untouched by these triggers"
+            else:
+                reason = "not scatter-written"
+            specs[name] = ShardSpec(name, "replicate", None, None, 0,
+                                    reason)
+        else:
+            reason = ("scatter-written, gathered by siblings"
+                      if place == "all_gather"
+                      else "scatter-written, never read by key")
+            specs[name] = ShardSpec(name, "shard", axis, place,
+                                    v.shard_extent(), reason)
+    return ShardPlan(mesh=mesh, axis_name=axis_name, specs=specs)
+
+
+def shard_executor(engine, devices=None, rels=None):
+    """Convenience: derive a plan, place the engine's state under it, and
+    return a mesh-aware ``StreamExecutor``."""
+    from .stream import StreamExecutor
+
+    plan = plan_shards(engine, rels=rels, devices=devices)
+    engine.shard_state(plan)
+    return StreamExecutor(engine, shard=plan)

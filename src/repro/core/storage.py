@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .relations import DenseRelation, PyRelation
+from .relations import DenseRelation, PyRelation, axis0_leaf_shardings
 from .rings import Payload, PyRing, Ring
 
 ENV_VAR = "REPRO_VIEW_STORAGE"
@@ -166,6 +166,12 @@ class ViewStorage(Protocol):
     def transpose(self, new_schema): ...
     def to_dense(self) -> DenseRelation: ...
     def nbytes(self) -> int: ...
+    # multi-device placement surface (DESIGN.md §9): which axis of this
+    # storage's key space splits across devices, its extent, and the
+    # per-leaf NamedSharding tree for a (mesh, shard?) placement
+    def shard_axis(self) -> int | None: ...
+    def shard_extent(self) -> int: ...
+    def leaf_shardings(self, mesh, axis_name: str, shard: bool): ...
 
 
 def as_dense(rel) -> DenseRelation:
@@ -357,6 +363,21 @@ class SparseRelation:
 
     def num_slots_used_sync(self) -> int:
         return int(self.num_slots_used())
+
+    # -- multi-device placement (DESIGN.md §9) -------------------------------
+    def shard_axis(self) -> int | None:
+        """Sparse storage splits along the *slot* axis: each device owns a
+        contiguous range of hash-table slots (table row c and payload row
+        c co-locate, so a slot scatter routes whole rows)."""
+        return 0
+
+    def shard_extent(self) -> int:
+        return self.capacity
+
+    def leaf_shardings(self, mesh, axis_name: str, shard: bool):
+        """NamedSharding per leaf: table ``[C]`` and payload ``[C, *comp]``
+        split their slot axis over ``axis_name`` when ``shard``."""
+        return axis0_leaf_shardings(self, mesh, axis_name, shard)
 
     # -- construction --------------------------------------------------------
     @classmethod

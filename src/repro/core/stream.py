@@ -62,11 +62,26 @@ compiled stream.  A raw stream whose worst-case insert budget would cross
 the load-factor bound mid-run is split into **segments**: between segments
 the affected tables rehash to a larger capacity and the remainder is
 re-prepared (plans recompile against the new storage layout) instead of
-silently dropping rows.
+silently dropping rows.  ``prepare_stream`` itself audits the same budget
+(:func:`check_stream_capacity`) and refuses to prepare a stream that could
+overflow — a directly-prepared stream bypasses segmentation, and the
+failure it would otherwise hit is a *silent* row drop.  The segment loop
+runs as a two-deep pipeline: segment i+1's admission (rehash dispatch,
+bucketing, host→device stacking, plan fetch) is issued with segment i
+still executing, intermediate segments donate their carry, and the host
+never blocks between segments — the overlap is bounded by device-side
+execution time (see ``_run_segmented``).
+
+Multi-device execution (DESIGN.md §9): construct the executor with a
+``repro.core.shard.ShardPlan`` and the scan carry partitions across the
+plan's mesh — sharded views split their key/slot axis per device, the scan
+body re-asserts the planned shardings each step, and GSPMD materializes
+the plan's collectives at cross-shard read sites.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Sequence
 
 import jax
@@ -107,6 +122,10 @@ class PreparedStream:
     #: scatter-backend override active at prepare time (plans bake the
     #: resolved backends in)
     backend_sig: str | None = None
+    #: mesh-replicated (xs, tail) cache of a sharded executor — the
+    #: original xs/tail stay untouched so the same prepared stream can
+    #: also feed an unsharded executor
+    placed: Any = None
 
     @property
     def signature(self):
@@ -141,14 +160,164 @@ def _schedule_period(sched: Sequence[str]) -> int | None:
     return None
 
 
+class StreamCapacityError(RuntimeError):
+    """A stream prepared as one compiled program could overflow a sparse
+    view's hash table.  Capacities are static inside a compiled stream,
+    and an overflowing insert *silently drops its row* — run the raw
+    stream through ``StreamExecutor.run(stream)`` instead: the raw path
+    splits it into capacity segments with rehash + plan recompile between
+    them."""
+
+
+def check_stream_capacity(engine: IVMEngine, stream, views=None) -> None:
+    """Worst-case insert-budget audit for a stream compiled as one
+    program; raises :class:`StreamCapacityError` when any sparse view
+    could cross the load-factor bound.
+
+    The model is the capacity-segmentation budget, tightened per (view,
+    relation) from per-batch row counts to the number of *distinct*
+    projected update keys across the whole stream (a host-side read of
+    the update batches — admission-time cost, never on the replay path):
+    inserts into a view are bounded by distinct bound-key combinations ×
+    the unbound-domain extent, clamped to the view's domain product.
+    Occupancy counts zombie slots (``num_slots_used_sync``): deletes keep
+    their slot until a rehash compacts them, and a compiled stream never
+    rehashes.  Tables whose capacity covers their domain product are
+    skipped — they can never overflow.
+
+    ``views`` overrides the state the stream will actually run against
+    (occupancy and capacities are read off it); default: the engine's
+    own views.  ``StreamExecutor.run`` passes the caller's explicit
+    state here — auditing the engine while executing against a fuller
+    (or fresher) caller state would miss the very overflow the audit
+    exists to catch.
+    """
+    views = engine.views if views is None else views
+    caps: dict[str, tuple] = {}
+    for name, v in views.items():
+        if not isinstance(v, storage_mod.SparseRelation):
+            continue
+        dom_prod = storage_mod.comp_width(v.domains)
+        if v.capacity >= storage_mod.next_pow2(dom_prod):
+            continue
+        caps[name] = (v, v.num_slots_used_sync(), dom_prod)
+    if not caps:
+        return
+    by_rel: dict[str, list[COOUpdate]] = {}
+    for rel, upd in stream:
+        by_rel.setdefault(rel, []).append(upd)
+    rel_keys = {rel: np.concatenate([np.asarray(u.keys) for u in upds])
+                for rel, upds in by_rel.items()}
+    offenders = []
+    for name, (v, occ, dom_prod) in caps.items():
+        budget = 0
+        for rel, upds in by_rel.items():
+            wv, _, _ = engine.plans.write_sets(engine, rel)
+            if name not in wv:
+                continue
+            sch = tuple(upds[0].schema)
+            extra = 1
+            for var in v.schema:
+                if var not in sch:
+                    extra *= int(v.domain_of(var))
+            cols = [sch.index(var) for var in v.schema if var in sch]
+            if cols:
+                distinct = np.unique(rel_keys[rel][:, cols], axis=0).shape[0]
+            else:
+                distinct = 1
+            budget += min(distinct * extra, dom_prod)
+        budget = min(budget, dom_prod)
+        if occ + budget > storage_mod.LOAD_FACTOR * v.capacity:
+            offenders.append(
+                f"{name}: {occ} occupied + worst-case {budget} inserts > "
+                f"{storage_mod.LOAD_FACTOR:.0%} of capacity {v.capacity}")
+    if offenders:
+        raise StreamCapacityError(
+            "prepared stream could overflow sparse view(s) — "
+            + "; ".join(offenders)
+            + ".  Pass the raw stream to StreamExecutor.run() so it is "
+            "split into capacity segments (rehash + recompile between "
+            "them), or size the tables with more headroom "
+            "(storage_opts=dict(headroom=...)).")
+
+
+def capacity_segments(engine: IVMEngine, stream):
+    """Split a raw stream so no sparse view's worst-case insert budget
+    crosses the load-factor bound inside one prepared segment.
+
+    Returns ``[(sub_stream, grow_caps), ...]``: ``grow_caps`` maps view
+    names to the capacity they must rehash to *before* the segment
+    runs.  Budgets are worst-case (B × unbound-domain product, as in
+    the eager growth path) and occupancy is tracked conservatively, so
+    a compiled segment can never overflow-drop; capacities stop
+    growing at the domain product (such a table cannot overflow)."""
+    caps: dict[str, int] = {}
+    occ: dict[str, int] = {}
+    full: dict[str, int] = {}
+    for name, v in engine.views.items():
+        if isinstance(v, storage_mod.SparseRelation):
+            caps[name] = v.capacity
+            occ[name] = v.num_slots_used_sync()
+            full[name] = storage_mod.next_pow2(
+                storage_mod.comp_width(v.domains))
+    if not caps:
+        return [(list(stream), {})]
+    touched: dict[str, list[str]] = {}
+    for rel in {r for r, _ in stream}:
+        wv, _, _ = engine.plans.write_sets(engine, rel)
+        touched[rel] = [n for n in wv if n in caps]
+
+    def budget(name: str, rel: str, upd: COOUpdate) -> int:
+        # the eager growth path's worst-case model, clamped to the
+        # domain product (there are never more distinct keys)
+        v = engine.views[name]
+        return min(engine._insert_budget(v, rel, upd),
+                   storage_mod.comp_width(v.domains))
+
+    segments: list = []
+    cur: list = []
+    grow: dict[str, int] = {}
+    for rel, upd in stream:
+        need: dict[str, int] = {}
+        for name in touched[rel]:
+            b = budget(name, rel, upd)
+            c = caps[name]
+            while (c < full[name]
+                   and occ[name] + b > storage_mod.LOAD_FACTOR * c):
+                c *= 2
+            if c != caps[name]:
+                need[name] = c
+        if need and cur:
+            segments.append((cur, grow))
+            cur, grow = [], {}
+        if need:
+            grow.update(need)
+            caps.update(need)
+        cur.append((rel, upd))
+        for name in touched[rel]:
+            occ[name] = min(occ[name] + budget(name, rel, upd),
+                            full[name])
+    segments.append((cur, grow))
+    return segments
+
+
 def prepare_stream(
-    engine: IVMEngine, stream: Sequence[tuple[str, COOUpdate]]
+    engine: IVMEngine, stream: Sequence[tuple[str, COOUpdate]],
+    check_capacity: bool = True,
 ) -> PreparedStream:
     """Bucket, pad, and stack a ``[(rel, COOUpdate), ...]`` stream, and
     fetch the trigger plan of every schedule position from the engine's
     plan cache (compiled once per (relation, schema, bucket, storage
-    layout); replayed streams hit the cache)."""
+    layout); replayed streams hit the cache).
+
+    ``check_capacity`` (default on) runs :func:`check_stream_capacity`
+    first: a prepared stream bypasses raw-run segmentation, so a sparse
+    view that could cross its load-factor bound must fail loudly here
+    rather than silently overflow-drop rows mid-program.  The segmented
+    runner passes ``False`` — its segments are budgeted already."""
     assert stream, "empty update stream"
+    if check_capacity:
+        check_stream_capacity(engine, list(stream))
     ring = engine.query.ring
     sched = [rel for rel, _ in stream]
     rel_order = tuple(dict.fromkeys(sched))
@@ -242,13 +411,27 @@ class StreamExecutor:
 
     Compiled programs are cached per :attr:`PreparedStream.signature`, so a
     benchmark sweep that replays same-shaped streams compiles once.
+
+    ``shard`` (a :class:`repro.core.shard.ShardPlan`) makes the executor
+    mesh-aware: input state and stream ``xs`` are placed per the plan
+    (sharded views split their key/slot axis, updates replicate so every
+    shard sees every row), and the scan/rounds bodies re-assert the
+    planned shardings on the carry each step, so GSPMD keeps ScatterAccum
+    writes routed to the owning shard and lowers cross-shard sibling
+    reads to the plan's collectives.  A rehash between capacity segments
+    keeps the plan valid: power-of-two capacities stay divisible by the
+    mesh, so placement decisions survive growth.
     """
 
-    def __init__(self, engine: IVMEngine):
+    def __init__(self, engine: IVMEngine, shard=None):
         self.engine = engine
+        self.shard = shard
         self._compiled: dict[Any, Any] = {}
         #: shared prep-op keys of the last rounds build (CSE telemetry)
         self.last_shared_ops: tuple = ()
+        #: per-segment admit/dispatch host seconds of the last segmented
+        #: run (the pipeline-overlap telemetry BENCH_stream records)
+        self.last_segment_stats: list = []
 
     # ------------------------------------------------------- mutable leaves
     def _mutable_mask(self, prepared: PreparedStream) -> tuple[bool, ...]:
@@ -290,6 +473,12 @@ class StreamExecutor:
                     state = body(state,
                                  COOUpdate(schema_of[rel], keys, payload),
                                  memo)
+                if self.shard is not None:
+                    # keep the carry partitioned step to step: GSPMD
+                    # routes each position's scatters to the owning shard
+                    # and places the plan's read collectives against this
+                    # constraint instead of drifting to a replicated carry
+                    state = self.shard.constrain(state)
                 return state, None
 
             def run_stream(state, xs, tail):
@@ -305,7 +494,11 @@ class StreamExecutor:
             return jax.jit(run_stream, donate_argnums=(0,)), None
 
         # switch mode: thread only plan-written leaves through the
-        # carry/branches; pass the constant rest as a loop invariant
+        # carry/branches; pass the constant rest as a loop invariant.
+        # Under a shard plan the input placements propagate through the
+        # flat mut/const leaf lists (HLO conditionals copy branch outputs,
+        # so a per-step constraint would force collectives inside every
+        # branch; input-sharding propagation keeps the partition instead)
         bodies = {rel: engine.trigger_body(rel, plan)
                   for rel, plan in zip(prepared.rel_order, prepared.plans)}
         mask = self._mutable_mask(prepared)
@@ -368,68 +561,13 @@ class StreamExecutor:
 
     # ------------------------------------------------- capacity segmentation
     def _capacity_segments(self, stream):
-        """Split a raw stream so no sparse view's worst-case insert budget
-        crosses the load-factor bound inside one prepared segment.
-
-        Returns ``[(sub_stream, grow_caps), ...]``: ``grow_caps`` maps view
-        names to the capacity they must rehash to *before* the segment
-        runs.  Budgets are worst-case (B × unbound-domain product, as in
-        the eager growth path) and occupancy is tracked conservatively, so
-        a compiled segment can never overflow-drop; capacities stop
-        growing at the domain product (such a table cannot overflow)."""
-        engine = self.engine
-        caps: dict[str, int] = {}
-        occ: dict[str, int] = {}
-        full: dict[str, int] = {}
-        for name, v in engine.views.items():
-            if isinstance(v, storage_mod.SparseRelation):
-                caps[name] = v.capacity
-                occ[name] = v.num_slots_used_sync()
-                full[name] = storage_mod.next_pow2(
-                    storage_mod.comp_width(v.domains))
-        if not caps:
-            return [(list(stream), {})]
-        touched: dict[str, list[str]] = {}
-        for rel in {r for r, _ in stream}:
-            wv, _, _ = engine.plans.write_sets(engine, rel)
-            touched[rel] = [n for n in wv if n in caps]
-
-        def budget(name: str, rel: str, upd: COOUpdate) -> int:
-            # the eager growth path's worst-case model, clamped to the
-            # domain product (there are never more distinct keys)
-            v = engine.views[name]
-            return min(engine._insert_budget(v, rel, upd),
-                       storage_mod.comp_width(v.domains))
-
-        segments: list = []
-        cur: list = []
-        grow: dict[str, int] = {}
-        for rel, upd in stream:
-            need: dict[str, int] = {}
-            for name in touched[rel]:
-                b = budget(name, rel, upd)
-                c = caps[name]
-                while (c < full[name]
-                       and occ[name] + b > storage_mod.LOAD_FACTOR * c):
-                    c *= 2
-                if c != caps[name]:
-                    need[name] = c
-            if need and cur:
-                segments.append((cur, grow))
-                cur, grow = [], {}
-            if need:
-                grow.update(need)
-                caps.update(need)
-            cur.append((rel, upd))
-            for name in touched[rel]:
-                occ[name] = min(occ[name] + budget(name, rel, upd),
-                                full[name])
-        segments.append((cur, grow))
-        return segments
+        """See :func:`capacity_segments` (module-level: shared with the
+        ``prepare_stream`` capacity audit and the tests)."""
+        return capacity_segments(self.engine, stream)
 
     # ------------------------------------------------------------------ run
     def run(self, stream_or_prepared, state=None, update_engine: bool = True,
-            donate_input: bool = False):
+            donate_input: bool = False, pipeline: bool = True):
         """Apply the whole stream in one fused call; returns the new state.
 
         Unless ``donate_input=True``, the input state is copied before the
@@ -439,13 +577,24 @@ class StreamExecutor:
 
         A *raw* stream run against the engine's own state (``state=None``)
         is first split into capacity segments (see
-        :meth:`_capacity_segments`): sparse tables that would cross the
+        :func:`capacity_segments`): sparse tables that would cross the
         load-factor bound mid-stream rehash to a larger capacity between
         segments and the remainder re-prepares (the plan cache recompiles
-        for the new storage layout).  With ``update_engine=False`` the
-        engine is restored afterwards and only the returned state carries
-        the grown tables.  Prepared streams and explicit-state runs keep
-        the caller's sizing."""
+        for the new storage layout); ``pipeline=False`` disables the
+        two-deep segment pipeline (blocking between stages — the additive
+        baseline for the overlap benchmark).  With ``update_engine=False``
+        the engine's views/base/indicators are all restored afterwards —
+        snapshots of the container dicts, taken before any segment runs
+        and restored even if a mid-segment prepare or compile raises — and
+        only the returned state carries the grown tables.
+
+        Explicit-state runs keep the caller's sizing: a *raw* stream is
+        audited against the caller's state (``check_stream_capacity``),
+        while replaying an already-``PreparedStream`` trusts its
+        prepare-time audit — the replay path is the sync-free hot loop
+        (see the sync-guard test) and cannot re-read occupancy per call,
+        so callers replaying against states other than the engine's own
+        must size those states like the engine's."""
         prepared = stream_or_prepared
         if not isinstance(prepared, PreparedStream):
             stream = list(prepared)
@@ -455,12 +604,34 @@ class StreamExecutor:
                     "engine would leave it pointing at deleted buffers")
                 segments = self._capacity_segments(stream)
                 if len(segments) > 1 or segments[0][1]:
-                    saved = None if update_engine else self.engine.state
-                    new_state = self._run_segmented(segments)
-                    if saved is not None:
-                        self.engine.set_state(saved)
+                    saved = None
+                    if not update_engine:
+                        # snapshot the container dicts, not just the live
+                        # state tuple: the restore must hold against any
+                        # in-place mutation of engine.views between here
+                        # and the last segment, and must run even when a
+                        # mid-segment prepare/compile raises
+                        saved = (dict(self.engine.views),
+                                 dict(self.engine.base),
+                                 dict(self.engine.indicators))
+                    try:
+                        new_state = self._run_segmented(segments,
+                                                        pipeline=pipeline)
+                    finally:
+                        if saved is not None:
+                            self.engine.set_state(saved)
                     return new_state
-            prepared = prepare_stream(self.engine, stream)
+                # segmentation found no overflow risk, so skip the
+                # (strictly tighter) prepare-time audit and its host syncs
+                prepared = prepare_stream(self.engine, stream,
+                                          check_capacity=False)
+            else:
+                # explicit-state run: audit the state the program will
+                # actually mutate — the engine's own occupancy says
+                # nothing about the caller's tables
+                check_stream_capacity(self.engine, stream, views=state[0])
+                prepared = prepare_stream(self.engine, stream,
+                                          check_capacity=False)
         if state is None:
             assert update_engine or not donate_input, (
                 "donating the engine's own state without updating the engine "
@@ -469,23 +640,79 @@ class StreamExecutor:
         if not donate_input:
             state = jax.tree.map(
                 lambda x: x.copy() if hasattr(x, "copy") else x, state)
-        new_state = self.compiled(prepared)(state, prepared.xs, prepared.tail)
+        xs, tail = prepared.xs, prepared.tail
+        if self.shard is not None:
+            state = self.shard.place(state)
+            # replicate the stream inputs once per prepared object: every
+            # shard consumes every update row.  Cached beside (not in
+            # place of) the originals, so the same prepared stream can
+            # still feed an unsharded executor
+            mesh_key = self.shard.mesh
+            if prepared.placed is None or prepared.placed[0] != mesh_key:
+                prepared.placed = (mesh_key,
+                                   self.shard.replicate(xs),
+                                   self.shard.replicate(tail) if tail
+                                   else tail)
+            _, xs, tail = prepared.placed
+        new_state = self.compiled(prepared)(state, xs, tail)
         if update_engine:
             self.engine.set_state(new_state)
         return new_state
 
-    def _run_segmented(self, segments):
-        """Run capacity segments in order, rehashing the named sparse views
-        (which also compacts ring-zero zombies) before each segment."""
+    def _admit_segment(self, sub_stream, grow_caps):
+        """Admission stage of the segment pipeline: dispatch the
+        pre-segment rehash (device work queued on the previous segment's
+        still-in-flight outputs), bucket/pad/stack the segment's updates
+        (the host→device upload), and fetch its trigger plans + compiled
+        program entry.  Nothing here reads a device value, so the whole
+        stage overlaps the previous segment's execution."""
         engine = self.engine
+        t0 = time.perf_counter()
+        if grow_caps:
+            engine.views = {
+                name: (v.rehash(grow_caps[name]) if name in grow_caps
+                       else v)
+                for name, v in engine.views.items()
+            }
+        prepared = prepare_stream(engine, sub_stream, check_capacity=False)
+        self.compiled(prepared)
+        return prepared, time.perf_counter() - t0
+
+    def _run_segmented(self, segments, pipeline: bool = True):
+        """Two-deep pipelined segment loop: while segment i's compiled
+        program executes on device, segment i+1 is *admitted* — its
+        rehash dispatched, its xs stacked and uploaded, its program
+        fetched (:meth:`_admit_segment`).  Admission never blocks on a
+        device result, so the host reaches segment i+1's dispatch with
+        segment i still in flight; the overlap this buys is bounded by
+        the device-side execution time (negligible on a shared-core CPU
+        host, where admission itself is the wall — material where DMA
+        and compute are separate engines).  Intermediate segments donate
+        their input state (only segment 0's can alias caller-visible
+        buffers), which is the measured win on this container.
+        ``pipeline=False`` blocks on each segment's result before
+        admitting the next — the serialized baseline the BENCH_stream
+        ``segmented_pipeline`` row compares against.  Per-segment
+        admit/dispatch host times land in ``last_segment_stats``."""
+        stats: list = []
         state = None
-        for sub_stream, grow_caps in segments:
-            if grow_caps:
-                engine.views = {
-                    name: (v.rehash(grow_caps[name]) if name in grow_caps
-                           else v)
-                    for name, v in engine.views.items()
-                }
-            prepared = prepare_stream(engine, sub_stream)
-            state = self.run(prepared, update_engine=True)
+        prepared, admit_s = self._admit_segment(*segments[0])
+        for i in range(len(segments)):
+            n_steps = prepared.n_steps
+            t0 = time.perf_counter()
+            # segment 0's input can alias caller-visible arrays (the
+            # original database, the update_engine=False snapshot) and
+            # must be copied; later segments run on exclusively
+            # engine-owned outputs of the previous segment — donate them
+            # instead of paying a full-state device copy per segment
+            state = self.run(prepared, update_engine=True,
+                             donate_input=i > 0)
+            if not pipeline:
+                jax.block_until_ready(state)
+            dispatch_s = time.perf_counter() - t0
+            stats.append(dict(segment=i, n_steps=n_steps,
+                              admit_s=admit_s, dispatch_s=dispatch_s))
+            if i + 1 < len(segments):
+                prepared, admit_s = self._admit_segment(*segments[i + 1])
+        self.last_segment_stats = stats
         return state

@@ -8,14 +8,17 @@ program traces the very same trigger bodies) and to the exact host oracle
 sizes (exercising bucket padding), aperiodic schedules (exercising the
 switch fallback), and indicator-bearing cyclic queries.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (COOUpdate, DenseRelation, IVMEngine, PyRelation,
-                        Query, StreamExecutor, build_view_tree, chain,
-                        prepare_stream, sum_ring)
+                        Query, SparseRelation, StreamCapacityError,
+                        StreamExecutor, build_view_tree, capacity_segments,
+                        chain, prepare_stream, sum_ring)
+from repro.core import storage as storage_mod
 from repro.core.py_engine import PyEngineSpec, PyIVM
 from repro.core.rings import PyNumberRing
 
@@ -263,6 +266,250 @@ def test_fused_stream_with_indicators(strategy):
     exp = float(np.einsum("ab,bc,ca->", state["R"], state["S"], state["T"]))
     assert got == ref
     assert np.allclose(got, exp)
+
+
+# ---------------------------------------------------------------------------
+# capacity segmentation: restore, prepare-time audit, zombie budgeting,
+# and the sync-free replay path (ISSUE 5 satellites)
+# ---------------------------------------------------------------------------
+SEG_DOMS = dict(A=64, B=64, C=3)
+
+
+def _seg_query():
+    return Query(relations={"R": ("A", "B"), "T": ("B", "C")},
+                 free_vars=("A",), ring=sum_ring(), domains=SEG_DOMS,
+                 lifts={"C": ("value",)})
+
+
+def _seg_db(rng):
+    ring = sum_ring()
+
+    def rel(schema):
+        shape = tuple(SEG_DOMS[v] for v in schema)
+        mult = np.zeros(shape, np.float32)
+        idx = tuple(rng.integers(0, d, size=8) for d in shape)
+        np.add.at(mult, idx, 1.0)
+        return DenseRelation(tuple(schema), ring, {"v": jnp.asarray(mult)})
+
+    return {"R": rel("AB"), "T": rel("BC")}
+
+
+def _seg_engine(rng):
+    return IVMEngine.build(_seg_query(), _seg_db(rng),
+                           var_order=chain(["A", "B"], {"B": [["C"]]}),
+                           storage="sparse")
+
+
+def _seg_upd(q, rel, B, seed, vals=None):
+    rng = np.random.default_rng(seed)
+    sch = q.relations[rel]
+    keys = np.stack([rng.integers(0, SEG_DOMS[v], size=B) for v in sch],
+                    axis=1).astype(np.int32)
+    if vals is None:
+        vals = np.ones(B, np.float32)
+    return (rel, COOUpdate(sch, jnp.asarray(keys),
+                           {"v": jnp.asarray(np.asarray(vals, np.float32))}))
+
+
+def _sparse_caps(engine):
+    return {n: v.capacity for n, v in engine.views.items()
+            if isinstance(v, SparseRelation)}
+
+
+def test_segmented_run_restores_engine_views_with_update_engine_false():
+    """Regression (ISSUE 5): a segmented raw run with update_engine=False
+    must leave the engine's views dict — capacities included — exactly as
+    it found them; only the returned state carries the rehash-grown
+    tables.  The restore snapshots the container dicts, so it holds even
+    against in-place mutation of engine.views between segments."""
+    q = _seg_query()
+    eng = _seg_engine(np.random.default_rng(0))
+    stream = [_seg_upd(q, "R", 32, 100 + i) for i in range(12)]
+    ex = StreamExecutor(eng)
+    segments = capacity_segments(eng, stream)
+    assert len(segments) > 1 or segments[0][1], "stream must segment"
+    caps_before = _sparse_caps(eng)
+    views_before = dict(eng.views)
+    result_before = np.asarray(eng.result().payload["v"]).copy()
+
+    state = ex.run(stream, update_engine=False)
+
+    assert _sparse_caps(eng) == caps_before
+    assert eng.views == views_before  # the very same storage objects
+    np.testing.assert_array_equal(np.asarray(eng.result().payload["v"]),
+                                  result_before)
+    grown = {n: v.capacity for n, v in state[0].items()
+             if isinstance(v, SparseRelation)}
+    assert any(grown[n] > caps_before[n] for n in grown)
+    assert ex.last_segment_stats and all(
+        s["dispatch_s"] >= 0 and s["admit_s"] >= 0
+        for s in ex.last_segment_stats)
+
+
+def test_segmented_run_restores_engine_when_a_segment_raises(monkeypatch):
+    """The restore must also run when a mid-segment admit blows up —
+    the engine cannot be left holding half the segments' growth."""
+    q = _seg_query()
+    eng = _seg_engine(np.random.default_rng(1))
+    stream = [_seg_upd(q, "R", 32, 200 + i) for i in range(12)]
+    ex = StreamExecutor(eng)
+    caps_before = _sparse_caps(eng)
+    calls = dict(n=0)
+    orig = StreamExecutor._admit_segment
+
+    def failing_admit(self, sub_stream, grow_caps):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise RuntimeError("boom mid-segment")
+        return orig(self, sub_stream, grow_caps)
+
+    monkeypatch.setattr(StreamExecutor, "_admit_segment", failing_admit)
+    with pytest.raises(RuntimeError, match="boom"):
+        ex.run(stream, update_engine=False)
+    assert _sparse_caps(eng) == caps_before
+
+
+def test_prepare_stream_refuses_overflowing_stream():
+    """Regression (ISSUE 5): a directly-prepared stream bypasses
+    segmentation, so prepare_stream must run the worst-case budget audit
+    and raise — silently overflow-dropping rows is the failure the
+    segmentation machinery exists to prevent."""
+    q = _seg_query()
+    eng = _seg_engine(np.random.default_rng(2))
+    flood = [_seg_upd(q, "R", 32, 300 + i) for i in range(12)]
+    with pytest.raises(StreamCapacityError, match="raw stream"):
+        prepare_stream(eng, flood)
+    # the audit is skippable for budgeted callers (the segmented runner)
+    prepared = prepare_stream(eng, flood, check_capacity=False)
+    assert prepared.n_steps > 0
+    # and the raw-stream run path the error points to handles the flood
+    ex = StreamExecutor(eng)
+    ex.run(flood)
+    seq = _seg_engine(np.random.default_rng(2))
+    for rel, upd in flood:
+        seq.apply_update(rel, upd)
+    np.testing.assert_array_equal(np.asarray(eng.result().payload["v"]),
+                                  np.asarray(seq.result().payload["v"]))
+
+
+def test_explicit_state_run_audits_the_caller_state():
+    """An explicit-state raw run must audit the state it will actually
+    mutate: the engine's own occupancy says nothing about the caller's
+    tables (they may be much fuller, and a compiled stream silently
+    drops overflowing inserts)."""
+    q = _seg_query()
+    eng = _seg_engine(np.random.default_rng(6))
+    ex = StreamExecutor(eng)
+    # advance a state without touching the engine: its R table fills
+    # while the engine stays near-empty (and nothing segments)
+    fill = [_seg_upd(q, "R", 24, 600)]
+    assert len(capacity_segments(eng, fill)) == 1
+    state = ex.run(fill, update_engine=False)
+    occ_state = state[0]["R"].num_slots_used_sync()
+    occ_engine = eng.views["R"].num_slots_used_sync()
+    assert occ_state > occ_engine
+    # a top-up that fits next to the engine's occupancy but not the
+    # caller state's must be refused, not silently overflow-dropped
+    top_up = [_seg_upd(q, "R", 16, 601)]
+    assert len(capacity_segments(eng, top_up)) == 1  # engine would pass
+    with pytest.raises(StreamCapacityError):
+        ex.run(top_up, state=state)
+    # ... while the same stream against the engine's own state runs fine
+    ex.run(top_up)
+
+
+def test_prepare_stream_audit_counts_distinct_keys_not_rows():
+    """The audit's budget is distinct projected keys × unbound extent —
+    a stream hammering one key must prepare fine however long it is."""
+    q = _seg_query()
+    eng = _seg_engine(np.random.default_rng(3))
+    sch = q.relations["R"]
+    one_key = np.zeros((32, len(sch)), np.int32)
+    stream = [("R", COOUpdate(sch, jnp.asarray(one_key),
+                              {"v": jnp.ones((32,), jnp.float32)}))
+              for _ in range(20)]
+    prepared = prepare_stream(eng, stream)  # must not raise
+    assert prepared.n_steps == 20
+
+
+def test_capacity_segments_count_zombie_slots():
+    """Occupancy is num_slots_used (zombies included): ring-zero keys
+    keep their slot until a rehash compacts them, and a compiled segment
+    never rehashes — so a zombie-heavy table must trigger growth earlier
+    than its live-key count alone would."""
+    ring = sum_ring()
+    q = _seg_query()
+    eng = _seg_engine(np.random.default_rng(4))
+    # grow zombies in the leaf view R: insert a batch, then delete it
+    ins = _seg_upd(q, "R", 24, 400)
+    dele = ("R", COOUpdate(ins[1].schema, ins[1].keys,
+                           ring.neg(ins[1].payload)))
+    eng.apply_update(*ins)
+    eng.apply_update(*dele)
+    view = eng.views["R"]
+    assert isinstance(view, SparseRelation)
+    zombies = view.num_slots_used_sync() - view.num_keys_sync()
+    assert zombies > 0
+    # a stream whose budget fits next to the LIVE keys but not next to
+    # the zombie-inflated occupancy must still be segmented for growth
+    cap = view.capacity
+    headroom = int(storage_mod.LOAD_FACTOR * cap) - view.num_keys_sync()
+    budget = headroom - zombies // 2
+    assert 0 < budget <= headroom
+    stream = [_seg_upd(q, "R", budget, 401)]
+    segments = capacity_segments(eng, stream)
+    assert segments[0][1].get("R", cap) > cap  # growth decision fired
+    # ... and the pre-segment rehash compacts the zombies away
+    ex = StreamExecutor(eng)
+    ex.run(stream, pipeline=False)  # exercise the blocking baseline too
+    grown = eng.views["R"]
+    assert grown.capacity > cap
+    seq = _seg_engine(np.random.default_rng(4))
+    for u in (ins, dele, stream[0]):
+        seq.apply_update(*u)
+    np.testing.assert_array_equal(np.asarray(eng.result().payload["v"]),
+                                  np.asarray(seq.result().payload["v"]))
+
+
+def test_stream_replay_path_is_sync_free(monkeypatch):
+    """Regression (ISSUE 5): the replay hot path — running an
+    already-prepared stream against an explicit state — must never block
+    on a device→host payload read.  All sanctioned host syncs route
+    through the explicit helpers (relations.host_payload / payload_sync,
+    num_keys_sync, num_slots_used_sync — admission and reporting paths
+    only); the test arms every one of them to raise during the replay,
+    under a device→host transfer guard for good measure (the guard is
+    inert on the CPU backend, where device buffers are host memory, but
+    bites on accelerators)."""
+    rng = np.random.default_rng(5)
+    q = example_query()
+    db = random_db(rng, q.ring)
+    eng = IVMEngine.build(q, db, var_order=example_vo(), strategy="fivm")
+    stream = random_stream(rng, q, ["R", "S", "T"] * 2, [4] * 6)
+    ex = StreamExecutor(eng)
+    prepared = prepare_stream(eng, stream)
+    state = ex.run(prepared, update_engine=False)  # warm + compile
+    jax.block_until_ready(state)
+
+    from repro.core import relations as relations_mod
+
+    def boom(*a, **k):
+        raise AssertionError("host sync on the stream replay path")
+
+    monkeypatch.setattr(relations_mod, "host_payload", boom)
+    monkeypatch.setattr(DenseRelation, "payload_sync", boom)
+    monkeypatch.setattr(DenseRelation, "num_keys_sync", boom)
+    monkeypatch.setattr(SparseRelation, "num_keys_sync", boom)
+    monkeypatch.setattr(SparseRelation, "num_slots_used_sync", boom)
+    with jax.transfer_guard_device_to_host("disallow"):
+        state = ex.run(prepared, state=state, update_engine=False,
+                       donate_input=True)
+        state = ex.run(prepared, state=state, update_engine=False,
+                       donate_input=True)
+    jax.block_until_ready(state)
+    # ... while stream admission legitimately uses the sync helpers
+    with pytest.raises(AssertionError, match="host sync"):
+        eng.views[eng.tree.name].num_keys_sync()
 
 
 def test_executor_does_not_clobber_engine_or_db():
