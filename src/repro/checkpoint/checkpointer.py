@@ -1,7 +1,7 @@
 """Sharded, mesh-elastic checkpointing with async writes and atomic commit.
 
 Layout: one directory per step containing
-    manifest.json      — pytree structure, leaf shapes/dtypes, step
+    manifest.json      — pytree structure, leaf shapes/dtypes, step, meta
     leaf_<i>.npy       — one file per leaf (logical, unsharded array)
 
 Design points for the 1000+-node regime:
@@ -11,23 +11,45 @@ Design points for the 1000+-node regime:
   * **Atomic commit**: writes go to ``<dir>.tmp`` and are renamed only
     after fsync — a job killed mid-save never corrupts the latest
     checkpoint; ``restore_latest`` picks the newest *committed* step.
-  * **Async**: ``save(..., blocking=False)`` hands the host copy to a
-    writer thread so the TPU step loop is not blocked by the filesystem.
+  * **Async**: ``save(..., blocking=False)`` hands the work to a writer
+    thread so the TPU step loop is not blocked by the filesystem.  With
+    ``sync_copy=True`` (default) the device→host copy happens on the
+    calling thread — the caller may donate or mutate its buffers as soon
+    as ``save`` returns.  ``sync_copy=False`` moves the device→host
+    transfer into the writer thread too, so the caller never blocks on
+    in-flight device computation; the caller then *must* hand over buffers
+    it will not donate or overwrite (the stream checkpointer passes fresh
+    device copies — see ``repro.checkpoint.stream_state``).
+  * **Failure transparency**: an exception in the writer thread (disk
+    full, injected fault) is captured and re-raised on the next
+    ``wait()``/``save()`` — an async save can never silently *not* commit
+    while the caller keeps running as if it had.  Stale ``*.tmp``
+    directories from a previous crashed process are swept on
+    ``__init__``.
   * On a real multi-host pod each host writes its addressable shards and
     the manifest records the global shape (single-process here; the format
     already stores logical arrays so the multi-host writer only changes
     the gather step).
+
+The IVM stream executor's durable snapshots build on this file format
+with layout-aware templates (``repro.checkpoint.stream_state``).
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
+import time
 from typing import Any
 
 import jax
 import numpy as np
+
+from repro.runtime import faults
+
+log = logging.getLogger("repro.checkpoint")
 
 
 class Checkpointer:
@@ -36,25 +58,72 @@ class Checkpointer:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        #: wall seconds of the last completed ``_write`` (device→host
+        #: transfer included when ``sync_copy=False``) and the cumulative
+        #: total — the BENCH_stream checkpointing-leg telemetry
+        self.last_write_seconds: float = 0.0
+        self.total_write_seconds: float = 0.0
+        self.saves_committed: int = 0
+        # sweep torn writes of a previous process: a ``*.tmp`` directory
+        # is by construction uncommitted (the rename is the commit)
+        for name in os.listdir(directory):
+            if name.endswith(".tmp"):
+                log.warning("sweeping stale checkpoint write %s", name)
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------------ save
-    def save(self, tree: Any, step: int, blocking: bool = True) -> None:
+    def save(self, tree: Any, step: int, blocking: bool = True,
+             meta: dict | None = None, sync_copy: bool = True) -> None:
+        """Write ``tree`` as step ``step``.  ``meta`` (JSON-serializable)
+        is stored in the manifest and read back via :meth:`read_meta`.
+        See the module docstring for the ``blocking`` × ``sync_copy``
+        contract; a pending async failure re-raises here first."""
+        self.wait()  # serialize with (and surface errors of) a prior save
         leaves, treedef = jax.tree.flatten(tree)
-        host_leaves = [np.asarray(x) for x in leaves]  # device -> host copy
+        if sync_copy:
+            leaves = [np.asarray(x) for x in leaves]  # device -> host copy
         if blocking:
-            self._write(host_leaves, str(treedef), step)
+            self._write(leaves, str(treedef), step, meta)
         else:
-            self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(host_leaves, str(treedef), step))
+                target=self._write_guarded,
+                args=(leaves, str(treedef), step, meta))
             self._thread.start()
 
     def wait(self) -> None:
+        """Join a pending async save; re-raise its failure if it had one."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
-    def _write(self, host_leaves, treedef_str: str, step: int) -> None:
+    def discard_pending(self) -> None:
+        """Join a pending async save and swallow its failure — the
+        recovery path's entry point: an interrupted run may have died
+        with a save in flight, and recovery restarts from the last
+        *committed* step regardless of how that save ended."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._error = None
+
+    def _write_guarded(self, host_leaves, treedef_str, step, meta) -> None:
+        try:
+            self._write(host_leaves, treedef_str, step, meta)
+        except BaseException as e:  # noqa: BLE001 — surfaced on next wait()
+            self._error = e
+
+    def _write(self, leaves, treedef_str: str, step: int,
+               meta: dict | None = None) -> None:
+        t0 = time.perf_counter()
+        # device -> host copy (no-op for host arrays): on the writer
+        # thread this is where an async save blocks on in-flight device
+        # computation instead of the caller doing so
+        host_leaves = [np.asarray(x) for x in leaves]
         final = os.path.join(self.directory, f"step_{step:08d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -66,6 +135,7 @@ class Checkpointer:
             "treedef": treedef_str,
             "leaves": [{"shape": list(x.shape), "dtype": str(x.dtype)}
                        for x in host_leaves],
+            "meta": meta or {},
         }
         for i, x in enumerate(host_leaves):
             np.save(os.path.join(tmp, f"leaf_{i}.npy"), x)
@@ -73,9 +143,15 @@ class Checkpointer:
             json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
+        # a kill between here and the rename must leave the newest
+        # *committed* step untouched (the chaos suite injects exactly this)
+        faults.crossing("mid_checkpoint_write", step=step)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic commit
+        self.last_write_seconds = time.perf_counter() - t0
+        self.total_write_seconds += self.last_write_seconds
+        self.saves_committed += 1
         self._gc()
 
     def _gc(self) -> None:
@@ -94,13 +170,20 @@ class Checkpointer:
                     out.append(int(name[5:]))
         return sorted(out)
 
+    def read_manifest(self, step: int) -> dict:
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
+
+    def read_meta(self, step: int) -> dict:
+        return self.read_manifest(step).get("meta", {})
+
     def restore(self, template: Any, step: int, shardings: Any = None):
         """Restore into the structure of ``template``; if ``shardings`` is
         given (pytree of NamedSharding), leaves are placed sharded — this is
         the mesh-elastic path (any mesh, any partitioning)."""
+        manifest = self.read_manifest(step)
         d = os.path.join(self.directory, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
         t_leaves, treedef = jax.tree.flatten(template)
         assert manifest["n_leaves"] == len(t_leaves), (
             f"checkpoint has {manifest['n_leaves']} leaves; template has "
@@ -118,8 +201,18 @@ class Checkpointer:
         return jax.tree.unflatten(treedef, out)
 
     def restore_latest(self, template: Any, shardings: Any = None):
-        steps = self.all_steps()
-        if not steps:
-            return None
-        step = steps[-1]
-        return self.restore(template, step, shardings), step
+        """Restore the newest *readable* committed step.
+
+        A truncated manifest or a missing/corrupt leaf file (a crash can
+        tear anything that was not atomically committed, and disks rot)
+        logs a warning and falls back to the previous committed step
+        instead of raising mid-recovery; returns None when no step is
+        restorable."""
+        for step in reversed(self.all_steps()):
+            try:
+                return self.restore(template, step, shardings), step
+            except Exception as e:  # noqa: BLE001 — fall back to older step
+                log.warning("checkpoint step %d unreadable (%r); "
+                            "falling back to the previous committed step",
+                            step, e)
+        return None

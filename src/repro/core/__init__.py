@@ -4,7 +4,14 @@ from .delta import propagate_coo, propagate_factorized
 from .indicators import IndicatorState, add_indicators, gyo_residual, indicator_of, is_acyclic
 from .ivm import IVMEngine, canonical_state
 from .plan import PlanCache, TriggerPlan, compile_trigger, execute_trigger
-from .shard import ShardPlan, ShardSpec, make_mesh, plan_shards, shard_executor
+from .shard import (
+    ShardPlan,
+    ShardSpec,
+    make_mesh,
+    plan_shards,
+    replan_shards,
+    shard_executor,
+)
 from .stream import (
     PreparedStream,
     StreamCapacityError,
@@ -12,6 +19,7 @@ from .stream import (
     capacity_segments,
     check_stream_capacity,
     prepare_stream,
+    split_segments,
 )
 from .materialize import choose_materialized, gather_scatter_profile, views_on_path
 from .storage import (
@@ -20,6 +28,8 @@ from .storage import (
     ViewStorage,
     apply_storage_plan,
     as_dense,
+    export_layout,
+    layout_template,
     make_base_relation,
     plan_storage,
     view_nbytes,
@@ -53,9 +63,11 @@ __all__ = [
     "canonical_state", "capacity_segments", "chain", "check_stream_capacity",
     "choose_materialized", "compile_trigger",
     "contract_dense", "count_ring", "evaluate_view", "execute_trigger",
-    "gather_scatter_profile", "gyo_residual", "heuristic_order",
-    "indicator_of", "is_acyclic", "lift_relation", "make_base_relation",
+    "export_layout", "gather_scatter_profile", "gyo_residual",
+    "heuristic_order", "indicator_of", "is_acyclic", "layout_template",
+    "lift_relation", "make_base_relation",
     "make_mesh", "marginalize_dense", "plan_shards", "plan_storage",
     "prepare_stream", "propagate_coo", "propagate_factorized",
-    "shard_executor", "sum_ring", "view_nbytes", "views_on_path",
+    "replan_shards", "shard_executor", "split_segments", "sum_ring",
+    "view_nbytes", "views_on_path",
 ]

@@ -205,11 +205,25 @@ def plan_shards(engine, rels: Sequence[str] | None = None,
     return ShardPlan(mesh=mesh, axis_name=axis_name, specs=specs)
 
 
-def shard_executor(engine, devices=None, rels=None):
+def replan_shards(engine, old_plan: ShardPlan | None = None,
+                  devices=None) -> ShardPlan:
+    """Re-derive a plan for the *current* devices — the mesh-elastic leg
+    of crash recovery: checkpoints store logical arrays, so a run killed
+    on one mesh restores onto whatever mesh the restarted job has, and
+    only the placement plan (not the checkpoint) must be rebuilt.  The
+    old plan's axis name carries over; everything else — mesh, and with
+    it every divisibility-driven shard/replicate decision — is derived
+    fresh (a view whose axis divided 4 devices may not divide 3)."""
+    axis_name = old_plan.axis_name if old_plan is not None else AXIS
+    return plan_shards(engine, devices=devices, axis_name=axis_name)
+
+
+def shard_executor(engine, devices=None, rels=None, checkpoint=None):
     """Convenience: derive a plan, place the engine's state under it, and
-    return a mesh-aware ``StreamExecutor``."""
+    return a mesh-aware ``StreamExecutor`` (optionally durable — see
+    ``StreamExecutor.checkpoint``)."""
     from .stream import StreamExecutor
 
     plan = plan_shards(engine, rels=rels, devices=devices)
     engine.shard_state(plan)
-    return StreamExecutor(engine, shard=plan)
+    return StreamExecutor(engine, shard=plan, checkpoint=checkpoint)

@@ -704,3 +704,30 @@ def grow_if_loaded(rel, budget: int = 0):
     if cap != rel.capacity:
         rel = rel.rehash(cap)  # also compacts ring-zero zombies
     return rel
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint layout export/import (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+def export_layout(rel) -> dict:
+    """JSON-serializable physical-layout descriptor of a view's storage.
+
+    A checkpoint stores leaves positionally; to rebuild the restore
+    *template* the layout must pin everything that determines leaf shapes
+    but is not part of the engine's logical definition — for sparse views
+    that is the hash-table capacity (a leaf shape, not pytree aux), which
+    drifts at runtime via rehash/growth and rarely matches a freshly built
+    engine's."""
+    if isinstance(rel, SparseRelation):
+        return {"kind": "sparse", "capacity": rel.capacity}
+    return {"kind": "dense"}
+
+
+def layout_template(rel, layout: Mapping) -> "ViewStorage":
+    """An all-zeros view with ``rel``'s logical definition (schema, ring,
+    domains) but the checkpointed physical layout — the shape-exact
+    template :meth:`Checkpointer.restore` requires."""
+    if layout.get("kind") == "sparse":
+        return SparseRelation.zeros(rel.schema, rel.ring, rel.domains,
+                                    capacity=int(layout["capacity"]))
+    return DenseRelation.zeros(rel.schema, rel.ring, rel.domains)

@@ -88,6 +88,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime import faults
+
 from . import plan as plan_mod
 from . import storage as storage_mod
 from .ivm import IVMEngine, canonical_state
@@ -301,6 +303,23 @@ def capacity_segments(engine: IVMEngine, stream):
     return segments
 
 
+def split_segments(segments, max_updates: int | None):
+    """Subdivide capacity segments so no segment spans more than
+    ``max_updates`` stream updates — the durability knob: capacity
+    segmentation only splits where a sparse table must grow, which on a
+    dense-only (or generously-sized) engine is never, so a checkpointed
+    run caps boundary spacing independently of storage pressure.  The
+    pre-segment rehash (``grow_caps``) stays attached to the first
+    chunk."""
+    if max_updates is None:
+        return segments
+    out = []
+    for sub, grow in segments:
+        for lo in range(0, len(sub), max_updates):
+            out.append((sub[lo:lo + max_updates], grow if lo == 0 else {}))
+    return out
+
+
 def prepare_stream(
     engine: IVMEngine, stream: Sequence[tuple[str, COOUpdate]],
     check_capacity: bool = True,
@@ -421,16 +440,29 @@ class StreamExecutor:
     reads to the plan's collectives.  A rehash between capacity segments
     keeps the plan valid: power-of-two capacities stay divisible by the
     mesh, so placement decisions survive growth.
+
+    ``checkpoint`` (a :class:`repro.checkpoint.stream_state.
+    StreamCheckpointer`) makes raw engine-state runs *durable*: the run
+    always takes the segmented path (further subdivided by the
+    checkpointer's ``segment_updates`` cap), and every segment boundary
+    snapshots the engine asynchronously — the save's device copies
+    dispatch while the next segment's admission proceeds, mirroring how
+    admission already overlaps execution.  :meth:`resume` restores the
+    newest committed snapshot and replays the stream from its offset,
+    re-deriving the shard plan for the current device count
+    (mesh-elastic).
     """
 
-    def __init__(self, engine: IVMEngine, shard=None):
+    def __init__(self, engine: IVMEngine, shard=None, checkpoint=None):
         self.engine = engine
         self.shard = shard
+        self.checkpoint = checkpoint
         self._compiled: dict[Any, Any] = {}
         #: shared prep-op keys of the last rounds build (CSE telemetry)
         self.last_shared_ops: tuple = ()
-        #: per-segment admit/dispatch host seconds of the last segmented
-        #: run (the pipeline-overlap telemetry BENCH_stream records)
+        #: per-segment admit/dispatch/save host seconds of the last
+        #: segmented run (the pipeline-overlap telemetry BENCH_stream
+        #: records)
         self.last_segment_stats: list = []
 
     # ------------------------------------------------------- mutable leaves
@@ -567,7 +599,8 @@ class StreamExecutor:
 
     # ------------------------------------------------------------------ run
     def run(self, stream_or_prepared, state=None, update_engine: bool = True,
-            donate_input: bool = False, pipeline: bool = True):
+            donate_input: bool = False, pipeline: bool = True,
+            _offset: int = 0):
         """Apply the whole stream in one fused call; returns the new state.
 
         Unless ``donate_input=True``, the input state is copied before the
@@ -603,7 +636,14 @@ class StreamExecutor:
                     "donating the engine's own state without updating the "
                     "engine would leave it pointing at deleted buffers")
                 segments = self._capacity_segments(stream)
-                if len(segments) > 1 or segments[0][1]:
+                if self.checkpoint is not None:
+                    assert update_engine, (
+                        "a checkpointed run must update the engine — "
+                        "boundary snapshots capture the engine's state")
+                    segments = split_segments(
+                        segments, self.checkpoint.segment_updates)
+                if (self.checkpoint is not None or len(segments) > 1
+                        or segments[0][1]):
                     saved = None
                     if not update_engine:
                         # snapshot the container dicts, not just the live
@@ -616,7 +656,8 @@ class StreamExecutor:
                                  dict(self.engine.indicators))
                     try:
                         new_state = self._run_segmented(segments,
-                                                        pipeline=pipeline)
+                                                        pipeline=pipeline,
+                                                        base_offset=_offset)
                     finally:
                         if saved is not None:
                             self.engine.set_state(saved)
@@ -668,17 +709,24 @@ class StreamExecutor:
         stage overlaps the previous segment's execution."""
         engine = self.engine
         t0 = time.perf_counter()
+        faults.crossing("mid_admit", updates=len(sub_stream))
         if grow_caps:
             engine.views = {
                 name: (v.rehash(grow_caps[name]) if name in grow_caps
                        else v)
                 for name, v in engine.views.items()
             }
+            # tables carry the grown capacities now, but nothing compiled
+            # (or checkpointed) against them yet — the torn state the
+            # post-rehash recovery path must survive
+            faults.crossing("post_rehash_pre_recompile",
+                            grown=sorted(grow_caps))
         prepared = prepare_stream(engine, sub_stream, check_capacity=False)
         self.compiled(prepared)
         return prepared, time.perf_counter() - t0
 
-    def _run_segmented(self, segments, pipeline: bool = True):
+    def _run_segmented(self, segments, pipeline: bool = True,
+                       base_offset: int = 0):
         """Two-deep pipelined segment loop: while segment i's compiled
         program executes on device, segment i+1 is *admitted* — its
         rehash dispatched, its xs stacked and uploaded, its program
@@ -693,9 +741,23 @@ class StreamExecutor:
         ``pipeline=False`` blocks on each segment's result before
         admitting the next — the serialized baseline the BENCH_stream
         ``segmented_pipeline`` row compares against.  Per-segment
-        admit/dispatch host times land in ``last_segment_stats``."""
+        admit/dispatch host times land in ``last_segment_stats``.
+
+        With a :attr:`checkpoint` attached, every segment boundary
+        snapshots the engine: the save dispatches device copies of the
+        fresh state *before* the next segment's program donates the
+        originals, then the writer thread's device→host transfer and
+        filesystem commit overlap that segment's admission + execution —
+        checkpointing rides the same overlap discipline as admission.
+        The final boundary save is awaited so a completed run is durable
+        (and a writer failure surfaces here, not silently).  Boundary
+        steps are numbered by *cumulative stream offset*
+        (``base_offset`` + updates applied), which is what
+        :meth:`resume` uses as its replay cursor."""
         stats: list = []
         state = None
+        ck = self.checkpoint
+        offset = base_offset
         prepared, admit_s = self._admit_segment(*segments[0])
         for i in range(len(segments)):
             n_steps = prepared.n_steps
@@ -710,9 +772,76 @@ class StreamExecutor:
             if not pipeline:
                 jax.block_until_ready(state)
             dispatch_s = time.perf_counter() - t0
+            offset += len(segments[i][0])
+            faults.crossing("mid_segment", segment=i, offset=offset)
+            save_s = 0.0
+            if ck is not None:
+                t1 = time.perf_counter()
+                ck.save_boundary(self.engine, offset=offset, segment=i,
+                                 blocking=not pipeline)
+                if i + 1 == len(segments):
+                    ck.wait()  # a finished run is durably checkpointed
+                save_s = time.perf_counter() - t1
             stats.append(dict(segment=i, n_steps=n_steps,
-                              admit_s=admit_s, dispatch_s=dispatch_s))
+                              admit_s=admit_s, dispatch_s=dispatch_s,
+                              save_s=save_s))
             if i + 1 < len(segments):
                 prepared, admit_s = self._admit_segment(*segments[i + 1])
         self.last_segment_stats = stats
         return state
+
+    # --------------------------------------------------------------- recovery
+    def resume(self, stream, checkpoint=None, pipeline: bool = True):
+        """Replay-from-offset recovery: restore the newest committed
+        snapshot and continue ``stream`` from where it left off.
+
+        ``stream`` is the *full* raw update stream of the original run
+        (replay determinism: recovery re-derives everything else —
+        capacities, segments, plans — from the restored state plus the
+        remaining updates).  The restored snapshot's ``offset`` says how
+        many leading updates are already applied; they are skipped, the
+        rest runs through the normal checkpointed segmented path, so a
+        crash *during recovery* recovers the same way.
+
+        Mesh-elastic: snapshots hold logical (unsharded) arrays, so a
+        mesh-aware executor re-derives its :class:`ShardPlan` against the
+        *current* devices and re-places the restored state — a run killed
+        on 4 devices resumes on 1 or 2 (or vice versa).  Compiled stream
+        programs are dropped on replan (their GSPMD partitioning is baked
+        against the old mesh and the :attr:`PreparedStream.signature`
+        does not carry it).
+
+        When no committed snapshot exists yet (first boundary never
+        reached, or a kill landed before the first commit), a blocking
+        offset-0 baseline snapshot is written first — establishing the
+        invariant that a resumed run *always* restarts from a snapshot,
+        never from a partially-advanced live engine."""
+        ck = checkpoint if checkpoint is not None else self.checkpoint
+        assert ck is not None, (
+            "resume needs a StreamCheckpointer (pass checkpoint= or "
+            "construct the executor with one)")
+        self.checkpoint = ck
+        # an interrupted run may have died with an async save in flight
+        # (or a captured writer failure); recovery restarts from the last
+        # committed step regardless
+        ck.ckpt.discard_pending()
+        stream = list(stream)
+        meta = ck.restore_into(self.engine)
+        offset = int(meta["offset"]) if meta is not None else 0
+        if self.shard is not None:
+            from . import shard as shard_mod
+
+            self.shard = shard_mod.replan_shards(self.engine, self.shard)
+            self._compiled.clear()
+            self.engine.shard_state(self.shard)
+        if meta is None:
+            ck.save_boundary(self.engine, offset=0, segment=-1,
+                             blocking=True)
+        remaining = stream[offset:]
+        assert 0 <= offset <= len(stream), (
+            f"snapshot offset {offset} exceeds the replayed stream "
+            f"({len(stream)} updates) — wrong stream or checkpoint dir?")
+        if not remaining:
+            return self.engine.state
+        return self.run(remaining, update_engine=True, pipeline=pipeline,
+                        _offset=offset)

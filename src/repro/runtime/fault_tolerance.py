@@ -6,6 +6,13 @@ What runs where:
     around the trainer: a step function that raises (preempted host, XLA
     error, NaN guard) triggers restore-from-latest-checkpoint and
     continuation, with exponential backoff and a restart budget.
+  * ``StreamSupervisor.run`` — the same restart discipline specialized to
+    the IVM stream executor: each attempt is ``executor.resume(stream)``
+    (restore newest committed snapshot, replay from its offset), failures
+    back off exponentially against a restart budget, and a non-finite
+    guard rejects runs whose float view payloads picked up NaN/Inf
+    (a poisoned ring value scatter-propagates through every later
+    boundary snapshot — better to fail the run than persist it).
   * ``StragglerMonitor`` — per-step deadline tracking with EWMA baseline;
     on a real pod the action is re-dispatching the slow host's shard /
     alerting; here it records and exposes the decision.
@@ -60,6 +67,69 @@ class Supervisor:
                 step = restore_fn()
         save_fn(step)
         return step, restarts, log
+
+
+# ---------------------------------------------------------------------------
+# Stream-level supervision (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StreamSupervisor:
+    """Restart loop over ``StreamExecutor.resume``.
+
+    Every attempt — including the first — goes through ``resume``: it
+    establishes the offset-0 baseline snapshot before any update runs,
+    so a failure at *any* later point (mid-segment, mid-admit,
+    mid-checkpoint-write) restarts from a committed snapshot, never from
+    a partially-advanced live engine.  Exceptions back off exponentially
+    (``backoff_s * 2**(restarts-1)``) against ``max_restarts``; budget
+    exhaustion re-raises chained to the last failure.  With
+    ``nan_is_failure`` (default), a completed run whose float view
+    payloads contain NaN/Inf is treated as failed *before* its final
+    snapshot can be trusted."""
+
+    max_restarts: int = 3
+    backoff_s: float = 0.1
+    nan_is_failure: bool = True
+
+    def run(self, executor, stream):
+        """Drive ``executor.resume(stream)`` to completion.
+        Returns (final_state, restarts, log)."""
+        stream = list(stream)
+        restarts = 0
+        log: list[dict] = []
+        while True:
+            try:
+                state = executor.resume(stream)
+                if self.nan_is_failure:
+                    self._check_finite(executor.engine)
+                log.append({"restarts": restarts, "ok": True})
+                return state, restarts, log
+            except Exception as e:  # noqa: BLE001 — restart path
+                restarts += 1
+                log.append({"restarts": restarts, "failure": repr(e)})
+                if restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"restart budget exhausted after {restarts - 1} "
+                        "restarts") from e
+                time.sleep(self.backoff_s * (2 ** (restarts - 1)))
+
+    @staticmethod
+    def _check_finite(engine) -> None:
+        """Raise FloatingPointError if any float view payload is
+        non-finite (the float-ring analogue of the trainer's NaN-loss
+        guard; integer rings vacuously pass)."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        for name, view in engine.views.items():
+            for leaf in jax.tree.leaves(view):
+                if not jnp.issubdtype(jnp.asarray(leaf).dtype,
+                                      jnp.floating):
+                    continue
+                if not bool(np.asarray(jnp.all(jnp.isfinite(leaf)))):
+                    raise FloatingPointError(
+                        f"non-finite payload in view {name!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,563 @@
+"""Durable stream execution: checkpointing, replay-from-offset recovery,
+and chaos-tested fault injection (DESIGN.md §10).
+
+Layers under test:
+
+* ``Checkpointer`` hardening — async writer failures re-raise instead of
+  silently "committing", stale ``*.tmp`` dirs are swept, and a torn or
+  corrupt newest step falls back to the previous committed one.
+* ``StreamCheckpointer`` — layout-aware snapshots: sparse capacities and
+  zombie occupancy survive the round-trip, so capacity budgeting after a
+  restore matches the uninterrupted run.
+* ``StreamExecutor.resume`` — every in-process injection point
+  (mid-segment, mid-admit, post-rehash-pre-recompile, mid-checkpoint-
+  write) recovers to a final state bit-identical to the uninterrupted
+  run, across scan/rounds/switch dispatch × dense/sparse storage.
+* subprocess chaos — a kill-9 mid-segment (no atexit, no finally: the
+  torn state a preempted worker leaves) followed by an in-parent resume
+  on a *different* device count (mesh-elastic).
+* ``Supervisor`` / ``StreamSupervisor`` / ``StragglerMonitor`` /
+  ``ClusterState`` — restart budgets, backoff sequencing, NaN-guard
+  toggling, elastic mesh shrink/regrow.
+
+Payloads are integer-valued float32 throughout the equivalence tests:
+every accumulation order is exact, so "recovered == uninterrupted" is
+literal array equality even across segment re-splits and mesh changes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.stream_state import StreamCheckpointer
+from repro.core import (COOUpdate, DenseRelation, IVMEngine, Query,
+                        SparseRelation, StreamExecutor, capacity_segments,
+                        chain, shard_executor, split_segments, sum_ring)
+from repro.runtime import faults
+from repro.runtime.fault_tolerance import (ClusterState, StreamSupervisor,
+                                           Supervisor)
+
+
+@pytest.fixture(autouse=True)
+def _disarm_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+# ---------------------------------------------------------------------------
+# Checkpointer hardening (satellites)
+# ---------------------------------------------------------------------------
+def test_async_writer_error_reraised_not_swallowed(tmp_path):
+    """An exception in the writer thread must surface on the next
+    wait()/save() — before this fix the next save joined the dead thread
+    and carried on as if the prior save had committed."""
+    ck = Checkpointer(str(tmp_path))
+    tree = {"a": jnp.arange(4)}
+    with faults.inject("mid_checkpoint_write"):
+        ck.save(tree, 1, blocking=False)
+        with pytest.raises(faults.InjectedFault):
+            ck.wait()
+    assert ck.all_steps() == []  # nothing committed
+    # the error is consumed: the checkpointer is usable again
+    ck.save(tree, 2, blocking=False)
+    ck.wait()
+    assert ck.all_steps() == [2]
+
+
+def test_async_writer_error_reraised_on_next_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"a": jnp.ones(3)}
+    with faults.inject("mid_checkpoint_write"):
+        ck.save(tree, 1, blocking=False)
+        with pytest.raises(faults.InjectedFault):
+            ck.save(tree, 2)  # surfaces the captured failure first
+
+
+def test_stale_tmp_dirs_swept_on_init(tmp_path):
+    torn = tmp_path / "step_00000007.tmp"
+    torn.mkdir()
+    (torn / "leaf_0.npy").write_bytes(b"torn")
+    Checkpointer(str(tmp_path))
+    assert not torn.exists()
+
+
+def test_restore_latest_falls_back_past_corrupt_steps(tmp_path):
+    """A truncated manifest or a missing leaf file must log-and-fall-back
+    to the previous committed step, not raise mid-recovery."""
+    ck = Checkpointer(str(tmp_path), keep=5)
+    tree = {"a": jnp.arange(3, dtype=jnp.int32)}
+    ck.save(tree, 1)
+    ck.save(jax.tree.map(lambda x: x + 10, tree), 2)
+    ck.save(jax.tree.map(lambda x: x + 20, tree), 3)
+    # step 3: truncated manifest; step 2: missing leaf
+    (tmp_path / "step_00000003" / "manifest.json").write_text('{"step": 3,')
+    os.remove(tmp_path / "step_00000002" / "leaf_0.npy")
+    restored, step = ck.restore_latest(tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]), [0, 1, 2])
+    # nothing restorable -> None, still no raise
+    assert Checkpointer(str(tmp_path / "empty")).restore_latest(tree) is None
+
+
+def test_kill_during_checkpoint_write_never_corrupts_latest(tmp_path):
+    """A failure between the tmp write and the atomic rename leaves the
+    newest *committed* step untouched and restorable."""
+    ck = Checkpointer(str(tmp_path))
+    tree = {"a": jnp.arange(5, dtype=jnp.float32)}
+    ck.save(tree, 1)
+    with faults.inject("mid_checkpoint_write"):
+        with pytest.raises(faults.InjectedFault):
+            ck.save(jax.tree.map(lambda x: x * 2, tree), 2)
+    assert ck.all_steps() == [1]
+    restored, step = ck.restore_latest(tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(5, dtype=np.float32))
+    # the torn tmp dir of step 2 is swept by the next (restarted) process
+    assert (tmp_path / "step_00000002.tmp").exists()
+    Checkpointer(str(tmp_path))
+    assert not (tmp_path / "step_00000002.tmp").exists()
+
+
+# ---------------------------------------------------------------------------
+# chaos harness: deterministic engines/streams across dispatch × storage
+# ---------------------------------------------------------------------------
+CH_DOMS = dict(A=64, B=64, C=3)
+
+SCHEDULES = {
+    "scan": ["R"] * 8,
+    "rounds": ["R", "T"] * 4,
+    "switch": ["R", "R", "T", "R", "T", "T", "R", "R"],
+}
+
+
+def chaos_query():
+    return Query(relations={"R": ("A", "B"), "T": ("B", "C")},
+                 free_vars=("A",), ring=sum_ring(), domains=CH_DOMS,
+                 lifts={"C": ("value",)})
+
+
+def chaos_db(seed):
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+
+    def rel(schema):
+        shape = tuple(CH_DOMS[v] for v in schema)
+        mult = np.zeros(shape, np.float32)
+        idx = tuple(rng.integers(0, d, size=8) for d in shape)
+        np.add.at(mult, idx, 1.0)
+        return DenseRelation(tuple(schema), ring, {"v": jnp.asarray(mult)})
+
+    return {"R": rel("AB"), "T": rel("BC")}
+
+
+def chaos_stream(q, sched_key, seed, B=24):
+    rng = np.random.default_rng(seed)
+    out = []
+    for rel in SCHEDULES[sched_key]:
+        sch = q.relations[rel]
+        keys = np.stack([rng.integers(0, CH_DOMS[v], size=B) for v in sch],
+                        axis=1).astype(np.int32)
+        vals = rng.integers(-2, 3, size=B).astype(np.float32)
+        out.append((rel, COOUpdate(sch, jnp.asarray(keys),
+                                   {"v": jnp.asarray(vals)})))
+    return out
+
+
+def chaos_engine(storage, seed=3):
+    return IVMEngine.build(chaos_query(), chaos_db(seed),
+                           var_order=chain(["A", "B"], {"B": [["C"]]}),
+                           storage=storage)
+
+
+def chaos_result(engine):
+    return np.asarray(engine.result().payload["v"])
+
+
+_REF_CACHE: dict = {}
+
+
+def chaos_reference(storage, sched_key):
+    """Final root view of the uninterrupted run (memoized per config)."""
+    key = (storage, sched_key)
+    if key not in _REF_CACHE:
+        eng = chaos_engine(storage)
+        StreamExecutor(eng).run(chaos_stream(chaos_query(), sched_key, 11))
+        _REF_CACHE[key] = chaos_result(eng)
+    return _REF_CACHE[key]
+
+
+def run_killed_then_resumed(tmp_path, storage, sched_key, point, at,
+                            segment_updates=3):
+    """Run checkpointed under an armed fault; simulate process death by
+    discarding the engine/executor; resume on a fresh engine + executor
+    sharing only the checkpoint directory.  Returns the recovered root
+    view."""
+    q = chaos_query()
+    stream = chaos_stream(q, sched_key, 11)
+    eng = chaos_engine(storage)
+    ex = StreamExecutor(eng, checkpoint=StreamCheckpointer(
+        str(tmp_path), segment_updates=segment_updates))
+    fired = False
+    try:
+        with faults.inject(point, at=at):
+            ex.resume(stream)
+    except faults.InjectedFault:
+        fired = True
+    del eng, ex  # the "process" died
+    eng2 = chaos_engine(storage)
+    ex2 = StreamExecutor(eng2, checkpoint=StreamCheckpointer(
+        str(tmp_path), segment_updates=segment_updates))
+    ex2.resume(stream)
+    return chaos_result(eng2), fired
+
+
+@given(st.integers(0, 2), st.integers(0, 2), st.integers(0, 1),
+       st.integers(0, 2))
+@settings(max_examples=6, deadline=None)
+def test_chaos_random_injection_recovers_bit_identical(
+        tmp_path_factory, point_i, at, storage_i, sched_i):
+    """The chaos sweep: kill at a random injection point/occurrence, in a
+    random dispatch mode × storage backend; the recovered final state is
+    bit-identical to the uninterrupted run.  When the drawn occurrence is
+    never reached the run simply completes — resume must then be a no-op
+    replay (offset == stream length) and equality still holds."""
+    point = ["mid_segment", "mid_admit", "post_rehash_pre_recompile"][point_i]
+    storage = ["dense", "sparse"][storage_i]
+    sched_key = list(SCHEDULES)[sched_i]
+    tmp = tmp_path_factory.mktemp("chaos")
+    got, _fired = run_killed_then_resumed(tmp, storage, sched_key, point, at)
+    np.testing.assert_array_equal(got, chaos_reference(storage, sched_key))
+
+
+def test_mid_segment_kill_recovers(tmp_path):
+    """Deterministic anchor for the sweep: the fault definitely fires."""
+    got, fired = run_killed_then_resumed(tmp_path, "sparse", "rounds",
+                                         "mid_segment", 1)
+    assert fired
+    np.testing.assert_array_equal(got, chaos_reference("sparse", "rounds"))
+
+
+def test_post_rehash_pre_recompile_kill_recovers(tmp_path):
+    """Death after sparse tables grew but before anything compiled (or
+    checkpointed) against the new layout: the snapshot still holds the
+    *old* capacities, and resume re-derives growth from scratch."""
+    got, fired = run_killed_then_resumed(tmp_path, "sparse", "scan",
+                                         "post_rehash_pre_recompile", 0,
+                                         segment_updates=None)
+    assert fired, "stream must actually trigger a rehash"
+    np.testing.assert_array_equal(got, chaos_reference("sparse", "scan"))
+
+
+def test_kill_during_boundary_checkpoint_write_recovers(tmp_path):
+    """A kill inside the boundary save's writer: the failure surfaces via
+    the executor's final wait (not silently), the latest committed
+    snapshot is intact, and resume converges."""
+    q = chaos_query()
+    stream = chaos_stream(q, "rounds", 11)
+    eng = chaos_engine("dense")
+    ck = StreamCheckpointer(str(tmp_path), segment_updates=2)
+    ex = StreamExecutor(eng, checkpoint=ck)
+    with faults.inject("mid_checkpoint_write", at=2) as inj:
+        with pytest.raises(faults.InjectedFault):
+            ex.resume(stream)
+    assert inj.fired
+    assert ck.ckpt.all_steps(), "earlier boundaries must have committed"
+    eng2 = chaos_engine("dense")
+    ex2 = StreamExecutor(eng2, checkpoint=StreamCheckpointer(
+        str(tmp_path), segment_updates=2))
+    ex2.resume(stream)
+    np.testing.assert_array_equal(chaos_result(eng2),
+                                  chaos_reference("dense", "rounds"))
+
+
+def test_resume_without_checkpointed_run_is_cold_start(tmp_path):
+    """resume() on an empty directory = run from offset 0, writing the
+    offset-0 baseline snapshot first (the resume-always-has-a-snapshot
+    invariant)."""
+    q = chaos_query()
+    stream = chaos_stream(q, "scan", 11)
+    eng = chaos_engine("dense")
+    ck = StreamCheckpointer(str(tmp_path), segment_updates=4)
+    ex = StreamExecutor(eng, checkpoint=ck)
+    ex.resume(stream)
+    np.testing.assert_array_equal(chaos_result(eng),
+                                  chaos_reference("dense", "scan"))
+    assert 0 in ck.ckpt.all_steps() or len(ck.ckpt.all_steps()) >= 1
+
+
+def test_checkpointed_run_requires_update_engine(tmp_path):
+    eng = chaos_engine("dense")
+    ex = StreamExecutor(eng, checkpoint=StreamCheckpointer(str(tmp_path)))
+    with pytest.raises(AssertionError, match="checkpointed run"):
+        ex.run(chaos_stream(chaos_query(), "scan", 11),
+               update_engine=False)
+
+
+# ---------------------------------------------------------------------------
+# snapshot fidelity: capacities, zombies, occupancy budgets
+# ---------------------------------------------------------------------------
+def test_snapshot_preserves_sparse_layout_zombies_and_budgets(tmp_path):
+    """Restoring must reproduce the sparse tables *physically*: capacity
+    (a leaf shape, invisible to a fresh engine's planner) and zombie
+    occupancy (deleted keys hold their slot until a rehash), so
+    capacity_segments budgets the remaining stream identically to the
+    uninterrupted run."""
+    q = chaos_query()
+    eng = chaos_engine("sparse")
+    ex = StreamExecutor(eng)
+    grow = chaos_stream(q, "scan", 21)          # forces rehash growth
+    ex.run(grow)
+    # deletes drive payloads to ring zero but keep slots occupied
+    rel, upd = grow[0]
+    neg = COOUpdate(upd.schema, upd.keys,
+                    {"v": -jnp.asarray(upd.payload["v"])})
+    eng.apply_update(rel, neg)
+    caps = {n: v.capacity for n, v in eng.views.items()
+            if isinstance(v, SparseRelation)}
+    slots = {n: v.num_slots_used_sync() for n, v in eng.views.items()
+             if isinstance(v, SparseRelation)}
+    assert any(s > 0 for s in slots.values())
+
+    ck = StreamCheckpointer(str(tmp_path))
+    ck.save_boundary(eng, offset=9, segment=0, blocking=True)
+    eng2 = chaos_engine("sparse")  # fresh planner-chosen capacities
+    meta = ck.restore_into(eng2)
+    assert meta["offset"] == 9
+    for n in caps:
+        assert eng2.views[n].capacity == caps[n]
+        assert eng2.views[n].num_slots_used_sync() == slots[n]
+    np.testing.assert_array_equal(chaos_result(eng2), chaos_result(eng))
+    # identical occupancy -> identical segmentation of any remaining work
+    rest = chaos_stream(q, "scan", 22)
+    seg_a = [(len(s), g) for s, g in capacity_segments(eng, rest)]
+    seg_b = [(len(s), g) for s, g in capacity_segments(eng2, rest)]
+    assert seg_a == seg_b
+
+
+def test_restore_into_falls_back_past_torn_snapshot(tmp_path):
+    q = chaos_query()
+    eng = chaos_engine("dense")
+    ck = StreamCheckpointer(str(tmp_path))
+    ck.save_boundary(eng, offset=2, segment=0, blocking=True)
+    StreamExecutor(eng).run(chaos_stream(q, "scan", 11)[:4])
+    ck.save_boundary(eng, offset=4, segment=1, blocking=True)
+    # tear the newest snapshot's manifest
+    (tmp_path / "step_00000004" / "manifest.json").write_text("{")
+    eng2 = chaos_engine("dense")
+    meta = ck.restore_into(eng2)
+    assert meta["offset"] == 2
+
+
+def test_split_segments_caps_boundary_spacing():
+    q = chaos_query()
+    eng = chaos_engine("dense")
+    stream = chaos_stream(q, "rounds", 11)
+    segs = capacity_segments(eng, stream)
+    assert len(segs) == 1, "dense engine never capacity-splits"
+    split = split_segments(segs, 3)
+    assert [len(s) for s, _ in split] == [3, 3, 2]
+    assert split_segments(segs, None) is segs
+
+
+# ---------------------------------------------------------------------------
+# subprocess kill-9 chaos (+ mesh-elastic resume on another device count)
+# ---------------------------------------------------------------------------
+_CHAOS_CHILD = r"""
+import sys
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import (COOUpdate, DenseRelation, IVMEngine, Query, chain,
+                        shard_executor, sum_ring)
+from repro.checkpoint.stream_state import StreamCheckpointer
+from repro.runtime import faults
+
+assert len(jax.devices()) == 4, jax.devices()
+CH_DOMS = dict(A=64, B=64, C=3)
+q = Query(relations={"R": ("A", "B"), "T": ("B", "C")}, free_vars=("A",),
+          ring=sum_ring(), domains=CH_DOMS, lifts={"C": ("value",)})
+rng = np.random.default_rng(3)
+def rel(schema):
+    shape = tuple(CH_DOMS[v] for v in schema)
+    mult = np.zeros(shape, np.float32)
+    idx = tuple(rng.integers(0, d, size=8) for d in shape)
+    np.add.at(mult, idx, 1.0)
+    return DenseRelation(tuple(schema), q.ring, {"v": jnp.asarray(mult)})
+db = {"R": rel("AB"), "T": rel("BC")}
+srng = np.random.default_rng(11)
+stream = []
+for r in ["R", "T"] * 4:
+    sch = q.relations[r]
+    keys = np.stack([srng.integers(0, CH_DOMS[v], size=24) for v in sch],
+                    axis=1).astype(np.int32)
+    vals = srng.integers(-2, 3, size=24).astype(np.float32)
+    stream.append((r, COOUpdate(sch, jnp.asarray(keys),
+                                {"v": jnp.asarray(vals)})))
+eng = IVMEngine.build(q, db, var_order=chain(["A", "B"], {"B": [["C"]]}),
+                      storage="sparse")
+ck = StreamCheckpointer(sys.argv[1], segment_updates=2)
+ex = shard_executor(eng, checkpoint=ck)
+# kill -9 after the second segment boundary: no atexit, no finally — the
+# same torn state a preempted or OOM-killed worker leaves behind
+faults.install(faults.FaultPlan("mid_segment", at=2, mode="kill9"))
+ex.resume(stream)
+print("UNREACHABLE: fault did not fire")
+sys.exit(3)
+"""
+
+
+def test_subprocess_kill9_mid_segment_then_mesh_elastic_resume(tmp_path):
+    """The acceptance-criteria chaos test: a 4-device child is SIGKILLed
+    mid-stream; the parent (different device count) resumes from the
+    child's checkpoints and converges bit-identically to an uninterrupted
+    single-process run."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    ckdir = str(tmp_path / "ck")
+    out = subprocess.run([sys.executable, "-c", _CHAOS_CHILD, ckdir],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == -9, (out.returncode, out.stdout[-500:],
+                                  out.stderr[-2000:])
+    ck = StreamCheckpointer(ckdir, segment_updates=2)
+    assert ck.ckpt.all_steps(), "child must have committed snapshots"
+    # resume on THIS process's device count (mesh-elastic: typically 1)
+    q = chaos_query()
+    eng = chaos_engine("sparse")
+    ex = shard_executor(eng, checkpoint=ck)
+    ex.resume(chaos_stream(q, "rounds", 11))
+    np.testing.assert_array_equal(chaos_result(eng),
+                                  chaos_reference("sparse", "rounds"))
+
+
+# ---------------------------------------------------------------------------
+# supervision: Supervisor backoff/NaN-guard, StreamSupervisor, ClusterState
+# ---------------------------------------------------------------------------
+def test_supervisor_backoff_sequencing(monkeypatch):
+    from repro.runtime import fault_tolerance as ft
+
+    sleeps = []
+    monkeypatch.setattr(ft.time, "sleep", sleeps.append)
+    state = {"fail_at": {2, 5, 7}, "ckpt": 0}
+
+    def step_fn(step):
+        if step in state["fail_at"]:
+            state["fail_at"].discard(step)
+            raise RuntimeError("injected")
+        return 0.5
+
+    sup = Supervisor(max_restarts=5, backoff_s=0.1)
+    done, restarts, _ = sup.run(
+        n_steps=10, step_fn=step_fn,
+        save_fn=lambda s: state.__setitem__("ckpt", s),
+        restore_fn=lambda: state["ckpt"], checkpoint_every=2)
+    assert done == 10 and restarts == 3
+    np.testing.assert_allclose(sleeps, [0.1, 0.2, 0.4])  # exponential
+
+
+def test_supervisor_nan_guard_toggle():
+    calls = {"n": 0}
+
+    def nan_once(step):
+        calls["n"] += 1
+        return float("nan") if calls["n"] == 1 else 0.1
+
+    with pytest.raises(RuntimeError, match="restart budget"):
+        Supervisor(max_restarts=0, backoff_s=0.0).run(
+            n_steps=3, step_fn=lambda s: float("nan"),
+            save_fn=lambda s: None, restore_fn=lambda: 0)
+    # guard off: non-finite losses complete without a restart
+    done, restarts, _ = Supervisor(
+        max_restarts=0, backoff_s=0.0, nan_is_failure=False).run(
+        n_steps=3, step_fn=lambda s: float("nan"),
+        save_fn=lambda s: None, restore_fn=lambda: 0)
+    assert done == 3 and restarts == 0
+    # guard on, failure transient: one restart then completion
+    done, restarts, _ = Supervisor(max_restarts=2, backoff_s=0.0).run(
+        n_steps=3, step_fn=nan_once, save_fn=lambda s: None,
+        restore_fn=lambda: 0)
+    assert done == 3 and restarts == 1
+
+
+def test_cluster_mesh_shrink_and_regrow():
+    cs = ClusterState(heartbeat_timeout_s=10.0)
+    for i in range(16):
+        cs.heartbeat(f"h{i}", n_chips=4, now=100.0)
+    assert cs.plan_mesh(model_parallel=4, now=101.0) == (16, 4)
+    for i in range(10):
+        cs.heartbeat(f"h{i}", n_chips=4, now=50.0)  # stale -> lost
+    assert cs.plan_mesh(model_parallel=4, now=101.0) == (4, 4)
+    for i in range(10):
+        cs.heartbeat(f"h{i}", n_chips=4, now=102.0)  # nodes return
+    assert cs.plan_mesh(model_parallel=4, now=103.0) == (16, 4)
+    with pytest.raises(RuntimeError, match="healthy chips"):
+        ClusterState().plan_mesh(model_parallel=4, now=0.0)
+
+
+def test_stream_supervisor_restarts_through_injected_fault(tmp_path):
+    """The stream-level restart loop: one injected mid-admit death, one
+    restart, final state identical to the uninterrupted run."""
+    q = chaos_query()
+    stream = chaos_stream(q, "rounds", 11)
+    eng = chaos_engine("dense")
+    ex = StreamExecutor(eng, checkpoint=StreamCheckpointer(
+        str(tmp_path), segment_updates=2))
+    faults.install(faults.FaultPlan("mid_admit", at=2))
+    try:
+        _, restarts, log = StreamSupervisor(backoff_s=0.0).run(ex, stream)
+    finally:
+        faults.clear()
+    assert restarts == 1
+    assert any("failure" in e for e in log)
+    np.testing.assert_array_equal(chaos_result(eng),
+                                  chaos_reference("dense", "rounds"))
+
+
+def test_stream_supervisor_budget_exhaustion(tmp_path):
+    eng = chaos_engine("dense")
+    ex = StreamExecutor(eng, checkpoint=StreamCheckpointer(str(tmp_path)))
+
+    class AlwaysDies:
+        engine = eng
+
+        def resume(self, stream):
+            raise RuntimeError("permanently broken")
+
+    with pytest.raises(RuntimeError, match="restart budget"):
+        StreamSupervisor(max_restarts=2, backoff_s=0.0).run(
+            AlwaysDies(), chaos_stream(chaos_query(), "scan", 11))
+
+
+def test_stream_supervisor_nonfinite_guard(tmp_path):
+    """A float ring poisoned with inf must fail the supervised run (every
+    restart replays the same poisoned stream, so the budget exhausts);
+    with the guard off the run completes."""
+    q = chaos_query()
+    stream = chaos_stream(q, "scan", 11)
+    rel, upd = stream[3]
+    stream[3] = (rel, COOUpdate(
+        upd.schema, upd.keys,
+        {"v": jnp.asarray(np.full(upd.batch, np.inf, np.float32))}))
+    eng = chaos_engine("dense")
+    ex = StreamExecutor(eng, checkpoint=StreamCheckpointer(
+        str(tmp_path / "a"), segment_updates=4))
+    with pytest.raises(RuntimeError, match="restart budget") as ei:
+        StreamSupervisor(max_restarts=1, backoff_s=0.0).run(ex, stream)
+    assert isinstance(ei.value.__cause__, FloatingPointError)
+    eng2 = chaos_engine("dense")
+    ex2 = StreamExecutor(eng2, checkpoint=StreamCheckpointer(
+        str(tmp_path / "b"), segment_updates=4))
+    _, restarts, _ = StreamSupervisor(
+        backoff_s=0.0, nan_is_failure=False).run(ex2, stream)
+    assert restarts == 0
