@@ -31,6 +31,11 @@ Three fused-stream sweeps, all written to ``BENCH_stream.json``:
   (the save *dispatch* — device copies + thread handoff — as distinct
   from the PR-5 admit/wait split), and the restore-to-first-segment
   latency of a resume.  Asserts checkpoint-on throughput ≥ 0.9× off.
+* **integrity** — admission validation and the audited Reevaluate pass
+  (DESIGN.md §11) on the housing ``pc=65536`` sparse stream and the
+  degree-m cofactor stream: validation-on vs -off walls under identical
+  segmentation, plus the audit-every-2-segments wall and per-pass audit
+  seconds.  Asserts validation-on throughput ≥ 0.9× off.
 
 Kernel-on on this CPU container means the ``compact_xla`` dispatch path
 (key-dedup compaction; the Pallas kernels themselves target TPU and are
@@ -443,6 +448,125 @@ def _checkpointing_leg(results, rows, seed: int = 0):
         shutil.rmtree(ckdir, ignore_errors=True)
 
 
+def _integrity_leg(results, rows, seed: int = 0):
+    """Admission-validation and audit-interval overhead (DESIGN.md §11)
+    on the housing ``pc=65536`` sparse stream and the degree-m cofactor
+    stream.
+
+    Three executors per dataset share the same segment structure
+    (``segment_updates=4``, so the comparison isolates integrity work
+    from segmentation): ``off`` — ``policy="permissive"``, no checks;
+    ``validate`` — ``policy="quarantine"``, the jit row validator + one
+    host sync per segment; ``audit`` — validation plus the audited
+    Reevaluate every 2 segments on a ``store_base=True`` engine (the
+    from-base recompute is the priced item; its engine also maintains
+    base relations, which is part of the honest audit cost).  Engine
+    state is container-snapshot-restored between passes so every pass
+    replays the identical trajectory against warm compile caches.
+    Acceptance gate: validation-on throughput ≥ 0.9× off."""
+    import jax
+
+    from repro.core import StreamExecutor
+    from repro.runtime.integrity import IntegrityConfig
+
+    ring = sum_ring()
+    big = dict(HOUSING_DOMS_BIG)
+    sq = Query(relations=HOUSING_RELATIONS, free_vars=(), ring=ring,
+               domains=big, lifts={"h2": ("value",)})
+    sdb, active = synth_low_fill_db(HOUSING_RELATIONS, big, ring,
+                                    np.random.default_rng(seed), "pc",
+                                    n_active=512)
+    sstream = update_stream(HOUSING_RELATIONS, big, ring,
+                            np.random.default_rng(seed + 1), 512, 12,
+                            key_pools={"pc": active})
+    cq = regression.cofactor_query(RETAILER_RELATIONS, RETAILER_DOMS)
+    cdb = synth_db(RETAILER_RELATIONS, RETAILER_DOMS, cq.ring,
+                   np.random.default_rng(seed))
+    cstream = update_stream(RETAILER_RELATIONS, RETAILER_DOMS, cq.ring,
+                            np.random.default_rng(seed + 2), 64, 12)
+    datasets = (("housing_sparse_pc65536", sq, sdb, housing_vo(), sstream),
+                ("retailer_cofactor_degree_m", cq, cdb, retailer_vo(),
+                 cstream))
+
+    for dataset, q, db, vo, stream in datasets:
+        n_tuples = sum(upd.batch for _, upd in stream)
+
+        def fresh(**kw):
+            return IVMEngine.build(q, db, var_order=vo, strategy="fivm",
+                                   **kw)
+
+        cfgs = {
+            "off": IntegrityConfig(policy="permissive", segment_updates=4),
+            "validate": IntegrityConfig(policy="quarantine",
+                                        segment_updates=4),
+            "audit": IntegrityConfig(policy="quarantine",
+                                     audit_interval=2, segment_updates=4),
+        }
+        execs = {
+            mode: StreamExecutor(fresh(store_base=(mode == "audit")),
+                                 integrity=cfg)
+            for mode, cfg in cfgs.items()
+        }
+
+        def one_pass(mode):
+            ex = execs[mode]
+            eng = ex.engine
+            saved = (dict(eng.views), dict(eng.base), dict(eng.indicators))
+            t0 = time.perf_counter()
+            state = ex.run(stream, pipeline=True)
+            jax.block_until_ready(state)
+            wall = time.perf_counter() - t0
+            eng.set_state(saved)
+            audit_s = sum(s.get("audit_s", 0.0)
+                          for s in ex.last_segment_stats)
+            admit_s = sum(s.get("admit_s", 0.0)
+                          for s in ex.last_segment_stats)
+            return wall, admit_s, audit_s
+
+        for mode in execs:
+            one_pass(mode)  # warm: compile segment programs + validator
+        walls = {m: float("inf") for m in execs}
+        admits, audits = {}, {}
+        for _ in range(5):  # interleaved best-of-5 (see pipeline leg)
+            for mode in execs:
+                wall, admit_s, audit_s = one_pass(mode)
+                if wall < walls[mode]:
+                    walls[mode] = wall
+                    admits[mode] = admit_s
+                    audits[mode] = audit_s
+        n_audits = sum(1 for s in execs["audit"].last_segment_stats
+                       if s["audit_s"] > 0)
+        v_ratio = walls["off"] / walls["validate"]
+        a_ratio = walls["off"] / walls["audit"]
+        row = dict(dataset=dataset, strategy="fivm",
+                   batch=stream[0][1].batch, n_batches=len(stream),
+                   leg="integrity",
+                   wall_validation_off_s=round(walls["off"], 4),
+                   wall_validation_on_s=round(walls["validate"], 4),
+                   wall_audit_on_s=round(walls["audit"], 4),
+                   validation_on_over_off_throughput=round(v_ratio, 3),
+                   audit_on_over_off_throughput=round(a_ratio, 3),
+                   admit_s_validation_on=round(admits["validate"], 4),
+                   audit_s_total=round(audits["audit"], 4),
+                   n_audits=n_audits,
+                   dead_letters=len(cfgs["validate"].dead_letters))
+        results.append(row)
+        rows.append((
+            f"stream/integrity/{dataset}/b={stream[0][1].batch}",
+            round(1e6 * walls["validate"] / n_tuples, 1),
+            f"wall_off={walls['off']:.3f}s;"
+            f"wall_validate={walls['validate']:.3f}s;"
+            f"wall_audit={walls['audit']:.3f}s;"
+            f"validate_tput_ratio={v_ratio:.2f};"
+            f"audit_tput_ratio={a_ratio:.2f};"
+            f"audit_s={audits['audit']:.3f}s;n_audits={n_audits}"))
+        assert v_ratio >= 0.9, (
+            f"{dataset}: admission validation costs more than 10% "
+            f"throughput: on={walls['validate']:.3f}s "
+            f"off={walls['off']:.3f}s ({v_ratio:.2f}x)")
+        assert len(cfgs["validate"].dead_letters) == 0  # clean stream
+
+
 def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
         strategies=("fivm", "fivm_1", "dbt", "reeval"), repeats: int = 5,
         json_path: str | None = JSON_PATH,
@@ -589,6 +713,9 @@ def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
 
     # -- segment-boundary checkpointing: durability cost + restore latency --
     _checkpointing_leg(results, rows, seed=seed)
+
+    # -- integrity: admission-validation + audit-interval overhead ---------
+    _integrity_leg(results, rows, seed=seed)
 
     # refactor guard: fused throughput vs the previous BENCH_stream.json
     if baseline_ratios:

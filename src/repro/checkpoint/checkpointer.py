@@ -42,6 +42,7 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any
 
 import jax
@@ -52,10 +53,28 @@ from repro.runtime import faults
 log = logging.getLogger("repro.checkpoint")
 
 
+class ChecksumError(RuntimeError):
+    """A leaf file's content does not match its manifest fingerprint —
+    the snapshot was corrupted *after* commit (bit rot, torn sector)."""
+
+
+#: error classes that mean "this snapshot directory is damaged" (as
+#: opposed to "the caller passed an incompatible template"): these are
+#: the classes :meth:`Checkpointer.restore_latest` and the stream
+#: checkpointer quarantine on, so retention (`keep=`) only ever counts
+#: restorable snapshots
+CORRUPTION_ERRORS = (ChecksumError, OSError, EOFError, ValueError, KeyError)
+
+
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 verify_checksums: bool = True):
         self.directory = directory
         self.keep = keep
+        #: verify per-leaf crc32 fingerprints on restore (DESIGN.md §11);
+        #: manifests without fingerprints (older snapshots) restore as
+        #: before — the check is backward compatible
+        self.verify_checksums = verify_checksums
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
@@ -65,11 +84,15 @@ class Checkpointer:
         self.last_write_seconds: float = 0.0
         self.total_write_seconds: float = 0.0
         self.saves_committed: int = 0
+        #: steps quarantined (renamed ``corrupt_step_*``) this process —
+        #: integrity telemetry for tests and the supervisor
+        self.quarantined: list[int] = []
         # sweep torn writes of a previous process: a ``*.tmp`` directory
-        # is by construction uncommitted (the rename is the commit)
+        # is by construction uncommitted (the rename is the commit), and
+        # a ``corrupt_step_*`` directory was already diagnosed unreadable
         for name in os.listdir(directory):
-            if name.endswith(".tmp"):
-                log.warning("sweeping stale checkpoint write %s", name)
+            if name.endswith(".tmp") or name.startswith("corrupt_step_"):
+                log.warning("sweeping stale checkpoint dir %s", name)
                 shutil.rmtree(os.path.join(directory, name),
                               ignore_errors=True)
 
@@ -133,7 +156,13 @@ class Checkpointer:
             "step": step,
             "n_leaves": len(host_leaves),
             "treedef": treedef_str,
-            "leaves": [{"shape": list(x.shape), "dtype": str(x.dtype)}
+            # per-leaf content fingerprint: restore re-hashes each leaf
+            # file and refuses a snapshot whose bytes changed after
+            # commit — the atomic rename protects against torn writes,
+            # the crc32 against silent post-commit corruption
+            "leaves": [{"shape": list(x.shape), "dtype": str(x.dtype),
+                        "crc32": zlib.crc32(np.ascontiguousarray(x)
+                                            .tobytes()) & 0xFFFFFFFF}
                        for x in host_leaves],
             "meta": meta or {},
         }
@@ -149,6 +178,10 @@ class Checkpointer:
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic commit
+        # bit-flip fault point: the snapshot is durable and GC-visible —
+        # a "bitflip" plan corrupts it here, post-commit
+        faults.crossing("snapshot_committed", step=step,
+                        path=os.path.join(final, "leaf_0.npy"))
         self.last_write_seconds = time.perf_counter() - t0
         self.total_write_seconds += self.last_write_seconds
         self.saves_committed += 1
@@ -193,6 +226,16 @@ class Checkpointer:
         out = []
         for i, (tl, sh) in enumerate(zip(t_leaves, sh_leaves)):
             x = np.load(os.path.join(d, f"leaf_{i}.npy"))
+            if self.verify_checksums:
+                want = manifest["leaves"][i].get("crc32")
+                if want is not None:
+                    got = zlib.crc32(np.ascontiguousarray(x)
+                                     .tobytes()) & 0xFFFFFFFF
+                    if got != want:
+                        raise ChecksumError(
+                            f"step {step} leaf_{i}.npy checksum mismatch "
+                            f"(manifest {want:#010x} != content {got:#010x})"
+                            " — snapshot corrupted after commit")
             assert tuple(x.shape) == tuple(tl.shape), (i, x.shape, tl.shape)
             if sh is not None:
                 out.append(jax.device_put(x, sh))
@@ -200,19 +243,43 @@ class Checkpointer:
                 out.append(jax.numpy.asarray(x, dtype=tl.dtype))
         return jax.tree.unflatten(treedef, out)
 
+    def quarantine_step(self, step: int) -> None:
+        """Take a damaged snapshot out of the restorable set: rename
+        ``step_<n>`` to ``corrupt_step_<n>`` so :meth:`all_steps` no
+        longer lists it — and therefore :meth:`_gc`'s ``keep=`` retention
+        only counts *restorable* snapshots (a corrupt newest step must
+        not push a good old one past the retention horizon).  Falls back
+        to deletion if the rename fails."""
+        src = os.path.join(self.directory, f"step_{step:08d}")
+        dst = os.path.join(self.directory, f"corrupt_step_{step:08d}")
+        try:
+            if os.path.exists(dst):
+                shutil.rmtree(dst)
+            os.rename(src, dst)
+        except OSError:
+            shutil.rmtree(src, ignore_errors=True)
+        self.quarantined.append(step)
+        log.warning("quarantined unrestorable checkpoint step %d", step)
+
     def restore_latest(self, template: Any, shardings: Any = None):
         """Restore the newest *readable* committed step.
 
-        A truncated manifest or a missing/corrupt leaf file (a crash can
-        tear anything that was not atomically committed, and disks rot)
-        logs a warning and falls back to the previous committed step
-        instead of raising mid-recovery; returns None when no step is
-        restorable."""
+        A truncated manifest, a missing/corrupt leaf file, or a checksum
+        mismatch (a crash can tear anything that was not atomically
+        committed, and disks rot) quarantines the damaged step and falls
+        back to the previous committed step instead of raising
+        mid-recovery; returns None when no step is restorable."""
         for step in reversed(self.all_steps()):
             try:
                 return self.restore(template, step, shardings), step
-            except Exception as e:  # noqa: BLE001 — fall back to older step
+            except CORRUPTION_ERRORS as e:
                 log.warning("checkpoint step %d unreadable (%r); "
                             "falling back to the previous committed step",
                             step, e)
+                self.quarantine_step(step)
+            except Exception as e:  # noqa: BLE001 — fall back to older step
+                # e.g. a template/structure mismatch: the snapshot itself
+                # may be fine for another caller — skip, don't quarantine
+                log.warning("checkpoint step %d not restorable into this "
+                            "template (%r); falling back", step, e)
         return None

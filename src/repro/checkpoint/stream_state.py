@@ -44,7 +44,7 @@ from repro.core import plan as plan_mod
 from repro.core import storage as storage_mod
 from repro.core.ivm import canonical_state
 
-from .checkpointer import Checkpointer
+from .checkpointer import CORRUPTION_ERRORS, Checkpointer
 
 log = logging.getLogger("repro.checkpoint")
 
@@ -126,10 +126,13 @@ class StreamCheckpointer:
         The restore template is rebuilt per step from the manifest's
         ``layouts`` (the engine's live capacities — or even backends —
         need not match the checkpoint's).  A step whose manifest or
-        leaves are torn logs and falls back to the previous committed
-        step.  Returns the restored step's ``meta`` (offset/segment/
-        layouts), or None when nothing is restorable; leaves arrive
-        unsharded — a mesh-aware caller re-places them (mesh-elastic)."""
+        leaves are torn, fail the checksum, or mismatch the snapshot's
+        *own* layout manifest is quarantined (``corrupt_step_*`` — out of
+        the restorable set and the ``keep=`` retention count) and the
+        restore falls back to the previous committed step.  Returns the
+        restored step's ``meta`` (offset/segment/layouts), or None when
+        nothing is restorable; leaves arrive unsharded — a mesh-aware
+        caller re-places them (mesh-elastic)."""
         for step in reversed(self.ckpt.all_steps()):
             try:
                 meta = self.ckpt.read_meta(step)
@@ -141,6 +144,15 @@ class StreamCheckpointer:
                 template = canonical_state(
                     (views_t, engine.base, engine.indicators))
                 state = self.ckpt.restore(template, step)
+            except CORRUPTION_ERRORS + (AssertionError,) as e:
+                # the template came from the snapshot's own manifest, so
+                # a leaf-shape assertion here is self-inconsistency of
+                # the snapshot — corruption, not a caller mismatch
+                log.warning(
+                    "snapshot step %d unreadable (%r); quarantining and "
+                    "falling back to the previous committed step", step, e)
+                self.ckpt.quarantine_step(step)
+                continue
             except Exception as e:  # noqa: BLE001 — fall back to older step
                 log.warning(
                     "snapshot step %d unreadable (%r); falling back to the "

@@ -72,6 +72,7 @@ class IVMEngine:
         storage: str | None = None,
         storage_overrides: Mapping[str, str] | None = None,
         storage_opts: Mapping | None = None,
+        store_base: bool | None = None,
     ) -> "IVMEngine":
         """Build an engine; ``storage`` selects the view-storage mode
         ("auto" | "dense" | "sparse"; default: ``REPRO_VIEW_STORAGE`` env
@@ -79,7 +80,15 @@ class IVMEngine:
         modeled domain product × fill).  ``storage_overrides`` forces a
         backend per view name; ``storage_opts`` are extra
         :func:`repro.core.storage.plan_storage` keywords (headroom,
-        thresholds, capacities)."""
+        thresholds, capacities).
+
+        ``store_base=True`` stores (and maintains, via each plan's
+        ``write_base``) *every* base relation even under fivm / dbt —
+        the prerequisite for the integrity layer's audited Reevaluate
+        reconciliation and ``reevaluate_from_base`` self-healing
+        (repro.runtime.integrity): views can only be recomputed from
+        base relations that are actually kept.  Default (``None``)
+        derives it from the strategy as before."""
         updatable = tuple(updatable if updatable is not None else query.relations)
         vo = var_order or heuristic_order(query)
         tree = build_view_tree(query, vo, fuse_chains=fuse_chains)
@@ -98,7 +107,7 @@ class IVMEngine:
         else:  # pragma: no cover
             raise ValueError(strategy)
 
-        store_base = strategy in ("fivm_1", "reeval")
+        store_base = strategy in ("fivm_1", "reeval") or bool(store_base)
         # indicator-bearing nodes need their base relation stored and all
         # children materialized when the indicator's relation is updatable
         indicators: dict[str, IndicatorState] = {}

@@ -1030,6 +1030,22 @@ def run_indicator_ops(ops, views: dict, indicators: dict, query: Query,
             raise TypeError(op)
 
 
+def reevaluate_store(engine, base) -> dict:
+    """The ``Reevaluate`` op's interpretation: evaluate the view tree
+    bottom-up from ``base`` relations, returning every node's view.
+
+    Shared by ``execute_trigger``'s reeval / first-order kinds and by the
+    integrity layer's audited reconciliation (repro.runtime.integrity,
+    DESIGN.md §11) — one interpreter, whether Reevaluate runs as a
+    maintenance strategy or as the self-healing ground truth.  Premarg
+    ``W:`` views are recomputed when the engine maintains them."""
+    store: dict = {}
+    premarg = any(name.startswith("W:") for name in engine.views)
+    evaluate_view(engine.tree, base, engine.query, store=store,
+                  premarg=premarg)
+    return store
+
+
 def execute_trigger(engine, plan: TriggerPlan, views, base, indicators,
                     upd, memo: Mapping | None = None):
     """Run a compiled trigger: the single execution entry shared by eager
@@ -1042,16 +1058,14 @@ def execute_trigger(engine, plan: TriggerPlan, views, base, indicators,
 
     if plan.kind == "reeval":
         base[plan.rel] = engine._bump_base(base[plan.rel], upd)
-        store: dict = {}
-        evaluate_view(engine.tree, base, query, store=store)
+        store = reevaluate_store(engine, base)
         views[engine.tree.name] = store[engine.tree.name]
         return views, base, indicators
 
     if plan.kind == "first_order":
         if isinstance(upd, FactorizedUpdate):
             upd = densify_update_to_coo(query, upd)
-        store: dict = {}
-        evaluate_view(engine.tree, base, query, store=store)
+        store = reevaluate_store(engine, base)
         from .indicators import indicator_of
 
         ind_dense = {

@@ -706,6 +706,23 @@ def grow_if_loaded(rel, budget: int = 0):
     return rel
 
 
+def occupancy_report(views: Mapping[str, ViewStorage]) -> dict[str, dict]:
+    """Host-sync occupancy snapshot of every sparse view: capacity, slots
+    used (zombies included — what the load-factor bound sees), and live
+    key count.  The telemetry the integrity layer's graceful-degradation
+    path records when it resegments/rehashes under capacity pressure
+    (DESIGN.md §11); never call from a trace or the replay hot loop."""
+    out: dict[str, dict] = {}
+    for name, v in views.items():
+        if isinstance(v, SparseRelation):
+            out[name] = {
+                "capacity": int(v.capacity),
+                "slots_used": int(v.num_slots_used_sync()),
+                "keys": int(v.num_keys_sync()),
+            }
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Checkpoint layout export/import (DESIGN.md §10)
 # ---------------------------------------------------------------------------

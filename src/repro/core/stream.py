@@ -89,6 +89,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime import faults
+from repro.runtime.fault_tolerance import StragglerMonitor
 
 from . import plan as plan_mod
 from . import storage as storage_mod
@@ -451,12 +452,32 @@ class StreamExecutor:
     newest committed snapshot and replays the stream from its offset,
     re-deriving the shard plan for the current device count
     (mesh-elastic).
+
+    ``integrity`` (a :class:`repro.runtime.integrity.IntegrityConfig`)
+    adds the runtime integrity layer (DESIGN.md §11): raw engine-state
+    runs take the segmented path so every segment's updates pass
+    validated admission (strict / quarantine / permissive), the audited
+    Reevaluate pass runs every ``audit_interval`` boundaries, and
+    capacity pressure degrades gracefully (emergency re-segmentation on
+    the segmented path, eager per-batch spill on explicit-state runs)
+    instead of raising :class:`StreamCapacityError`.  Validation and
+    audits read device values at admission/boundary time — integrity is
+    priced at segment boundaries, never inside the compiled hot loop.
+
+    Every segmented run also feeds the per-segment wall (admit +
+    dispatch) to a :class:`repro.runtime.fault_tolerance.
+    StragglerMonitor`; its EWMA verdicts ride in
+    :attr:`last_segment_stats` (``straggler`` / ``straggler_baseline``).
     """
 
-    def __init__(self, engine: IVMEngine, shard=None, checkpoint=None):
+    def __init__(self, engine: IVMEngine, shard=None, checkpoint=None,
+                 integrity=None, stragglers: StragglerMonitor | None = None):
         self.engine = engine
         self.shard = shard
         self.checkpoint = checkpoint
+        self.integrity = integrity
+        self.stragglers = (stragglers if stragglers is not None
+                           else StragglerMonitor())
         self._compiled: dict[Any, Any] = {}
         #: shared prep-op keys of the last rounds build (CSE telemetry)
         self.last_shared_ops: tuple = ()
@@ -464,6 +485,9 @@ class StreamExecutor:
         #: segmented run (the pipeline-overlap telemetry BENCH_stream
         #: records)
         self.last_segment_stats: list = []
+
+    def _integrity_active(self) -> bool:
+        return self.integrity is not None and self.integrity.active
 
     # ------------------------------------------------------- mutable leaves
     def _mutable_mask(self, prepared: PreparedStream) -> tuple[bool, ...]:
@@ -642,8 +666,14 @@ class StreamExecutor:
                         "boundary snapshots capture the engine's state")
                     segments = split_segments(
                         segments, self.checkpoint.segment_updates)
+                if self._integrity_active():
+                    # integrity boundaries must exist even when capacity
+                    # segmentation never splits (dense / generously-sized
+                    # engines): cap segment length like the checkpointer
+                    segments = split_segments(
+                        segments, self.integrity.segment_updates)
                 if (self.checkpoint is not None or len(segments) > 1
-                        or segments[0][1]):
+                        or segments[0][1] or self._integrity_active()):
                     saved = None
                     if not update_engine:
                         # snapshot the container dicts, not just the live
@@ -670,7 +700,19 @@ class StreamExecutor:
                 # explicit-state run: audit the state the program will
                 # actually mutate — the engine's own occupancy says
                 # nothing about the caller's tables
-                check_stream_capacity(self.engine, stream, views=state[0])
+                try:
+                    check_stream_capacity(self.engine, stream,
+                                          views=state[0])
+                except StreamCapacityError as e:
+                    if (self._integrity_active()
+                            and self.integrity.capacity_degrade):
+                        # graceful degradation (DESIGN.md §11): spill to
+                        # the eager per-batch path, which grows tables
+                        # host-side instead of overflow-dropping rows
+                        return self._eager_spill(
+                            stream, state, update_engine=update_engine,
+                            error=e)
+                    raise
                 prepared = prepare_stream(self.engine, stream,
                                           check_capacity=False)
         if state is None:
@@ -700,16 +742,39 @@ class StreamExecutor:
             self.engine.set_state(new_state)
         return new_state
 
-    def _admit_segment(self, sub_stream, grow_caps):
+    def _admit_segment(self, sub_stream, grow_caps, offset: int = 0):
         """Admission stage of the segment pipeline: dispatch the
         pre-segment rehash (device work queued on the previous segment's
         still-in-flight outputs), bucket/pad/stack the segment's updates
         (the host→device upload), and fetch its trigger plans + compiled
-        program entry.  Nothing here reads a device value, so the whole
-        stage overlaps the previous segment's execution."""
+        program entry.  Without an integrity config nothing here reads a
+        device value, so the whole stage overlaps the previous segment's
+        execution.
+
+        With integrity attached, admission additionally (a) runs
+        validated admission over the segment (strict raises *here*,
+        before the segment can run or snapshot; quarantine masks rows
+        into transparency), and (b) re-audits the capacity budget
+        against *live* occupancy — run-start budgets are conservative,
+        but quarantine repair and supervisor healing can replace tables
+        mid-run, so pressure found here degrades to an emergency
+        re-segmentation (split + rehash) instead of overflow-dropping.
+        Both read device values: integrity is priced at admission.
+
+        Returns ``(prepared, admit_seconds, admitted_sub, deferred)``
+        where ``admitted_sub`` is the (possibly sanitized, possibly
+        shortened) update list this segment will actually apply and
+        ``deferred`` is the emergency-split remainder (``[(sub, grow),
+        ...]``) the segmented runner must splice after this segment."""
         engine = self.engine
+        cfg = self.integrity
         t0 = time.perf_counter()
         faults.crossing("mid_admit", updates=len(sub_stream))
+        if cfg is not None and cfg.policy != "permissive":
+            from repro.runtime import integrity as integrity_mod
+
+            sub_stream = integrity_mod.admit_stream(engine, sub_stream, cfg,
+                                                    base_offset=offset)
         if grow_caps:
             engine.views = {
                 name: (v.rehash(grow_caps[name]) if name in grow_caps
@@ -721,9 +786,64 @@ class StreamExecutor:
             # post-rehash recovery path must survive
             faults.crossing("post_rehash_pre_recompile",
                             grown=sorted(grow_caps))
+        deferred: list = []
+        if cfg is not None and cfg.active and cfg.capacity_degrade:
+            try:
+                check_stream_capacity(engine, sub_stream)
+            except StreamCapacityError as e:
+                resegmented = capacity_segments(engine, sub_stream)
+                sub_stream, extra_grow = resegmented[0]
+                deferred = resegmented[1:]
+                if extra_grow:
+                    engine.views = {
+                        name: (v.rehash(extra_grow[name])
+                               if name in extra_grow else v)
+                        for name, v in engine.views.items()
+                    }
+                cfg.degrade_log.append(dict(
+                    kind="emergency_resegment",
+                    segments=1 + len(deferred),
+                    grow={k: int(v) for k, v in extra_grow.items()},
+                    occupancy=storage_mod.occupancy_report(engine.views),
+                    error=str(e)))
         prepared = prepare_stream(engine, sub_stream, check_capacity=False)
         self.compiled(prepared)
-        return prepared, time.perf_counter() - t0
+        return prepared, time.perf_counter() - t0, sub_stream, deferred
+
+    def _eager_spill(self, stream, state, update_engine: bool, error):
+        """Graceful degradation of an explicit-state run that failed its
+        capacity audit: apply the stream per batch through the trigger
+        plans with eager table growth (``grow_if_loaded``) — slower
+        (host-side growth checks per batch) but it cannot overflow-drop.
+        The spill still passes validated admission, and the decision is
+        recorded in ``integrity.degrade_log``."""
+        from repro.runtime import integrity as integrity_mod
+
+        cfg = self.integrity
+        t0 = time.perf_counter()
+        stream = integrity_mod.admit_stream(self.engine, stream, cfg,
+                                            base_offset=0)
+        engine = self.engine
+        views, base, indicators = (dict(state[0]), dict(state[1]),
+                                   dict(state[2]))
+        for rel, upd in stream:
+            touched, _, _ = engine.plans.write_sets(engine, rel)
+            views = {
+                name: (storage_mod.grow_if_loaded(
+                           v, engine._insert_budget(v, rel, upd))
+                       if name in touched else v)
+                for name, v in views.items()
+            }
+            views, base, indicators = engine.functional_update(
+                views, base, indicators, rel, upd)
+        integrity_mod.flush_dead_letters(cfg)
+        new_state = canonical_state((views, base, indicators))
+        cfg.degrade_log.append(dict(
+            kind="eager_spill", updates=len(stream), error=str(error),
+            wall_s=time.perf_counter() - t0))
+        if update_engine:
+            engine.set_state(new_state)
+        return new_state
 
     def _run_segmented(self, segments, pipeline: bool = True,
                        base_offset: int = 0):
@@ -753,13 +873,33 @@ class StreamExecutor:
         (and a writer failure surfaces here, not silently).  Boundary
         steps are numbered by *cumulative stream offset*
         (``base_offset`` + updates applied), which is what
-        :meth:`resume` uses as its replay cursor."""
+        :meth:`resume` uses as its replay cursor.
+
+        Integrity hooks (DESIGN.md §11) ride the boundaries: the audited
+        Reevaluate pass runs every ``audit_interval`` segments *before*
+        that boundary's snapshot dispatches, so a repaired state — not a
+        drifted one — is what gets committed; an emergency
+        re-segmentation during admission splices its deferred remainder
+        into the segment queue.  Each segment's admit+dispatch wall also
+        feeds :attr:`stragglers` (EWMA slow-segment detection), and the
+        verdict lands in the segment's stats entry."""
         stats: list = []
         state = None
         ck = self.checkpoint
+        cfg = self.integrity
+        if cfg is not None:
+            # a failed prior attempt may have left validation results
+            # pending; re-admission below re-records them, so stale
+            # entries would double-count
+            cfg.pending_dead_letters.clear()
         offset = base_offset
-        prepared, admit_s = self._admit_segment(*segments[0])
-        for i in range(len(segments)):
+        queue = list(segments)
+        prepared, admit_s, sub, deferred = self._admit_segment(
+            *queue[0], offset=offset)
+        if deferred:
+            queue[1:1] = deferred
+        i = 0
+        while i < len(queue):
             n_steps = prepared.n_steps
             t0 = time.perf_counter()
             # segment 0's input can alias caller-visible arrays (the
@@ -772,21 +912,46 @@ class StreamExecutor:
             if not pipeline:
                 jax.block_until_ready(state)
             dispatch_s = time.perf_counter() - t0
-            offset += len(segments[i][0])
+            offset += len(sub)
             faults.crossing("mid_segment", segment=i, offset=offset)
+            audit_s = 0.0
+            if cfg is not None and cfg.audit_due(i):
+                from repro.runtime import integrity as integrity_mod
+
+                t1 = time.perf_counter()
+                records = integrity_mod.audit_engine(self.engine, cfg,
+                                                     segment=i)
+                if any(r.repaired for r in records):
+                    # the repair replaced engine views; the boundary
+                    # snapshot (and the next segment) must see it
+                    state = self.engine.state
+                audit_s = time.perf_counter() - t1
             save_s = 0.0
             if ck is not None:
                 t1 = time.perf_counter()
                 ck.save_boundary(self.engine, offset=offset, segment=i,
                                  blocking=not pipeline)
-                if i + 1 == len(segments):
+                if i + 1 == len(queue):
                     ck.wait()  # a finished run is durably checkpointed
                 save_s = time.perf_counter() - t1
+            straggler = self.stragglers.observe(i, admit_s + dispatch_s)
             stats.append(dict(segment=i, n_steps=n_steps,
                               admit_s=admit_s, dispatch_s=dispatch_s,
-                              save_s=save_s))
-            if i + 1 < len(segments):
-                prepared, admit_s = self._admit_segment(*segments[i + 1])
+                              save_s=save_s, audit_s=audit_s,
+                              straggler=straggler,
+                              straggler_baseline=self.stragglers.baseline))
+            if i + 1 < len(queue):
+                prepared, admit_s, sub, deferred = self._admit_segment(
+                    *queue[i + 1], offset=offset)
+                if deferred:
+                    queue[i + 2:i + 2] = deferred
+            i += 1
+        if cfg is not None and cfg.pending_dead_letters:
+            # every admitted segment has executed by now, so the parked
+            # violation flags are ready and this sync is free
+            from repro.runtime import integrity as integrity_mod
+
+            integrity_mod.flush_dead_letters(cfg)
         self.last_segment_stats = stats
         return state
 

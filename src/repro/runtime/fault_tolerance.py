@@ -85,11 +85,38 @@ class StreamSupervisor:
     exhaustion re-raises chained to the last failure.  With
     ``nan_is_failure`` (default), a completed run whose float view
     payloads contain NaN/Inf is treated as failed *before* its final
-    snapshot can be trusted."""
+    snapshot can be trusted.
+
+    With ``escalate`` (default), repeated failures climb an escalation
+    ladder instead of blindly retrying the same resume (DESIGN.md §11):
+
+    1. **restart** — plain resume from the newest committed snapshot
+       (handles transient faults: preemption, injected kills).
+    2. **restore_previous_snapshot** — quarantine the newest snapshot
+       and resume from the one before it (handles a *committed but
+       poisoned* snapshot the checksum cannot catch, e.g. NaN payloads
+       that were valid bytes when written).
+    3. **quarantine_batch** — if the executor has an
+       :class:`~repro.runtime.integrity.IntegrityConfig`, downgrade
+       ``policy="strict"`` to ``"quarantine"`` so the offending updates
+       are masked to dead letters instead of failing the run.
+    4. **reevaluate_from_base** — restore the newest snapshot, recompute
+       every view from stored base relations via the ``Reevaluate``
+       interpreter (ground truth), re-commit the healed snapshot at the
+       same offset, and resume.
+
+    A rung that is not applicable (no checkpoint, only one snapshot, no
+    integrity config, no stored base) falls back down the ladder; each
+    log entry records the ``action`` taken."""
 
     max_restarts: int = 3
     backoff_s: float = 0.1
     nan_is_failure: bool = True
+    escalate: bool = True
+
+    #: escalation rungs, climbed on consecutive failures
+    LADDER = ("restart", "restore_previous_snapshot", "quarantine_batch",
+              "reevaluate_from_base")
 
     def run(self, executor, stream):
         """Drive ``executor.resume(stream)`` to completion.
@@ -106,12 +133,74 @@ class StreamSupervisor:
                 return state, restarts, log
             except Exception as e:  # noqa: BLE001 — restart path
                 restarts += 1
-                log.append({"restarts": restarts, "failure": repr(e)})
                 if restarts > self.max_restarts:
+                    log.append({"restarts": restarts, "failure": repr(e)})
                     raise RuntimeError(
                         f"restart budget exhausted after {restarts - 1} "
                         "restarts") from e
+                action = (self._escalation(executor, e, restarts)
+                          if self.escalate else "restart")
+                log.append({"restarts": restarts, "failure": repr(e),
+                            "action": action})
                 time.sleep(self.backoff_s * (2 ** (restarts - 1)))
+
+    # -------------------------------------------------------- escalation
+    def _escalation(self, executor, error, restarts: int) -> str:
+        """Pick and *apply* the recovery rung for this failure; the next
+        loop iteration's ``resume`` then runs against the mutated state
+        (quarantined snapshot, relaxed policy, healed checkpoint)."""
+        from repro.runtime import integrity as integrity_mod
+
+        cfg = getattr(executor, "integrity", None)
+        if isinstance(error, integrity_mod.StreamIntegrityError):
+            # an integrity failure will deterministically recur on plain
+            # restart — jump straight to a rung that changes something
+            if cfg is not None and cfg.policy == "strict":
+                cfg.policy = "quarantine"
+                return "quarantine_batch"
+            return self._reevaluate(executor)
+        rung = self.LADDER[min(restarts - 1, len(self.LADDER) - 1)]
+        if rung == "restore_previous_snapshot":
+            ck = getattr(executor, "checkpoint", None)
+            steps = ck.ckpt.all_steps() if ck is not None else []
+            if len(steps) > 1:
+                ck.ckpt.discard_pending()
+                ck.ckpt.quarantine_step(steps[-1])
+                return "restore_previous_snapshot"
+            return "restart"  # nothing older to fall back to
+        if rung == "quarantine_batch":
+            if cfg is not None and cfg.policy == "strict":
+                cfg.policy = "quarantine"
+                return "quarantine_batch"
+            return self._reevaluate(executor)
+        if rung == "reevaluate_from_base":
+            return self._reevaluate(executor)
+        return "restart"
+
+    @staticmethod
+    def _reevaluate(executor) -> str:
+        """Last rung: heal the newest snapshot by recomputing every view
+        from stored base relations, re-commit it at the same offset, and
+        let the next resume pick it up.  Falls back to plain restart when
+        the executor has no checkpoint or no stored base."""
+        from repro.runtime import integrity as integrity_mod
+
+        ck = getattr(executor, "checkpoint", None)
+        engine = getattr(executor, "engine", None)
+        if ck is None or engine is None:
+            return "restart"
+        try:
+            ck.ckpt.discard_pending()
+            meta = ck.restore_into(engine)
+            if meta is None:
+                return "restart"
+            integrity_mod.reevaluate_from_base(engine)
+            ck.save_boundary(engine, offset=int(meta["offset"]),
+                             segment=int(meta.get("segment", -1)),
+                             blocking=True)
+            return "reevaluate_from_base"
+        except integrity_mod.StreamIntegrityError:
+            return "restart"  # no stored base relations to recompute from
 
     @staticmethod
     def _check_finite(engine) -> None:

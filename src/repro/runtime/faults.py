@@ -25,12 +25,22 @@ point                                 fires
 ``mid_checkpoint_write``              inside ``Checkpointer._write`` after the
                                       tmp dir is fully written but before the
                                       atomic rename (commit)
+``snapshot_committed``                inside ``Checkpointer._write`` right
+                                      after the atomic rename — the snapshot
+                                      is durable; ``mode="bitflip"`` corrupts
+                                      it in place (silent media corruption)
 ====================================  =========================================
 
 Determinism: ``FaultPlan(point, at=k)`` fires on the k-th crossing
 (0-based) of ``point`` and only once — after firing, the plan is spent and
 execution (on the resumed process) runs clean.  Crossing counters survive
 the fire so tests can assert how far execution got.
+
+Besides ``raise``/``kill9`` there is a third mode, ``bitflip``: instead of
+stopping execution it flips one bit of the file named by the crossing's
+``path`` context and lets execution continue — modelling silent storage
+corruption (a torn sector, a cosmic-ray bit) that only snapshot
+checksums (DESIGN.md §11) can catch.
 """
 from __future__ import annotations
 
@@ -51,6 +61,7 @@ POINTS = (
     "mid_admit",
     "post_rehash_pre_recompile",
     "mid_checkpoint_write",
+    "snapshot_committed",
 )
 
 
@@ -58,14 +69,27 @@ POINTS = (
 class FaultPlan:
     point: str          # one of POINTS
     at: int = 0         # fire on the at-th crossing of `point` (0-based)
-    mode: str = "raise"  # "raise" -> InjectedFault; "kill9" -> SIGKILL
+    mode: str = "raise"  # "raise" | "kill9" | "bitflip" (corrupt & continue)
 
     def __post_init__(self):
         if self.point not in POINTS:
             raise ValueError(f"unknown fault point {self.point!r}; "
                              f"expected one of {POINTS}")
-        if self.mode not in ("raise", "kill9"):
+        if self.mode not in ("raise", "kill9", "bitflip"):
             raise ValueError(f"unknown fault mode {self.mode!r}")
+
+
+def _flip_bit(path: str) -> None:
+    """Flip the top bit of the last byte of ``path`` in place."""
+    with open(path, "r+b") as f:
+        f.seek(0, os.SEEK_END)
+        size = f.tell()
+        if size == 0:
+            return
+        f.seek(size - 1)
+        byte = f.read(1)[0]
+        f.seek(size - 1)
+        f.write(bytes([byte ^ 0x80]))
 
 
 @dataclass
@@ -84,6 +108,11 @@ class FaultInjector:
         self.fired.append((point, n, ctx))
         if plan.mode == "kill9":
             os.kill(os.getpid(), signal.SIGKILL)
+        if plan.mode == "bitflip":
+            # silent corruption: damage the crossing's file and let
+            # execution continue — only checksum verification can tell
+            _flip_bit(ctx["path"])
+            return
         raise InjectedFault(f"injected fault at {point}[{n}] ({ctx})")
 
 

@@ -1,0 +1,559 @@
+"""Runtime integrity layer: validated admission, quarantine, and audited
+Reevaluate self-healing (DESIGN.md §11).
+
+PR 6 made the stream executor recoverable from fail-stop crashes; this
+module makes the *state* trustworthy under bad data and silent corruption.
+F-IVM's view hierarchy gives the layer a cheap ground truth — every
+materialized view is recomputable from the stored base relations (the
+"higher-order views as insurance" property of Nikolic & Olteanu 2017) —
+so integrity decomposes into four pillars:
+
+1. **Validated admission** (:func:`admit_stream`): per-batch checks at
+   segment-admission time — finite payloads, in-domain keys, schema/dtype
+   conformance — under three policies.  ``strict`` raises
+   :class:`StreamIntegrityError` before the offending segment runs (and
+   therefore before any poisoned boundary snapshot can commit);
+   ``quarantine`` masks offending tuples out of the batch (key 0 +
+   ring-zero payload: exactly the executor's padding convention, so a
+   masked row is bit-transparent) and routes them to a
+   :class:`DeadLetterLog` with reason codes; ``permissive`` skips
+   validation.  The row checks themselves are one jit-compiled function
+   (:func:`validate_rows`); admission pays a single host sync per segment
+   for the per-batch violation flags.
+
+2. **Checksummed snapshots**: per-leaf CRC32 fingerprints written into
+   the checkpoint manifest and verified on restore — the detection side
+   lives in ``repro.checkpoint.checkpointer`` (``ChecksumError``), proven
+   by the ``snapshot_committed`` bit-flip fault point in
+   ``repro.runtime.faults``.
+
+3. **Drift-bounded reconciliation** (:func:`audit_engine`): every
+   ``audit_interval`` segment boundaries the audited views are recomputed
+   from base relations via the plan IR's ``Reevaluate`` interpretation
+   (``plan.reevaluate_store``) and compared against the live incremental
+   state.  Integer rings must match exactly (any divergence is
+   corruption, not numerics, and raises); float rings are allowed
+   bounded replay drift — divergence beyond ``audit_tol`` is repaired in
+   place by swapping in the recomputed view (capacity-preserving for
+   sparse storage, so compiled segment programs stay valid).  Divergence
+   magnitude lands in ``audit_log`` as telemetry either way.
+
+4. **Graceful degradation**: capacity pressure on the segmented path
+   downgrades to emergency re-segmentation (split + rehash) or an eager
+   per-batch spill instead of a hard :class:`StreamCapacityError` — the
+   mechanics live in ``repro.core.stream`` and record their decisions in
+   ``degrade_log``; ``StreamSupervisor`` (repro.runtime.fault_tolerance)
+   adds the escalation ladder on top, with
+   :func:`reevaluate_from_base` as its strongest rung.
+
+This module deliberately avoids importing ``repro.core.stream`` at module
+scope (the executor imports *us* lazily; keeping the edge one-directional
+avoids an import cycle through ``repro.core``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan as plan_mod
+from repro.core import storage as storage_mod
+from repro.core.relations import COOUpdate
+
+# --------------------------------------------------------------------------
+# Reason codes (dead-letter vocabulary)
+# --------------------------------------------------------------------------
+REASON_NONFINITE = "nonfinite_payload"
+REASON_KEY_DOMAIN = "key_out_of_domain"
+REASON_SCHEMA = "schema_mismatch"
+REASON_DTYPE = "dtype_mismatch"
+
+#: bit positions of the jit-side row validator (:func:`validate_rows`)
+_BIT_REASONS = ((1, REASON_NONFINITE), (2, REASON_KEY_DOMAIN))
+
+POLICIES = ("strict", "quarantine", "permissive")
+
+
+class StreamIntegrityError(RuntimeError):
+    """An integrity invariant failed: poisoned admission under ``strict``,
+    integer-ring audit divergence, or an audit that cannot run (no stored
+    base).  Carries the offending :class:`DeadLetter` records when the
+    failure is data-shaped."""
+
+    def __init__(self, msg: str, records=()):
+        super().__init__(msg)
+        self.records = tuple(records)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadLetter:
+    """One quarantined tuple (or whole batch, ``row == -1``)."""
+
+    rel: str
+    stream_index: int  # absolute update index in the run's stream
+    row: int  # row within the batch; -1 = the whole batch
+    key: tuple  # the offending key (empty for whole-batch records)
+    reasons: tuple[str, ...]  # reason codes, see REASON_*
+
+
+class DeadLetterLog:
+    """Host-side sink for quarantined tuples.
+
+    Bounded (``max_records``): past the cap only the drop counter grows,
+    so a hostile stream cannot OOM the host through its own rejects."""
+
+    def __init__(self, max_records: int = 10_000):
+        self.max_records = max_records
+        self.records: list[DeadLetter] = []
+        self.dropped = 0
+
+    def append(self, rec: DeadLetter) -> None:
+        if len(self.records) < self.max_records:
+            self.records.append(rec)
+        else:
+            self.dropped += 1
+
+    def counts(self) -> dict[str, int]:
+        """Quarantined-record count per reason code."""
+        out: dict[str, int] = {}
+        for rec in self.records:
+            for r in rec.reasons:
+                out[r] = out.get(r, 0) + 1
+        return out
+
+    def __len__(self) -> int:
+        return len(self.records) + self.dropped
+
+    def __iter__(self):
+        return iter(self.records)
+
+    def clear(self) -> None:
+        self.records.clear()
+        self.dropped = 0
+
+
+# --------------------------------------------------------------------------
+# Config
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class IntegrityConfig:
+    """Integrity policy + telemetry attached to a ``StreamExecutor``.
+
+    ``policy`` governs admission validation; ``audit_interval`` enables
+    the audited Reevaluate pass every k segment boundaries (requires the
+    engine to store its base relations — ``IVMEngine.build(...,
+    store_base=True)``); ``segment_updates`` caps segment length the same
+    way the checkpointer's knob does, so validation/audit boundaries
+    exist even on streams capacity segmentation would never split;
+    ``capacity_degrade`` turns :class:`StreamCapacityError` hard fails
+    into emergency re-segmentation / eager spill."""
+
+    policy: str = "quarantine"
+    audit_interval: int | None = None
+    audit_views: tuple[str, ...] | None = None  # None -> the root view
+    audit_tol: float = 1e-5
+    audit_repair: bool = True
+    segment_updates: int | None = None
+    capacity_degrade: bool = True
+    dead_letters: DeadLetterLog = dataclasses.field(
+        default_factory=DeadLetterLog)
+    audit_log: list = dataclasses.field(default_factory=list)
+    degrade_log: list = dataclasses.field(default_factory=list)
+    #: quarantine-mode validation results awaiting their host readback —
+    #: (stream index, rel, original update, device reason bits).  Drained
+    #: by :func:`flush_dead_letters`; never touched under ``strict``.
+    pending_dead_letters: list = dataclasses.field(
+        default_factory=list, repr=False)
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown admission policy {self.policy!r}; "
+                             f"expected one of {POLICIES}")
+        if self.audit_interval is not None and self.audit_interval < 1:
+            raise ValueError("audit_interval must be >= 1")
+        if self.segment_updates is not None and self.segment_updates < 1:
+            raise ValueError("segment_updates must be >= 1")
+
+    @property
+    def active(self) -> bool:
+        """Whether the executor must take the segmented path for this
+        config to observe anything."""
+        return (self.policy != "permissive"
+                or self.audit_interval is not None
+                or self.segment_updates is not None)
+
+    def audit_due(self, segment: int) -> bool:
+        """Audit at every ``audit_interval``-th boundary (segment is the
+        0-based index; the first audit lands after segment k-1)."""
+        k = self.audit_interval
+        return k is not None and (segment + 1) % k == 0
+
+
+# --------------------------------------------------------------------------
+# Pillar 1 — validated admission
+# --------------------------------------------------------------------------
+def _row_bits(keys: jnp.ndarray, payload_leaves: tuple,
+              domains: tuple[int, ...]) -> jnp.ndarray:
+    B = keys.shape[0]
+    bad_pay = jnp.zeros((B,), jnp.bool_)
+    for leaf in payload_leaves:
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            finite = jnp.isfinite(leaf).reshape(B, -1).all(axis=1)
+            bad_pay = bad_pay | ~finite
+    doms = jnp.asarray(domains, keys.dtype).reshape(1, -1)
+    bad_key = jnp.any((keys < 0) | (keys >= doms), axis=1)
+    return bad_pay.astype(jnp.int32) + 2 * bad_key.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def validate_rows(keys: jnp.ndarray, payload_leaves: tuple,
+                  domains: tuple[int, ...]) -> jnp.ndarray:
+    """Per-row reason bits for one COO batch — pure jnp, jit-compiled
+    once per (batch, schema) shape: bit 1 = non-finite payload in any
+    ring component, bit 2 = key outside ``[0, domain)`` in any column.
+    Integer payload leaves are vacuously finite and skipped."""
+    return _row_bits(keys, payload_leaves, domains)
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _validate_sanitize(keys: jnp.ndarray, payload_leaves: tuple,
+                       zero_leaves: tuple,
+                       domains: tuple[int, ...]):
+    """Fused validate + sanitize — the quarantine hot path.  One jitted
+    dispatch per batch (instead of a validate call plus several eager
+    masking ops): returns the reason bits alongside the masked keys and
+    payload leaves, which are the identity when no bits are set."""
+    bits = _row_bits(keys, payload_leaves, domains)
+    bad = bits > 0
+    keys_s = jnp.where(bad[:, None], 0, keys)
+    leaves_s = tuple(
+        jnp.where(bad.reshape((-1,) + (1,) * (x.ndim - 1)), z, x)
+        for x, z in zip(payload_leaves, zero_leaves))
+    return bits, keys_s, leaves_s
+
+
+#: per-(ring, batch) cache of ring-zero payload trees, so the quarantine
+#: admission path does not re-dispatch ``ring.zeros`` for every batch
+_ZERO_CACHE: dict = {}
+
+
+def _zero_payload(ring, batch: int):
+    key = (id(ring), int(batch))
+    zero = _ZERO_CACHE.get(key)
+    if zero is None:
+        zero = _ZERO_CACHE[key] = ring.zeros((int(batch),))
+    return zero
+
+
+def reasons_of(bits: int) -> tuple[str, ...]:
+    """Decode a row's reason bits into reason codes."""
+    return tuple(code for bit, code in _BIT_REASONS if bits & bit)
+
+
+def sanitize_batch(upd: COOUpdate, reason_bits: jnp.ndarray,
+                   ring) -> COOUpdate:
+    """Mask offending rows transparent: key 0 + ring-zero payload — the
+    executor's padding convention, so scatter-⊎ and indicator transition
+    gating both treat the row as a no-op.  Pure jnp (jit-compatible)."""
+    bad = reason_bits > 0
+    keys = jnp.where(bad[:, None], 0, upd.keys)
+    zero = ring.zeros((upd.batch,))
+    payload = jax.tree.map(
+        lambda x, z: jnp.where(bad.reshape((-1,) + (1,) * (x.ndim - 1)),
+                               z, x),
+        upd.payload, zero)
+    return COOUpdate(upd.schema, keys, payload)
+
+
+def batch_schema_errors(query, rel: str, upd) -> tuple[str, ...]:
+    """Host-side static conformance of one batch against the declared
+    relation: schema tuple, key arity/dtype, payload leaf dtypes.  These
+    are whole-batch defects — no per-row mask can fix a wrong shape."""
+    errs: list[str] = []
+    declared = tuple(query.relations[rel])
+    if not isinstance(upd, COOUpdate):
+        return (REASON_SCHEMA,)
+    if tuple(upd.schema) != declared:
+        errs.append(REASON_SCHEMA)
+    elif upd.keys.ndim != 2 or upd.keys.shape[1] != len(declared):
+        errs.append(REASON_SCHEMA)
+    if not jnp.issubdtype(jnp.asarray(upd.keys).dtype, jnp.integer):
+        errs.append(REASON_DTYPE)
+    ring = query.ring
+    want = jnp.dtype(ring.dtype)
+    for leaf in jax.tree.leaves(upd.payload):
+        if jnp.dtype(jnp.asarray(leaf).dtype) != want:
+            errs.append(REASON_DTYPE)
+            break
+    return tuple(errs)
+
+
+def _transparent_batch(query, rel: str, batch: int) -> COOUpdate:
+    """An all-padding replacement batch (whole-batch quarantine)."""
+    ring = query.ring
+    k = len(query.relations[rel])
+    return COOUpdate(tuple(query.relations[rel]),
+                     jnp.zeros((max(batch, 1), k), jnp.int32),
+                     ring.zeros((max(batch, 1),)))
+
+
+def _batch_dead_letters(rel: str, index: int, upd, bits) -> list:
+    """Host readback of one flagged batch's offending rows (blocks on
+    ``bits``)."""
+    bits_h = np.asarray(bits)
+    keys_h = np.asarray(upd.keys)
+    return [
+        DeadLetter(rel, index, int(r),
+                   tuple(int(k) for k in keys_h[r]),
+                   reasons_of(int(bits_h[r])))
+        for r in np.nonzero(bits_h)[0]
+    ]
+
+
+def admit_stream(engine, sub_stream, cfg: IntegrityConfig,
+                 base_offset: int = 0):
+    """Validated admission of one segment's updates.
+
+    Returns the sub-stream with offending rows/batches masked out
+    (``quarantine``), raises :class:`StreamIntegrityError` carrying the
+    offending records (``strict``), or passes through (``permissive``).
+    Row checks run jit-compiled on device.  Under ``quarantine`` the
+    whole admission is *sync-free*: every checked batch is sanitized
+    lazily on device (``sanitize_batch`` is the identity when its reason
+    bits are all zero), and the host readback that turns flagged rows
+    into dead letters is parked on ``cfg.pending_dead_letters`` for
+    :func:`flush_dead_letters` — syncing here would stall the segment
+    pipeline behind the previous segment's in-flight execution.
+    ``strict`` must sync: the contract is that a poisoned update fails
+    admission *before* its segment can run or snapshot, so it pays one
+    stacked host read per segment.  Replay-deterministic: resuming a run
+    re-admits the same raw updates and masks them the same way (dead
+    letters may be re-recorded across restarts)."""
+    if cfg is None or cfg.policy == "permissive":
+        return list(sub_stream)
+    query = engine.query
+    ring = query.ring
+    out: list = []
+    checks: list = []  # (position, rel, upd, reason_bits)
+    for j, (rel, upd) in enumerate(sub_stream):
+        errs = batch_schema_errors(query, rel, upd)
+        if errs:
+            rec = DeadLetter(rel, base_offset + j, -1, (), errs)
+            if cfg.policy == "strict":
+                raise StreamIntegrityError(
+                    f"update {base_offset + j} ({rel}) rejected at "
+                    f"admission: {', '.join(errs)}", [rec])
+            cfg.dead_letters.append(rec)
+            out.append((rel, _transparent_batch(query, rel,
+                                                getattr(upd, "batch", 1))))
+            continue
+        doms = tuple(int(query.domains[v]) for v in upd.schema)
+        leaves = tuple(jax.tree.leaves(upd.payload))
+        if cfg.policy == "quarantine":
+            zero = _zero_payload(ring, upd.batch)
+            bits, keys_s, leaves_s = _validate_sanitize(
+                upd.keys, leaves, tuple(jax.tree.leaves(zero)), doms)
+            payload_s = jax.tree.unflatten(
+                jax.tree.structure(upd.payload), leaves_s)
+            out.append((rel, COOUpdate(upd.schema, keys_s, payload_s)))
+        else:
+            bits = validate_rows(upd.keys, leaves, doms)
+            out.append((rel, upd))
+        checks.append((j, rel, upd, bits))
+    if not checks:
+        return out
+    if cfg.policy == "quarantine":
+        cfg.pending_dead_letters.extend(
+            (base_offset + j, rel, upd, bits)
+            for j, rel, upd, bits in checks)
+        return out
+    # strict: one stacked host sync, before anything can run or snapshot
+    flags = np.asarray(jnp.stack([jnp.any(b > 0) for _, _, _, b in checks]))
+    for (j, rel, upd, bits), flagged in zip(checks, flags):
+        if not flagged:
+            continue
+        records = _batch_dead_letters(rel, base_offset + j, upd, bits)
+        raise StreamIntegrityError(
+            f"update {base_offset + j} ({rel}) rejected at admission: "
+            f"{len(records)} offending row(s) — "
+            + ", ".join(sorted({c for rec in records
+                                for c in rec.reasons})), records)
+    return out
+
+
+def flush_dead_letters(cfg: IntegrityConfig | None) -> int:
+    """Drain ``cfg.pending_dead_letters`` into the dead-letter log: one
+    stacked host sync for the per-batch violation flags, then a row
+    readback for flagged batches only.  Called by the executor once the
+    admitted segments have executed (the flags are ready — the sync is
+    then free); returns the number of dead letters recorded."""
+    if cfg is None or not cfg.pending_dead_letters:
+        return 0
+    pending, cfg.pending_dead_letters = cfg.pending_dead_letters, []
+    flags = np.asarray(jnp.stack([jnp.any(b > 0)
+                                  for _, _, _, b in pending]))
+    n = 0
+    for (idx, rel, upd, bits), flagged in zip(pending, flags):
+        if not flagged:
+            continue
+        for rec in _batch_dead_letters(rel, idx, upd, bits):
+            cfg.dead_letters.append(rec)
+            n += 1
+    return n
+
+
+# --------------------------------------------------------------------------
+# Pillar 3 — audited Reevaluate (drift-bounded reconciliation)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class AuditRecord:
+    """Outcome of auditing one view at one segment boundary."""
+
+    segment: int
+    view: str
+    exact: bool  # bit-identical to the from-base recomputation
+    max_abs_err: float
+    repaired: bool
+    wall_s: float
+
+
+def reference_store(engine) -> dict:
+    """Recompute every view from the stored base relations via the plan
+    IR's ``Reevaluate`` interpretation.  The audit's ground truth — and
+    only available when the engine stores all base relations."""
+    missing = sorted(set(engine.query.relations) - set(engine.base))
+    if missing:
+        raise StreamIntegrityError(
+            f"audited Reevaluate needs stored base relations (missing "
+            f"{missing}); build the engine with store_base=True")
+    return plan_mod.reevaluate_store(engine, engine.base)
+
+
+def _repair_capacity(live, active: int) -> int:
+    """Capacity for a repaired sparse view: keep the live capacity (so
+    compiled segment programs and shard placements stay valid) unless the
+    recomputed active set could not fit under the load factor."""
+    cap = live.capacity
+    while active > storage_mod.LOAD_FACTOR * cap:
+        cap *= 2
+    return cap
+
+
+def repair_view(engine, name: str, ref_dense) -> None:
+    """Swap the recomputed view in under the live storage backend."""
+    live = engine.views[name]
+    if isinstance(live, storage_mod.SparseRelation):
+        ring = ref_dense.ring
+        active = int(np.asarray(jnp.sum(~ring.is_zero(ref_dense.payload))))
+        engine.views[name] = storage_mod.SparseRelation.from_dense(
+            ref_dense, capacity=_repair_capacity(live, active))
+    else:
+        engine.views[name] = ref_dense
+
+
+def audit_engine(engine, cfg: IntegrityConfig,
+                 segment: int = -1) -> list[AuditRecord]:
+    """One audited Reevaluate pass: recompute the audited views from base
+    relations, compare against the live incremental state, and repair
+    divergence.
+
+    Integer rings must be exact — any mismatch is corruption (incremental
+    maintenance over an exact ring cannot drift) and raises
+    :class:`StreamIntegrityError`.  Float rings tolerate replay drift up
+    to ``audit_tol`` (relative, floored at 1): beyond it the live view is
+    replaced by the recomputation (``audit_repair``).  Every pass appends
+    divergence telemetry to ``cfg.audit_log``.  Host-synchronous by
+    construction (it compares device values) — the executor runs it at
+    segment boundaries, priced by the BENCH_stream integrity leg."""
+    t0 = time.perf_counter()
+    store = reference_store(engine)
+    names = cfg.audit_views if cfg.audit_views else (engine.tree.name,)
+    records: list[AuditRecord] = []
+    for name in names:
+        ref_dense = storage_mod.as_dense(store[name])
+        live_dense = storage_mod.as_dense(engine.views[name])
+        is_float = jnp.issubdtype(jnp.dtype(ref_dense.ring.dtype),
+                                  jnp.floating)
+        max_abs = 0.0
+        max_scaled = 0.0
+        for c in ref_dense.ring.components:
+            ref = jnp.asarray(ref_dense.payload[c])
+            live = jnp.asarray(live_dense.payload[c]).astype(ref.dtype)
+            diff = jnp.abs(live - ref)
+            # NaN in the live view counts as infinite divergence
+            diff = jnp.where(jnp.isnan(live - ref), jnp.inf, diff) \
+                if is_float else diff
+            max_abs = max(max_abs, float(np.asarray(jnp.max(diff))))
+            scale = jnp.maximum(jnp.abs(ref), 1)
+            max_scaled = max(max_scaled,
+                             float(np.asarray(jnp.max(diff / scale))))
+        exact = max_abs == 0.0
+        repaired = False
+        if not exact and not is_float:
+            rec = AuditRecord(segment, name, False, max_abs, False,
+                              time.perf_counter() - t0)
+            cfg.audit_log.append(dataclasses.asdict(rec))
+            raise StreamIntegrityError(
+                f"integer-ring audit divergence in view {name!r} at "
+                f"segment {segment}: max |live - reeval| = {max_abs} "
+                "(exact rings cannot drift — state corruption)")
+        if not exact and max_scaled > cfg.audit_tol and cfg.audit_repair:
+            repair_view(engine, name, ref_dense)
+            repaired = True
+        rec = AuditRecord(segment, name, exact, max_abs, repaired,
+                          time.perf_counter() - t0)
+        records.append(rec)
+        cfg.audit_log.append(dataclasses.asdict(rec))
+    return records
+
+
+def reevaluate_from_base(engine) -> dict[str, float]:
+    """Full self-heal: rebuild *every* materialized view from the stored
+    base relations, preserving each view's storage backend (and sparse
+    capacity where it still fits).  The strongest rung of the
+    ``StreamSupervisor`` escalation ladder.  Returns per-view max
+    absolute correction as telemetry."""
+    store = reference_store(engine)
+    drift: dict[str, float] = {}
+    for name in list(engine.views):
+        ref_dense = storage_mod.as_dense(store[name])
+        live_dense = storage_mod.as_dense(engine.views[name])
+        max_abs = 0.0
+        for c in ref_dense.ring.components:
+            ref = jnp.asarray(ref_dense.payload[c])
+            live = jnp.asarray(live_dense.payload[c]).astype(ref.dtype)
+            diff = jnp.abs(live - ref)
+            diff = jnp.where(jnp.isnan(diff), jnp.inf, diff)
+            max_abs = max(max_abs, float(np.asarray(jnp.max(diff))))
+        drift[name] = max_abs
+        repair_view(engine, name, ref_dense)
+    return drift
+
+
+__all__ = [
+    "AuditRecord",
+    "DeadLetter",
+    "DeadLetterLog",
+    "IntegrityConfig",
+    "POLICIES",
+    "REASON_DTYPE",
+    "REASON_KEY_DOMAIN",
+    "REASON_NONFINITE",
+    "REASON_SCHEMA",
+    "StreamIntegrityError",
+    "admit_stream",
+    "audit_engine",
+    "batch_schema_errors",
+    "flush_dead_letters",
+    "reasons_of",
+    "reevaluate_from_base",
+    "reference_store",
+    "repair_view",
+    "sanitize_batch",
+    "validate_rows",
+]

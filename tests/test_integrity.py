@@ -1,0 +1,706 @@
+"""Runtime integrity layer: validated admission + quarantine, checksummed
+snapshots, audited Reevaluate reconciliation, and graceful degradation
+(DESIGN.md §11).
+
+Layers under test:
+
+* ``validate_rows`` / ``sanitize_batch`` — jit-compiled per-row checks;
+  masked rows follow the executor's padding convention (key 0 +
+  ring-zero) and are bit-transparent to the maintenance programs.
+* Poison-update chaos — a stream carrying NaN payloads and
+  out-of-domain keys completes under ``policy="quarantine"`` with the
+  final views bit-identical to the clean-stream reference, offending
+  tuples in the dead-letter log with reason codes; the same stream under
+  ``policy="strict"`` fails fast at admission, *before* any poisoned
+  boundary snapshot can commit.
+* Checksummed snapshots — a bit flipped into a committed snapshot (the
+  ``snapshot_committed`` fault point, ``mode="bitflip"``) is caught by
+  CRC verification on restore; ``resume`` quarantines the damaged step
+  and falls back to the previous committed one.  Quarantined
+  (``corrupt_step_*``) directories are excluded from ``keep=`` retention,
+  so GC only ever counts restorable snapshots.
+* Audited Reevaluate — drift injected into a float-ring view is detected
+  at the next audit boundary and repaired from stored base relations;
+  integer-ring divergence raises (exact rings cannot drift).
+* Graceful degradation — capacity pressure downgrades to emergency
+  re-segmentation (segmented path) or an eager per-batch spill
+  (explicit-state path) instead of a hard ``StreamCapacityError``, with
+  decisions in ``degrade_log``.
+* ``StreamSupervisor`` escalation ladder — restart →
+  restore-previous-snapshot → quarantine-batch → reevaluate-from-base,
+  each rung proven by a failure only that rung can clear.
+
+Payloads are integer-valued float32 in the equivalence tests, so
+"quarantined == clean reference" is literal array equality.
+"""
+import dataclasses
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (Checkpointer, ChecksumError)
+from repro.checkpoint.stream_state import StreamCheckpointer
+from repro.core import (COOUpdate, DenseRelation, IVMEngine, Query,
+                        SparseRelation, StreamExecutor, chain, count_ring,
+                        sum_ring)
+from repro.core.stream import StreamCapacityError
+from repro.runtime import faults
+from repro.runtime.fault_tolerance import StragglerMonitor, StreamSupervisor
+from repro.runtime.integrity import (REASON_DTYPE, REASON_KEY_DOMAIN,
+                                     REASON_NONFINITE, REASON_SCHEMA,
+                                     DeadLetterLog, IntegrityConfig,
+                                     StreamIntegrityError, audit_engine,
+                                     reevaluate_from_base, sanitize_batch,
+                                     validate_rows)
+
+
+@pytest.fixture(autouse=True)
+def _disarm_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+# ---------------------------------------------------------------------------
+# harness: the chaos query of test_recovery, ring-parametrizable
+# ---------------------------------------------------------------------------
+DOMS = dict(A=64, B=64, C=3)
+
+
+def _query(ring=None):
+    return Query(relations={"R": ("A", "B"), "T": ("B", "C")},
+                 free_vars=("A",), ring=ring or sum_ring(), domains=DOMS,
+                 lifts={"C": ("value",)})
+
+
+def _db(ring, seed=3):
+    rng = np.random.default_rng(seed)
+
+    def rel(schema):
+        shape = tuple(DOMS[v] for v in schema)
+        mult = np.zeros(shape, np.float32)
+        idx = tuple(rng.integers(0, d, size=8) for d in shape)
+        np.add.at(mult, idx, 1.0)
+        return DenseRelation(tuple(schema), ring,
+                             {"v": jnp.asarray(mult, ring.dtype)})
+
+    return {"R": rel("AB"), "T": rel("BC")}
+
+
+def _stream(q, seed=11, B=24, n=8):
+    rng = np.random.default_rng(seed)
+    out = []
+    for rel in ["R", "T"] * (n // 2):
+        sch = q.relations[rel]
+        keys = np.stack([rng.integers(0, DOMS[v], size=B) for v in sch],
+                        axis=1).astype(np.int32)
+        vals = rng.integers(-2, 3, size=B)
+        out.append((rel, COOUpdate(sch, jnp.asarray(keys),
+                                   {"v": jnp.asarray(vals, q.ring.dtype)})))
+    return out
+
+
+def _engine(ring=None, **kw):
+    ring = ring or sum_ring()
+    return IVMEngine.build(_query(ring), _db(ring),
+                           var_order=chain(["A", "B"], {"B": [["C"]]}),
+                           storage="sparse", **kw)
+
+
+def _result(engine):
+    return np.asarray(engine.result().payload["v"])
+
+
+#: (stream index, row, mutation) — NaN payload and out-of-domain key
+POISONS = ((2, 5, "nan"), (5, 7, "key"))
+
+
+def _poison(stream):
+    """Inject POISONS into a clean stream."""
+    out = []
+    for j, (rel, upd) in enumerate(stream):
+        keys = np.asarray(upd.keys).copy()
+        vals = np.asarray(upd.payload["v"]).copy()
+        for at, row, kind in POISONS:
+            if j != at:
+                continue
+            if kind == "nan":
+                vals[row] = np.nan
+            else:
+                keys[row, 0] = 10_000  # far outside every domain
+        out.append((rel, COOUpdate(upd.schema, jnp.asarray(keys),
+                                   {"v": jnp.asarray(vals)})))
+    return out
+
+
+def _clean_reference(stream):
+    """The stream with the poisoned rows removed entirely (masked to the
+    padding convention) — what a quarantining run must reproduce."""
+    out = []
+    for j, (rel, upd) in enumerate(stream):
+        keys = np.asarray(upd.keys).copy()
+        vals = np.asarray(upd.payload["v"]).copy()
+        for at, row, _ in POISONS:
+            if j == at:
+                keys[row] = 0
+                vals[row] = 0
+        out.append((rel, COOUpdate(upd.schema, jnp.asarray(keys),
+                                   {"v": jnp.asarray(vals)})))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pillar 1: validated admission
+# ---------------------------------------------------------------------------
+def test_validate_rows_reason_bits():
+    keys = jnp.asarray([[1, 2], [70, 2], [1, 2], [-1, 80]], jnp.int32)
+    pay = jnp.asarray([1.0, 2.0, np.nan, np.inf], jnp.float32)
+    bits = np.asarray(validate_rows(keys, (pay,), (64, 64)))
+    #          clean  bad-key  bad-pay  both
+    np.testing.assert_array_equal(bits, [0, 2, 1, 3])
+
+
+def test_validate_rows_is_jit_compatible():
+    """The validator must trace under an outer jit (admission runs it on
+    device; a host-sync inside would break the pipeline)."""
+    @jax.jit
+    def outer(keys, pay):
+        return validate_rows(keys, (pay,), (64, 64))
+
+    bits = np.asarray(outer(jnp.zeros((4, 2), jnp.int32),
+                            jnp.asarray([0.0, np.nan, 1.0, 2.0])))
+    np.testing.assert_array_equal(bits, [0, 1, 0, 0])
+
+
+def test_validate_rows_integer_payloads_vacuously_finite():
+    keys = jnp.zeros((3, 2), jnp.int32)
+    pay = jnp.asarray([1, -2, 3], jnp.int32)
+    assert not np.any(np.asarray(validate_rows(keys, (pay,), (8, 8))))
+
+
+def test_sanitized_rows_are_bit_transparent():
+    """A masked row (key 0 + ring zero) must be a no-op to the
+    maintenance program — the padding-transparency property the
+    quarantine path piggybacks on."""
+    ring = sum_ring()
+    q = _query(ring)
+    eng = _engine()
+    st = _stream(q)
+    upd = st[0][1]
+    bits = jnp.asarray([0, 1] + [0] * (upd.batch - 2), jnp.int32)
+    masked = sanitize_batch(upd, bits, ring)
+    assert np.asarray(masked.keys)[1].tolist() == [0, 0]
+    assert np.asarray(masked.payload["v"])[1] == 0.0
+    # untouched rows are bit-identical
+    np.testing.assert_array_equal(np.asarray(masked.keys)[2:],
+                                  np.asarray(upd.keys)[2:])
+
+    ref = _engine()
+    zeroed = np.asarray(upd.keys).copy()
+    vals = np.asarray(upd.payload["v"]).copy()
+    zeroed[1] = 0
+    vals[1] = 0
+    ref.apply_update("R", COOUpdate(upd.schema, jnp.asarray(zeroed),
+                                    {"v": jnp.asarray(vals)}))
+    eng.apply_update("R", masked)
+    np.testing.assert_array_equal(_result(eng), _result(ref))
+
+
+def test_poison_update_chaos_quarantine_end_to_end():
+    """THE acceptance test: NaN payloads + out-of-domain keys complete
+    under policy="quarantine" with final views bit-identical to the
+    clean-stream reference and the offending tuples in the dead-letter
+    log with reason codes."""
+    q = _query()
+    st = _stream(q)
+    cfg = IntegrityConfig(policy="quarantine", segment_updates=2)
+    eng = _engine()
+    StreamExecutor(eng, integrity=cfg).run(_poison(st))
+    ref = _engine()
+    StreamExecutor(ref).run(_clean_reference(st))
+    np.testing.assert_array_equal(_result(eng), _result(ref))
+    assert len(cfg.dead_letters) == len(POISONS)
+    assert cfg.dead_letters.counts() == {REASON_NONFINITE: 1,
+                                         REASON_KEY_DOMAIN: 1}
+    by_index = {rec.stream_index: rec for rec in cfg.dead_letters}
+    for at, row, kind in POISONS:
+        rec = by_index[at]
+        assert rec.row == row
+        want = REASON_NONFINITE if kind == "nan" else REASON_KEY_DOMAIN
+        assert rec.reasons == (want,)
+        assert len(rec.key) == 2  # the offending key was captured
+
+
+def test_poison_update_strict_fails_before_poisoned_snapshot(tmp_path):
+    """Under policy="strict" the same stream fails fast *at admission* —
+    every committed snapshot predates the first poisoned update."""
+    q = _query()
+    st = _poison(_stream(q))
+    first_poison = min(at for at, _, _ in POISONS)
+    cfg = IntegrityConfig(policy="strict", segment_updates=2)
+    ck = StreamCheckpointer(str(tmp_path), segment_updates=2)
+    ex = StreamExecutor(_engine(), checkpoint=ck, integrity=cfg)
+    with pytest.raises(StreamIntegrityError) as ei:
+        ex.run(st, update_engine=True)
+    assert ei.value.records  # the offending rows ride the exception
+    assert ei.value.records[0].reasons == (REASON_NONFINITE,)
+    ck.ckpt.discard_pending()  # a boundary save may still be in flight
+    assert all(s <= first_poison for s in ck.ckpt.all_steps())
+
+
+def test_schema_mismatch_quarantines_whole_batch():
+    """A batch whose schema cannot even be masked per-row (wrong relation
+    schema / wrong payload dtype) is replaced by an all-padding batch and
+    dead-lettered with row == -1."""
+    q = _query()
+    st = _stream(q, n=4)
+    bad = COOUpdate(("A", "C"), jnp.zeros((4, 2), jnp.int32),
+                    {"v": jnp.ones((4,), jnp.float32)})
+    cfg = IntegrityConfig(policy="quarantine", segment_updates=2)
+    eng = _engine()
+    StreamExecutor(eng, integrity=cfg).run(st + [("R", bad)])
+    ref = _engine()
+    StreamExecutor(ref).run(st)
+    np.testing.assert_array_equal(_result(eng), _result(ref))
+    (rec,) = list(cfg.dead_letters)
+    assert rec.row == -1 and REASON_SCHEMA in rec.reasons
+
+    # wrong payload dtype is REASON_DTYPE, strict raises
+    bad_dtype = COOUpdate(("A", "B"), jnp.zeros((4, 2), jnp.int32),
+                          {"v": jnp.ones((4,), jnp.int32)})
+    with pytest.raises(StreamIntegrityError, match=REASON_DTYPE):
+        StreamExecutor(_engine(),
+                       integrity=IntegrityConfig(policy="strict")).run(
+            [("R", bad_dtype)])
+
+
+def test_dead_letter_log_is_bounded():
+    log = DeadLetterLog(max_records=2)
+    from repro.runtime.integrity import DeadLetter
+    for i in range(5):
+        log.append(DeadLetter("R", i, 0, (0, 0), (REASON_NONFINITE,)))
+    assert len(log.records) == 2 and log.dropped == 3 and len(log) == 5
+
+
+def test_permissive_policy_bypasses_validation():
+    q = _query()
+    st = _poison(_stream(q))
+    cfg = IntegrityConfig(policy="permissive", segment_updates=2)
+    eng = _engine()
+    StreamExecutor(eng, integrity=cfg).run(st)
+    assert len(cfg.dead_letters) == 0
+    assert np.isnan(_result(eng)).any()  # the poison went through
+
+
+# ---------------------------------------------------------------------------
+# pillar 2: checksummed snapshots
+# ---------------------------------------------------------------------------
+def test_bitflip_detected_by_checksum(tmp_path):
+    """A bit flipped in a committed leaf file fails restore with
+    ChecksumError; with verification off the corruption loads silently
+    (the negative control proving the checksum is what catches it)."""
+    ck = Checkpointer(str(tmp_path))
+    tree = {"a": jnp.arange(8, dtype=jnp.float32)}
+    with faults.inject("snapshot_committed", mode="bitflip") as inj:
+        ck.save(tree, 1)
+    assert inj.fired and inj.fired[0][2]["step"] == 1
+    with pytest.raises(ChecksumError):
+        ck.restore(tree, 1)
+    lax = Checkpointer(str(tmp_path), verify_checksums=False)
+    restored = lax.restore(tree, 1)  # loads fine — wrong bytes, no error
+    assert not np.array_equal(np.asarray(restored["a"]),
+                              np.arange(8, dtype=np.float32))
+
+
+def test_resume_falls_back_past_bitflipped_snapshot(tmp_path):
+    """End-to-end: a post-commit bit flip in the newest boundary snapshot
+    is caught on resume, the step is quarantined, and replay continues
+    from the previous committed step to the oracle result."""
+    q = _query()
+    st = _stream(q, n=6)
+    eng = _engine()
+    ck = StreamCheckpointer(str(tmp_path), segment_updates=2)
+    with faults.inject("snapshot_committed", at=2, mode="bitflip"):
+        StreamExecutor(eng, checkpoint=ck).run(st, update_engine=True)
+        ck.wait()
+    steps = ck.ckpt.all_steps()
+    assert steps == [2, 4, 6]
+    # simulated restart: fresh engine + executor over the same directory
+    eng2 = _engine()
+    ck2 = StreamCheckpointer(str(tmp_path), segment_updates=2)
+    StreamExecutor(eng2, checkpoint=ck2).resume(st)
+    assert ck2.ckpt.quarantined == [6]
+    assert (tmp_path / "corrupt_step_00000006").exists()
+    ref = _engine()
+    StreamExecutor(ref).run(st)
+    np.testing.assert_array_equal(_result(eng2), _result(ref))
+
+
+def test_quarantined_steps_leave_retention_to_restorable(tmp_path):
+    """Satellite: `keep=3` must retain 3 *restorable* snapshots — a
+    corrupt newest step is renamed out of the step set instead of
+    counting against (or being protected by) retention."""
+    ck = Checkpointer(str(tmp_path), keep=3)
+    tree = {"a": jnp.arange(4, dtype=jnp.float32)}
+    for s in range(1, 5):
+        ck.save(jax.tree.map(lambda x, s=s: x + s, tree), s)
+    assert ck.all_steps() == [2, 3, 4]
+    # corrupt the newest two: torn manifest + flipped leaf
+    (tmp_path / "step_00000004" / "manifest.json").write_text('{"step":')
+    faults._flip_bit(str(tmp_path / "step_00000003" / "leaf_0.npy"))
+    restored, step = ck.restore_latest(tree)
+    assert step == 2
+    assert sorted(ck.quarantined) == [3, 4]
+    assert ck.all_steps() == [2]
+    # retention now only counts restorable steps: saving two more keeps
+    # step 2 alive (4 and 3 no longer occupy retention slots)
+    ck.save(tree, 5)
+    ck.save(tree, 6)
+    assert ck.all_steps() == [2, 5, 6]
+    # a restarted process sweeps the corpses
+    Checkpointer(str(tmp_path))
+    assert not any(n.startswith("corrupt_step_")
+                   for n in os.listdir(tmp_path))
+
+
+def test_torn_manifest_quarantined_by_stream_restore(tmp_path):
+    """StreamCheckpointer.restore_into quarantines a snapshot whose own
+    manifest/leaves are inconsistent and falls back."""
+    q = _query()
+    st = _stream(q, n=4)
+    eng = _engine()
+    ck = StreamCheckpointer(str(tmp_path), segment_updates=2)
+    StreamExecutor(eng, checkpoint=ck).run(st, update_engine=True)
+    ck.wait()
+    assert ck.ckpt.all_steps() == [2, 4]
+    (tmp_path / "step_00000004" / "manifest.json").write_text('{"step":')
+    eng2 = _engine()
+    ck2 = StreamCheckpointer(str(tmp_path), segment_updates=2)
+    meta = ck2.restore_into(eng2)
+    assert int(meta["offset"]) == 2
+    assert ck2.ckpt.quarantined == [4]
+
+
+# ---------------------------------------------------------------------------
+# pillar 3: audited Reevaluate (drift-bounded reconciliation)
+# ---------------------------------------------------------------------------
+def _perturb_root(engine, delta):
+    """Inject divergence into the live root view's first payload slot."""
+    root = engine.tree.name
+    v = engine.views[root]
+    pay = dict(v.payload)
+    lead = jnp.arange(pay["v"].shape[0]) == 0
+    pay["v"] = pay["v"] + jnp.asarray(delta, pay["v"].dtype) * \
+        lead.reshape((-1,) + (1,) * (pay["v"].ndim - 1))
+    engine.views[root] = dataclasses.replace(v, payload=pay)
+
+
+def test_audit_clean_run_is_exact_and_cheap():
+    q = _query()
+    cfg = IntegrityConfig(policy="quarantine", audit_interval=2,
+                          segment_updates=2)
+    eng = _engine(store_base=True)
+    ex = StreamExecutor(eng, integrity=cfg)
+    ex.run(_stream(q))
+    assert len(cfg.audit_log) == 2  # 4 segments, every 2nd audited
+    assert all(r["exact"] and not r["repaired"] for r in cfg.audit_log)
+    assert all(s["audit_s"] >= 0 for s in ex.last_segment_stats)
+    ref = _engine()
+    StreamExecutor(ref).run(_stream(q))
+    np.testing.assert_array_equal(_result(eng), _result(ref))
+
+
+def test_audit_detects_and_repairs_float_drift():
+    """Float-ring divergence injected between run halves is caught at the
+    next audit boundary and repaired from base — the final result equals
+    the oracle despite the corruption."""
+    q = _query()
+    st = _stream(q)
+    cfg = IntegrityConfig(policy="quarantine", audit_interval=1,
+                          segment_updates=2)
+    eng = _engine(store_base=True)
+    ex = StreamExecutor(eng, integrity=cfg)
+    ex.run(st[:4])
+    _perturb_root(eng, 7.0)
+    ex.run(st[4:])
+    repaired = [r for r in cfg.audit_log if r["repaired"]]
+    assert len(repaired) == 1
+    assert repaired[0]["max_abs_err"] == pytest.approx(7.0)
+    assert all(r["exact"] for r in cfg.audit_log[-1:])  # healed by the end
+    ref = _engine()
+    StreamExecutor(ref).run(st)
+    np.testing.assert_array_equal(_result(eng), _result(ref))
+
+
+def test_audit_repair_preserves_sparse_capacity():
+    """The repair must swap the recomputed view in under the *live*
+    capacity — changing it would invalidate the pipelined compiled
+    segment program mid-run."""
+    eng = _engine(store_base=True)
+    StreamExecutor(eng).run(_stream(_query(), n=4))
+    root = eng.tree.name
+    cap = eng.views[root].capacity
+    _perturb_root(eng, 5.0)
+    cfg = IntegrityConfig(audit_interval=1)
+    records = audit_engine(eng, cfg, segment=0)
+    assert records[0].repaired
+    assert isinstance(eng.views[root], SparseRelation)
+    assert eng.views[root].capacity == cap
+
+
+def test_audit_integer_ring_divergence_raises():
+    """Exact rings cannot drift: any integer-ring mismatch is state
+    corruption, not numerics, and must raise — never be repaired
+    silently."""
+    ring = count_ring()
+    eng = IVMEngine.build(_query(ring), _db(ring),
+                          var_order=chain(["A", "B"], {"B": [["C"]]}),
+                          storage="sparse", store_base=True)
+    StreamExecutor(eng).run(_stream(_query(ring), n=4))
+    root = eng.tree.name
+    v = eng.views[root]
+    pay = dict(v.payload)
+    pay["v"] = pay["v"].at[0].add(1)
+    eng.views[root] = dataclasses.replace(v, payload=pay)
+    cfg = IntegrityConfig(audit_interval=1)
+    with pytest.raises(StreamIntegrityError, match="integer-ring"):
+        audit_engine(eng, cfg, segment=0)
+    assert cfg.audit_log and not cfg.audit_log[-1]["exact"]
+
+
+def test_audit_without_stored_base_raises():
+    cfg = IntegrityConfig(audit_interval=1)
+    with pytest.raises(StreamIntegrityError, match="store_base"):
+        audit_engine(_engine(), cfg)  # base not stored
+
+
+def test_nan_counts_as_infinite_divergence():
+    eng = _engine(store_base=True)
+    StreamExecutor(eng).run(_stream(_query(), n=2))
+    _perturb_root(eng, np.nan)
+    cfg = IntegrityConfig(audit_interval=1)
+    records = audit_engine(eng, cfg, segment=0)
+    assert records[0].repaired and records[0].max_abs_err == np.inf
+    assert not np.isnan(_result(eng)).any()
+
+
+# ---------------------------------------------------------------------------
+# pillar 4: graceful degradation
+# ---------------------------------------------------------------------------
+SEG_DOMS = dict(A=97, B=89, C=5)
+
+
+def _seg_query():
+    return Query(relations={"R": ("A", "B"), "T": ("B", "C")},
+                 free_vars=("A",), ring=sum_ring(), domains=SEG_DOMS,
+                 lifts={"C": ("value",)})
+
+
+def _seg_engine(seed, **kw):
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+
+    def rel(schema):
+        shape = tuple(SEG_DOMS[v] for v in schema)
+        mult = np.zeros(shape, np.float32)
+        idx = tuple(rng.integers(0, d, size=8) for d in shape)
+        np.add.at(mult, idx, 1.0)
+        return DenseRelation(tuple(schema), ring, {"v": jnp.asarray(mult)})
+
+    return IVMEngine.build(_seg_query(), {"R": rel("AB"), "T": rel("BC")},
+                           var_order=chain(["A", "B"], {"B": [["C"]]}),
+                           storage="sparse", **kw)
+
+
+def _seg_upd(q, rel, B, seed):
+    rng = np.random.default_rng(seed)
+    sch = q.relations[rel]
+    keys = np.stack([rng.integers(0, SEG_DOMS[v], size=B) for v in sch],
+                    axis=1).astype(np.int32)
+    return (rel, COOUpdate(sch, jnp.asarray(keys),
+                           {"v": jnp.asarray(np.ones(B, np.float32))}))
+
+
+def test_emergency_resegmentation_on_admission_pressure():
+    """A segment admitted with an under-budgeted capacity plan (the state
+    a stale plan or concurrent growth leaves) is split + rehashed at
+    admission instead of overflow-dropping rows, the remainder spliced
+    into the segment queue."""
+    q = _seg_query()
+    flood = [_seg_upd(q, "R", 32, 300 + i) for i in range(12)]
+    cfg = IntegrityConfig(policy="quarantine")
+    eng = _seg_engine(2)
+    ex = StreamExecutor(eng, integrity=cfg)
+    ex._run_segmented([(flood, {})])  # deliberately unbudgeted plan
+    kinds = [d["kind"] for d in cfg.degrade_log]
+    assert "emergency_resegment" in kinds
+    assert cfg.degrade_log[0]["occupancy"]  # telemetry captured
+    assert len(ex.last_segment_stats) > 1  # the splice ran as segments
+    seq = _seg_engine(2)
+    for rel, upd in flood:
+        seq.apply_update(rel, upd)
+    np.testing.assert_array_equal(_result(eng), _result(seq))
+
+
+def test_explicit_state_capacity_error_spills_to_eager():
+    """The explicit-state raw path cannot re-segment (the caller owns the
+    state), so capacity pressure spills to the eager per-batch path —
+    same result, telemetry in degrade_log."""
+    q = _seg_query()
+    cfg = IntegrityConfig(policy="quarantine")
+    eng = _seg_engine(6)
+    ex = StreamExecutor(eng, integrity=cfg)
+    fill = [_seg_upd(q, "R", 24, 600)]
+    state = ex.run(fill, update_engine=False)
+    top_up = [_seg_upd(q, "R", 16, 601)]
+    # without integrity this exact call raises (test_stream.py proves it)
+    out = ex.run(top_up, state=state)
+    assert [d["kind"] for d in cfg.degrade_log] == ["eager_spill"]
+    from repro.core import storage as storage_mod
+    root = eng.tree.name
+    seq = _seg_engine(6)
+    for rel, upd in fill + top_up:
+        seq.apply_update(rel, upd)
+    np.testing.assert_array_equal(
+        np.asarray(storage_mod.as_dense(out[0][root]).payload["v"]),
+        np.asarray(storage_mod.as_dense(seq.views[root]).payload["v"]))
+
+
+def test_capacity_degrade_off_still_raises():
+    q = _seg_query()
+    cfg = IntegrityConfig(policy="quarantine", capacity_degrade=False)
+    eng = _seg_engine(6)
+    ex = StreamExecutor(eng, integrity=cfg)
+    state = ex.run([_seg_upd(q, "R", 24, 600)], update_engine=False)
+    with pytest.raises(StreamCapacityError):
+        ex.run([_seg_upd(q, "R", 16, 601)], state=state)
+
+
+# ---------------------------------------------------------------------------
+# supervisor escalation ladder
+# ---------------------------------------------------------------------------
+def _poison_newest_snapshot(ck, eng, n_updates):
+    """Overwrite the newest committed snapshot with a NaN-poisoned state
+    — valid bytes, valid checksums: only the NaN guard sees it."""
+    _perturb_root(eng, np.nan)
+    ck.save_boundary(eng, offset=n_updates, segment=99, blocking=True)
+
+
+def test_ladder_restores_previous_snapshot_past_poison(tmp_path):
+    """A committed-but-poisoned newest snapshot defeats plain restart
+    (rung 1 re-restores the same poison); rung 2 quarantines it and
+    resumes from the previous committed step."""
+    q = _query()
+    st = _stream(q, n=6)
+    eng = _engine(store_base=True)
+    ck = StreamCheckpointer(str(tmp_path), segment_updates=2)
+    StreamExecutor(eng, checkpoint=ck).run(st, update_engine=True)
+    ck.wait()
+    _poison_newest_snapshot(ck, eng, len(st))
+    eng2 = _engine(store_base=True)
+    ex2 = StreamExecutor(eng2,
+                         checkpoint=StreamCheckpointer(str(tmp_path),
+                                                       segment_updates=2))
+    sup = StreamSupervisor(max_restarts=4, backoff_s=0.01)
+    _, restarts, log = sup.run(ex2, st)
+    actions = [e.get("action") for e in log if "action" in e]
+    assert actions == ["restart", "restore_previous_snapshot"]
+    ref = _engine()
+    StreamExecutor(ref).run(st)
+    np.testing.assert_array_equal(_result(eng2), _result(ref))
+
+
+def test_ladder_reevaluates_from_base_when_no_older_snapshot(tmp_path):
+    """With only ONE (poisoned) snapshot, rung 2 has nothing older to
+    fall back to — the ladder escalates to the strongest rung: recompute
+    every view from stored base relations, re-commit healed, resume."""
+    q = _query()
+    st = _stream(q, n=6)
+    eng = _engine(store_base=True)
+    ck = StreamCheckpointer(str(tmp_path), segment_updates=2)
+    StreamExecutor(eng, checkpoint=ck).run(st, update_engine=True)
+    ck.wait()
+    _poison_newest_snapshot(ck, eng, len(st))
+    for s in ck.ckpt.all_steps()[:-1]:
+        shutil.rmtree(tmp_path / f"step_{s:08d}")
+    eng2 = _engine(store_base=True)
+    ex2 = StreamExecutor(eng2,
+                         checkpoint=StreamCheckpointer(str(tmp_path),
+                                                       segment_updates=2))
+    sup = StreamSupervisor(max_restarts=4, backoff_s=0.01)
+    _, restarts, log = sup.run(ex2, st)
+    actions = [e.get("action") for e in log if "action" in e]
+    assert actions[-1] == "reevaluate_from_base"
+    ref = _engine()
+    StreamExecutor(ref).run(st)
+    np.testing.assert_array_equal(_result(eng2), _result(ref))
+
+
+def test_ladder_downgrades_strict_to_quarantine(tmp_path):
+    """A StreamIntegrityError under policy="strict" deterministically
+    recurs on restart, so the ladder jumps straight to the
+    quarantine-batch rung: relax the policy and let admission mask the
+    poison into dead letters."""
+    q = _query()
+    st = _poison(_stream(q, n=6))
+    cfg = IntegrityConfig(policy="strict", segment_updates=2)
+    ex = StreamExecutor(_engine(store_base=True),
+                        checkpoint=StreamCheckpointer(str(tmp_path),
+                                                      segment_updates=2),
+                        integrity=cfg)
+    sup = StreamSupervisor(max_restarts=3, backoff_s=0.01)
+    _, restarts, log = sup.run(ex, st)
+    assert restarts == 1
+    assert [e.get("action") for e in log if "action" in e] == \
+        ["quarantine_batch"]
+    assert cfg.policy == "quarantine"
+    assert len(cfg.dead_letters) >= 1
+
+
+def test_escalate_off_keeps_plain_restarts(tmp_path):
+    q = _query()
+    st = _stream(q, n=4)
+    ex = StreamExecutor(_engine(),
+                        checkpoint=StreamCheckpointer(str(tmp_path),
+                                                      segment_updates=2))
+    sup = StreamSupervisor(max_restarts=2, backoff_s=0.01, escalate=False)
+    with faults.inject("mid_segment", at=0):
+        _, restarts, log = sup.run(ex, st)
+    assert restarts == 1
+    assert [e.get("action") for e in log if "action" in e] == ["restart"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: straggler monitor wired into the segment pipeline
+# ---------------------------------------------------------------------------
+def test_straggler_monitor_fed_from_segment_stats():
+    q = _query()
+    eng = _engine()
+    mon = StragglerMonitor(factor=3.0)
+    ex = StreamExecutor(eng, integrity=IntegrityConfig(segment_updates=2),
+                        stragglers=mon)
+    ex.run(_stream(q))
+    stats = ex.last_segment_stats
+    assert len(stats) == 4
+    assert all("straggler" in s and "straggler_baseline" in s
+               for s in stats)
+    assert mon.baseline is not None and mon.baseline > 0
+    # the executor's default monitor exists even when none is passed
+    assert StreamExecutor(_engine()).stragglers.baseline is None
+
+
+def test_straggler_verdict_matches_monitor_decision():
+    """Feed the same walls to a twin monitor: the stats column must be
+    exactly the monitor's verdict sequence (no resynthesis)."""
+    q = _query()
+    eng = _engine()
+    ex = StreamExecutor(eng, integrity=IntegrityConfig(segment_updates=2))
+    ex.run(_stream(q))
+    twin = StragglerMonitor(factor=3.0)
+    for s in ex.last_segment_stats:
+        want = twin.observe(s["segment"], s["admit_s"] + s["dispatch_s"])
+        assert s["straggler"] == want

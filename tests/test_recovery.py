@@ -220,9 +220,13 @@ def run_killed_then_resumed(tmp_path, storage, sched_key, point, at,
     return chaos_result(eng2), fired
 
 
+#: the scheduled extended-chaos CI job raises this for deeper sweeps
+_CHAOS_EXAMPLES = int(os.environ.get("REPRO_CHAOS_EXAMPLES", "6"))
+
+
 @given(st.integers(0, 2), st.integers(0, 2), st.integers(0, 1),
        st.integers(0, 2))
-@settings(max_examples=6, deadline=None)
+@settings(max_examples=_CHAOS_EXAMPLES, deadline=None)
 def test_chaos_random_injection_recovers_bit_identical(
         tmp_path_factory, point_i, at, storage_i, sched_i):
     """The chaos sweep: kill at a random injection point/occurrence, in a

@@ -372,3 +372,103 @@ def test_noncommutative_ring_falls_back_to_eager_join():
     ref = np.einsum("bik,bkj->bij", np.asarray(payload["M"]),
                     np.asarray(sib.payload["M"])[keys[:, 0]])
     np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# adversarial stress: hashed-COO under zombie pressure, near-capacity
+# occupancy, and auto-grow racing deletes (integrity-layer satellite)
+# ---------------------------------------------------------------------------
+#: the scheduled extended-chaos CI job raises this for deeper sweeps
+_CHAOS_EXAMPLES = int(os.environ.get("REPRO_CHAOS_EXAMPLES", "6"))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=_CHAOS_EXAMPLES, deadline=None)
+def test_rehash_under_high_zombie_ratio(seed):
+    """Insert-then-delete churn leaves the table mostly zombies (ring-zero
+    slots still occupying probe chains).  Rehash at every capacity — same,
+    grown, and minimal — must drop every zombie and stay bit-identical to
+    the dense oracle."""
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+    sparse = SparseRelation.zeros(SCHEMA, ring, DOMS, capacity=128)
+    dense = DenseRelation.zeros(SCHEMA, ring, DOMS)
+    inserted = []
+    for _ in range(3):
+        keys, vals = _rand_batch(rng, int(rng.integers(8, 20)))
+        vals = jnp.abs(vals) + 1  # strict inserts
+        sparse = sparse.scatter_add(keys, {"v": vals})
+        dense = dense.scatter_add(keys, {"v": vals})
+        inserted.append((np.asarray(keys), np.asarray(vals)))
+    # delete ~90% of what was inserted: exact negations zombify the slots
+    for keys, vals in inserted:
+        n = max(1, int(0.9 * len(keys)))
+        kill_k = jnp.asarray(keys[:n])
+        kill_v = jnp.asarray(-vals[:n])
+        sparse = sparse.scatter_add(kill_k, {"v": kill_v})
+        dense = dense.scatter_add(kill_k, {"v": kill_v})
+    assert sparse.num_slots_used_sync() > sparse.num_keys_sync()  # zombies
+    for cap in (sparse.capacity, 2 * sparse.capacity, 16):
+        compact = sparse.rehash(cap)
+        assert compact.num_slots_used_sync() == compact.num_keys_sync()
+        _assert_same(compact, dense)
+    _assert_same(sparse, dense)  # the zombified original still reads right
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=_CHAOS_EXAMPLES, deadline=None)
+def test_rehash_at_near_capacity_occupancy(seed):
+    """Fill the table to the load-factor edge (long probe chains, worst
+    case for open addressing), then rehash to the same capacity: every
+    key must survive the re-probe, bit-identical to dense."""
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+    cap = 32
+    budget = int(storage_mod.LOAD_FACTOR * cap)  # 22 of 32 slots
+    sparse = SparseRelation.zeros(SCHEMA, ring, DOMS, capacity=cap)
+    dense = DenseRelation.zeros(SCHEMA, ring, DOMS)
+    seen: set = set()
+    while len(seen) < budget:
+        keys, _ = _rand_batch(rng, 8)
+        for k in np.asarray(keys):
+            if len(seen) < budget:
+                seen.add(tuple(int(x) for x in k))
+    keys = jnp.asarray(np.array(sorted(seen), np.int32))
+    vals = {"v": jnp.asarray(rng.integers(1, 4, size=len(seen))
+                             .astype(np.float32))}
+    sparse = sparse.scatter_add(keys, vals)
+    dense = dense.scatter_add(keys, vals)
+    assert sparse.num_keys_sync() == budget
+    _assert_same(sparse.rehash(cap), dense)  # same-capacity re-probe
+    _assert_same(sparse.rehash(2 * cap), dense)
+    # updates against the near-full table still land (no displaced drops)
+    upd_k, upd_v = _rand_batch(rng, 6)
+    probe = sparse.scatter_add(upd_k, {"v": jnp.zeros_like(upd_v)})
+    _assert_same(probe, dense)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=_CHAOS_EXAMPLES, deadline=None)
+def test_eager_autogrow_racing_deletes(seed):
+    """The eager growth policy sizes rehashes from *slot* occupancy,
+    which deletes inflate (zombies) — interleaving heavy deletes with
+    auto-grow must neither drop live keys nor resurrect dead ones."""
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+    sparse = SparseRelation.zeros(SCHEMA, ring, DOMS, capacity=4)
+    dense = DenseRelation.zeros(SCHEMA, ring, DOMS)
+    live: list = []
+    for step in range(6):
+        if step % 2 == 0 or not live:
+            keys, vals = _rand_batch(rng, int(rng.integers(6, 14)))
+            vals = jnp.abs(vals) + 1
+            live.append((np.asarray(keys), np.asarray(vals)))
+        else:  # exact-negation delete of a previous insert batch
+            k, v = live.pop(int(rng.integers(0, len(live))))
+            keys, vals = jnp.asarray(k), jnp.asarray(-v)
+        sparse = storage_mod.grow_if_loaded(sparse, budget=len(keys))
+        sparse = sparse.scatter_add(keys, {"v": vals})
+        dense = dense.scatter_add(keys, {"v": vals})
+        _assert_same(sparse, dense)  # every interleaving point agrees
+    assert sparse.capacity > 4
+    _assert_same(sparse.rehash(), dense)

@@ -357,11 +357,11 @@ def test_segmented_run_restores_engine_when_a_segment_raises(monkeypatch):
     calls = dict(n=0)
     orig = StreamExecutor._admit_segment
 
-    def failing_admit(self, sub_stream, grow_caps):
+    def failing_admit(self, sub_stream, grow_caps, offset=0):
         calls["n"] += 1
         if calls["n"] >= 2:
             raise RuntimeError("boom mid-segment")
-        return orig(self, sub_stream, grow_caps)
+        return orig(self, sub_stream, grow_caps, offset)
 
     monkeypatch.setattr(StreamExecutor, "_admit_segment", failing_admit)
     with pytest.raises(RuntimeError, match="boom"):
