@@ -1,0 +1,284 @@
+"""Serving plane: concurrent reads over the maintained view hierarchy.
+
+Three legs, all written to ``BENCH_serve.json``:
+
+* **read throughput vs batch** — batched point lookups against a served
+  snapshot of the widest ``pc``-keyed housing view (``pc=65536`` at
+  sub-percent fill), dense vs hashed-COO backend, batch ∈ {64, 1024,
+  8192}: the dense row is the vectorized gather, the sparse row the
+  batched vmap'd Knuth-hash probe.
+* **read latency percentiles** — p50/p95/p99 over ~200 timed batched
+  lookups (batch 256) per backend; the serving path is sync-free, so a
+  timed lookup is dispatch + device execution + one explicit
+  ``block_until_ready``.
+* **update throughput under read load** — the acceptance gate: the
+  housing ``pc=65536`` sparse stream and the degree-m cofactor stream
+  run through a registry-attached executor (a generation published per
+  segment boundary) with and without a concurrent reader thread issuing
+  throttled batched lookups against the newest generation.  Engine state
+  is container-snapshot-restored between passes so every pass replays
+  the identical segment trajectory against warm compile caches; modes
+  are interleaved best-of-5 (shared-core CPU host — a contended stretch
+  must hit both modes).  Asserts loaded update throughput ≥ 0.9×
+  unloaded.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro.core import IVMEngine, Query, SparseRelation, StreamExecutor, sum_ring
+from repro.core.apps import regression
+from repro.serve import ViewServer
+
+from .common import (HOUSING_DOMS_BIG, HOUSING_RELATIONS, RETAILER_DOMS,
+                     RETAILER_RELATIONS, emit, housing_vo, retailer_vo,
+                     synth_db, synth_low_fill_db, update_stream)
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+
+def _block(res):
+    import jax
+
+    jax.block_until_ready(jax.tree.leaves(res.data)[0])
+    return res
+
+
+def _housing_engine(storage, seed=0):
+    ring = sum_ring()
+    big = dict(HOUSING_DOMS_BIG)
+    q = Query(relations=HOUSING_RELATIONS, free_vars=(), ring=ring,
+              domains=big, lifts={"h2": ("value",)})
+    db, active = synth_low_fill_db(HOUSING_RELATIONS, big, ring,
+                                   np.random.default_rng(seed), "pc",
+                                   n_active=512)
+    eng = IVMEngine.build(q, db, var_order=housing_vo(), strategy="fivm",
+                          storage=storage)
+    return q, eng, active
+
+
+def _widest_view(eng):
+    """The served view with the largest key space (the wide ``pc``-keyed
+    dictionary is the interesting lookup target)."""
+    return max((n for n, v in eng.views.items() if v.schema),
+               key=lambda n: int(np.prod(eng.views[n].domains)))
+
+
+def _probe_batch(view, active, rng, b):
+    """Half the rows hit the active key pool, half are uniform (mostly
+    misses at sub-percent fill) — both paths of the probe are priced."""
+    cols = []
+    for v in view.schema:
+        d = int(view.domain_of(v))
+        col = rng.integers(0, d, size=b)
+        if v == "pc":
+            hot = rng.choice(active, size=b)
+            col = np.where(rng.random(b) < 0.5, hot, col)
+        cols.append(col)
+    return np.stack(cols, axis=1).astype(np.int32)
+
+
+def _read_throughput_leg(results, rows, batches, seed=0, iters=20,
+                         repeats=3):
+    for label, storage in (("dense", "dense"), ("sparse", "auto")):
+        _, eng, active = _housing_engine(storage, seed)
+        server = ViewServer(StreamExecutor(eng))
+        name = _widest_view(eng)
+        backend = ("sparse" if isinstance(eng.views[name], SparseRelation)
+                   else "dense")
+        rng = np.random.default_rng(seed + 1)
+        for b in batches:
+            keys = _probe_batch(eng.views[name], active, rng, b)
+            _block(server.point(name, keys))  # warm this size class
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    _block(server.point(name, keys))
+                best = min(best, time.perf_counter() - t0)
+            lps = b * iters / best
+            results.append(dict(
+                dataset="housing_sparse_pc65536", leg="read_throughput",
+                storage=label, view_backend=backend, view=name, batch=b,
+                lookups_per_s=round(lps)))
+            rows.append((f"serve/read_throughput/{label}/b={b}",
+                         round(1e9 * best / (b * iters), 1),
+                         f"lookups_per_s={lps:.0f};view={name};"
+                         f"backend={backend}"))
+
+
+def _read_latency_leg(results, rows, seed=0, b=256, n=200):
+    for label, storage in (("dense", "dense"), ("sparse", "auto")):
+        _, eng, active = _housing_engine(storage, seed)
+        server = ViewServer(StreamExecutor(eng))
+        name = _widest_view(eng)
+        rng = np.random.default_rng(seed + 2)
+        batches = [_probe_batch(eng.views[name], active, rng, b)
+                   for _ in range(8)]
+        for k in batches:
+            _block(server.point(name, k))  # warm
+        lat = []
+        for i in range(n):
+            t0 = time.perf_counter()
+            _block(server.point(name, batches[i % len(batches)]))
+            lat.append(time.perf_counter() - t0)
+        p50, p95, p99 = (float(np.percentile(lat, p)) for p in (50, 95, 99))
+        results.append(dict(
+            dataset="housing_sparse_pc65536", leg="read_latency",
+            storage=label, view=name, batch=b, n_lookups=n,
+            p50_ms=round(p50 * 1e3, 3), p95_ms=round(p95 * 1e3, 3),
+            p99_ms=round(p99 * 1e3, 3)))
+        rows.append((f"serve/read_latency/{label}/b={b}",
+                     round(p50 * 1e6, 1),
+                     f"p50_ms={p50*1e3:.2f};p95_ms={p95*1e3:.2f};"
+                     f"p99_ms={p99*1e3:.2f}"))
+
+
+def _under_read_load_leg(results, rows, seed=0, read_batch=256,
+                         throttle_s=0.01):
+    """Update throughput with vs without a concurrent reader thread.
+
+    Both modes run registry-attached (a generation published per
+    boundary), so the A/B isolates the *read load*, not publication —
+    publication cost is already priced in the executor's ``publish_s``
+    telemetry, reported alongside.  The reader issues a fixed-rate load
+    (~100 req/s × ``read_batch`` lookups) rather than a closed loop:
+    XLA:CPU update segments already use every host core, so an
+    unthrottled reader just measures core oversubscription, not the
+    serving plane.
+    """
+    import jax
+
+    ring = sum_ring()
+    big = dict(HOUSING_DOMS_BIG)
+    sq = Query(relations=HOUSING_RELATIONS, free_vars=(), ring=ring,
+               domains=big, lifts={"h2": ("value",)})
+    sdb, active = synth_low_fill_db(HOUSING_RELATIONS, big, ring,
+                                    np.random.default_rng(seed), "pc",
+                                    n_active=512)
+    sstream = update_stream(HOUSING_RELATIONS, big, ring,
+                            np.random.default_rng(seed + 1), 512, 12,
+                            key_pools={"pc": active})
+    cq = regression.cofactor_query(RETAILER_RELATIONS, RETAILER_DOMS)
+    cdb = synth_db(RETAILER_RELATIONS, RETAILER_DOMS, cq.ring,
+                   np.random.default_rng(seed))
+    cstream = update_stream(RETAILER_RELATIONS, RETAILER_DOMS, cq.ring,
+                            np.random.default_rng(seed + 2), 64, 12)
+    datasets = (
+        ("housing_sparse_pc65536", sq, sdb, housing_vo(), "auto", sstream,
+         active),
+        ("retailer_cofactor_degree_m", cq, cdb, retailer_vo(), "auto",
+         cstream, None),
+    )
+
+    for dataset, q, db, vo, storage, stream, pool in datasets:
+        n_tuples = sum(upd.batch for _, upd in stream)
+        execs, servers = {}, {}
+        for mode in ("unloaded", "loaded"):
+            eng = IVMEngine.build(q, db, var_order=vo, strategy="fivm",
+                                  storage=storage)
+            execs[mode] = StreamExecutor(eng)
+            servers[mode] = ViewServer(execs[mode], segment_updates=4)
+        name = _widest_view(execs["loaded"].engine)
+        rng = np.random.default_rng(seed + 3)
+        read_keys = _probe_batch(execs["loaded"].engine.views[name],
+                                 pool if pool is not None
+                                 else np.arange(4), rng, read_batch)
+
+        def one_pass(mode, reads_out=None):
+            ex = execs[mode]
+            eng = ex.engine
+            saved = (dict(eng.views), dict(eng.base), dict(eng.indicators))
+            stop = threading.Event()
+            t = None
+            n_reads = [0]
+            if mode == "loaded":
+                server = servers[mode]
+
+                def reader():
+                    while not stop.is_set():
+                        _block(server.point(name, read_keys))
+                        n_reads[0] += 1
+                        time.sleep(throttle_s)
+
+                t = threading.Thread(target=reader, daemon=True)
+                t.start()
+            t0 = time.perf_counter()
+            state = ex.run(stream, pipeline=True)
+            jax.block_until_ready(state)
+            wall = time.perf_counter() - t0
+            stop.set()
+            if t is not None:
+                t.join(timeout=30)
+            eng.set_state(saved)
+            if reads_out is not None:
+                reads_out[0] = n_reads[0]
+            publish_s = sum(s.get("publish_s", 0.0)
+                            for s in ex.last_segment_stats)
+            return wall, publish_s
+
+        for mode in execs:  # warm: compile segment programs + read kernels
+            one_pass(mode)
+        walls = {m: float("inf") for m in execs}
+        publishes, reads = {}, 0
+        for _ in range(5):  # interleaved best-of-5
+            for mode in execs:
+                reads_out = [0]
+                wall, publish_s = one_pass(mode, reads_out)
+                if wall < walls[mode]:
+                    walls[mode] = wall
+                    publishes[mode] = publish_s
+                    if mode == "loaded":
+                        reads = reads_out[0]
+
+        ratio = walls["unloaded"] / walls["loaded"]
+        read_lps = reads * read_batch / walls["loaded"]
+        boundaries = len(execs["loaded"].last_segment_stats)
+        row = dict(dataset=dataset, leg="update_under_read_load",
+                   strategy="fivm", batch=stream[0][1].batch,
+                   n_batches=len(stream), n_boundaries=boundaries,
+                   wall_unloaded_s=round(walls["unloaded"], 4),
+                   wall_loaded_s=round(walls["loaded"], 4),
+                   loaded_over_unloaded_throughput=round(ratio, 3),
+                   update_tuples_per_s_loaded=round(n_tuples
+                                                    / walls["loaded"]),
+                   concurrent_read_lookups_per_s=round(read_lps),
+                   publish_s_per_pass=round(publishes["loaded"], 4),
+                   served_view=name)
+        results.append(row)
+        rows.append((
+            f"serve/update_under_read_load/{dataset}"
+            f"/b={stream[0][1].batch}",
+            round(1e6 * walls["loaded"] / n_tuples, 1),
+            f"wall_unloaded={walls['unloaded']:.3f}s;"
+            f"wall_loaded={walls['loaded']:.3f}s;"
+            f"tput_ratio={ratio:.2f};"
+            f"read_lps={read_lps:.0f};"
+            f"publish_s={publishes['loaded']:.3f}s"))
+        assert ratio >= 0.9, (
+            f"{dataset}: concurrent reads cost more than 10% update "
+            f"throughput: loaded={walls['loaded']:.3f}s "
+            f"unloaded={walls['unloaded']:.3f}s ({ratio:.2f}x)")
+
+
+def run(batches=(64, 1024, 8192), seed: int = 0,
+        json_path: str | None = JSON_PATH):
+    rows, results = [], []
+    _read_throughput_leg(results, rows, batches, seed=seed)
+    _read_latency_leg(results, rows, seed=seed)
+    _under_read_load_leg(results, rows, seed=seed)
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump({"benchmark": "serving_plane", "results": results},
+                      f, indent=2)
+        print(f"# wrote {os.path.abspath(json_path)}")
+    return emit(rows, ("name", "ns_per_lookup_or_us_per_tuple", "derived"))
+
+
+if __name__ == "__main__":
+    run()

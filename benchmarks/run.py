@@ -12,8 +12,8 @@ import traceback
 
 from . import (bench_batch_size, bench_cofactor, bench_factorized_payloads,
                bench_grad_compression, bench_kernels, bench_matrix_chain,
-               bench_stream, bench_sum_aggregates, bench_triangle,
-               bench_view_counts, roofline)
+               bench_serve, bench_stream, bench_sum_aggregates,
+               bench_triangle, bench_view_counts, roofline)
 
 
 def main() -> None:
@@ -26,6 +26,10 @@ def main() -> None:
         ("stream executor (fused vs per-call; BENCH_stream.json)",
          lambda: bench_stream.run(
              batches=(16, 64, 256, 1024) if args.full else (16, 64, 256))),
+        ("serve (snapshot reads; BENCH_serve.json)",
+         lambda: bench_serve.run(
+             batches=(64, 1024, 8192, 32768) if args.full
+             else (64, 1024, 8192))),
         ("sum_aggregates (Fig 8)", lambda: bench_sum_aggregates.run(
             batch=512 if args.full else 256)),
         ("matrix_chain (Fig 9)", lambda: bench_matrix_chain.run(

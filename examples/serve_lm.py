@@ -1,20 +1,96 @@
-"""Batched serving with F-IVM adapter maintenance (integration point #2).
+"""LM-serving demo: batched generation with F-IVM adapter maintenance.
 
-Serves a reduced LM with batched greedy generation, then hot-swaps a
-rank-1 adapter delta onto a projection weight in O(p²) — the paper's
-factorizable-update lock applied to the serving path — and keeps serving
-without a re-merge or server restart.
+This is the retired ``repro.launch.serve`` scaffolding, kept as an
+*example* of F-IVM integration point #2 (DESIGN.md §5): merged weight
+products (LoRA-style W + B·A) maintained incrementally under rank-r
+adapter updates via the factorizable-update lock — O(p²·r) per swap
+instead of an O(p³) re-merge, applied to a live decode loop without a
+server restart.
+
+It serves token decoding, not views.  The canonical serving plane for
+the maintained view hierarchy is ``repro.serve.ViewServer``
+(DESIGN.md §12) — snapshot-consistent point/range/top-k lookups
+concurrent with stream execution.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
+import dataclasses
+import sys
+import time
+
 import numpy as np
+
+import jax
 import jax.numpy as jnp
 
-import sys
-sys.path.insert(0, "src")
+if "src" not in sys.path:
+    sys.path.insert(0, "src")
 
-from repro.configs.base import get_config
-from repro.launch.serve import Server
+from repro.configs.base import get_config  # noqa: E402
+from repro.models import registry  # noqa: E402
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # [B, n_new]
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+class Server:
+    """Greedy batched generation with a fixed-capacity KV cache."""
+
+    def __init__(self, cfg, params=None, cache_len: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.api = registry.build(cfg)
+        self.params = params if params is not None else self.api.init(
+            jax.random.PRNGKey(seed))
+        self.cache_len = cache_len
+        self._decode = jax.jit(self.api.decode_step, donate_argnums=(3,))
+        self._prefill = jax.jit(
+            lambda p, b: self.api.prefill(p, b, cache_len=cache_len))
+
+    def generate(self, batch: dict, n_new: int) -> GenerationResult:
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        t1 = time.perf_counter()
+        prompt_len = batch["tokens"].shape[1]
+        if self.cfg.frontend == "vision":
+            prompt_len += batch["patches"].shape[1]
+        out = [tok]
+        pos = prompt_len
+        for i in range(n_new - 1):
+            logits, cache = self._decode(self.params, tok,
+                                         jnp.asarray(pos + i, jnp.int32),
+                                         cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        t2 = time.perf_counter()
+        toks = np.stack([np.asarray(t) for t in out], axis=1)
+        n_tok = toks.size
+        return GenerationResult(tokens=toks, prefill_s=t1 - t0,
+                                decode_s=t2 - t1,
+                                tokens_per_s=n_tok / max(t2 - t1, 1e-9))
+
+    # -- F-IVM adapter maintenance (lock #2 on the serving path) -----------
+    def swap_adapter_rank_r(self, path: tuple, u: jnp.ndarray,
+                            v: jnp.ndarray):
+        """Apply a rank-1 adapter delta W += u vᵀ to the parameter at
+        ``path`` in O(p²) — the factorized update is applied directly, no
+        re-merge of the dense product."""
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(self.params)
+        new = []
+        for kp, leaf in leaves:
+            key = tuple(str(getattr(k, "key", k)) for k in kp)
+            if key == path:
+                assert leaf.ndim == 2, "rank-r swap targets 2-D weights"
+                leaf = leaf + jnp.outer(u, v).astype(leaf.dtype)
+            new.append(leaf)
+        self.params = jax.tree_util.tree_unflatten(treedef, new)
 
 
 def main():

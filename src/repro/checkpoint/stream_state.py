@@ -72,12 +72,21 @@ class StreamCheckpointer:
 
     # ------------------------------------------------------------------ save
     def save_boundary(self, engine, offset: int, segment: int,
-                      blocking: bool = False) -> None:
+                      blocking: bool = False,
+                      view_copies: dict | None = None) -> None:
         """Snapshot ``engine`` as having applied ``offset`` stream updates.
 
         Async by default: hands the writer thread fresh device copies
         (the caller is about to donate the originals to the next
-        segment's program) and returns without a host sync."""
+        segment's program) and returns without a host sync.
+
+        ``view_copies`` are already-dispatched device copies of (some
+        of) the engine's views — the serving plane's registry publishes
+        generation-stamped copies at the same boundary, and a boundary
+        that both publishes and checkpoints must not copy each view
+        twice: the executor passes the registry's stamped copies here
+        and only the remaining leaves (unserved views, base relations,
+        indicators) are copied fresh."""
         import time
 
         t0 = time.perf_counter()
@@ -94,7 +103,16 @@ class StreamCheckpointer:
             self.ckpt.save(state, step=int(offset), blocking=True,
                            meta=meta, sync_copy=True)
         else:
-            copies = jax.tree.map(jnp.copy, state)
+            if view_copies:
+                views, base, indicators = state
+                views = {n: (view_copies[n] if n in view_copies
+                             else jax.tree.map(jnp.copy, v))
+                         for n, v in views.items()}
+                copies = canonical_state(
+                    (views, jax.tree.map(jnp.copy, base),
+                     jax.tree.map(jnp.copy, indicators)))
+            else:
+                copies = jax.tree.map(jnp.copy, state)
             self.ckpt.save(copies, step=int(offset), blocking=False,
                            meta=meta, sync_copy=False)
         self.last_dispatch_seconds = time.perf_counter() - t0

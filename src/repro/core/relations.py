@@ -157,6 +157,12 @@ class DenseRelation:
         idx = tuple(keys[:, i] for i in range(k))
         return {comp: self.payload[comp][idx] for comp in self.ring.components}
 
+    def gather_batched(self, keys: jnp.ndarray) -> Payload:
+        """Uniform batched-read surface shared with ``SparseRelation``:
+        dense views have no probe, the vectorized gather *is* the batched
+        read kernel (the serving plane dispatches on this name)."""
+        return self.gather(keys)
+
     def add(self, other) -> "DenseRelation":
         assert self.schema == other.schema
         if not isinstance(other, DenseRelation):

@@ -234,6 +234,40 @@ def _find_slots(table: jnp.ndarray, ids: jnp.ndarray):
     return slot, found
 
 
+def _probe_slots(table: jnp.ndarray, ids: jnp.ndarray):
+    """Batched per-row probe: returns (slot [B], found [B]).
+
+    Bit-identical contract to :func:`_find_slots`, lowered differently:
+    each row runs its *own* scalar ``while_loop`` under ``vmap``, so a
+    row terminates as soon as its chain resolves instead of idling until
+    the batch's longest chain finishes (``_find_slots`` advances every
+    row in lockstep — right for the write path, where the batch is about
+    to scatter anyway, wrong for the serving read path, where batches
+    are large and chains short).  Ids < 0 are sentinels: not probed,
+    found = False — the read path's padding rows."""
+    C = table.shape[0]
+
+    def one(id_):
+        valid = id_ >= 0
+        slot0 = _hash_ids(jnp.maximum(id_, 0), C)
+
+        def cond(s):
+            _, done, i = s
+            return (~done) & (i < C)
+
+        def body(s):
+            slot, _, i = s
+            cur = table[slot]
+            stop = (cur == id_) | (cur == EMPTY)
+            return jnp.where(stop, slot, (slot + 1) & (C - 1)), stop, i + 1
+
+        slot, _, _ = jax.lax.while_loop(cond, body,
+                                        (slot0, ~valid, jnp.int32(0)))
+        return slot, valid & (table[slot] == id_)
+
+    return jax.vmap(one)(ids)
+
+
 def _insert_ids(table: jnp.ndarray, ids: jnp.ndarray):
     """Insert *distinct* ids (EMPTY = skip) into the table.
 
@@ -479,15 +513,37 @@ class SparseRelation:
         """(slots [B], found [B]) for keys [B, k] — the raw probe."""
         return _find_slots(self.table, linear_ids(keys, self._domains))
 
-    def gather(self, keys: jnp.ndarray) -> Payload:
-        """keys [B, k] -> payload leaves [B, *comp]; absent keys read 0."""
-        slot, found = self.lookup(keys)
+    def probe(self, keys: jnp.ndarray):
+        """(slots [B], found [B]) via the batched per-row probe kernel
+        (:func:`_probe_slots`) — the serving read path's probe; same
+        contract as :meth:`lookup`, per-row loop termination."""
+        return _probe_slots(self.table, linear_ids(keys, self._domains))
+
+    def _mask_payload(self, slot: jnp.ndarray,
+                      found: jnp.ndarray) -> Payload:
         out = {}
         for c, shp in self.ring.components.items():
             v = self.payload[c][slot]
             mask = found.reshape((-1,) + (1,) * len(shp))
             out[c] = jnp.where(mask, v, jnp.zeros((), self.ring.dtype))
         return out
+
+    def gather(self, keys: jnp.ndarray) -> Payload:
+        """keys [B, k] -> payload leaves [B, *comp]; absent keys read 0.
+
+        Zombie transparency: a deleted key keeps its slot (found = True)
+        but its payload is ring zero, so the masked read returns exactly
+        the ring zero an absent key returns — deletes are invisible to
+        readers on both probe paths (pinned by tests/test_serve.py)."""
+        slot, found = self.lookup(keys)
+        return self._mask_payload(slot, found)
+
+    def gather_batched(self, keys: jnp.ndarray) -> Payload:
+        """:meth:`gather` through the batched per-row probe kernel —
+        bit-identical results, per-row chain termination (the serving
+        plane's point-lookup lowering, DESIGN.md §12)."""
+        slot, found = self.probe(keys)
+        return self._mask_payload(slot, found)
 
     def gather_plane(self):
         """Flat ``[C + 1, d]`` payload plane with a trailing zero row — the

@@ -471,11 +471,19 @@ class StreamExecutor:
     """
 
     def __init__(self, engine: IVMEngine, shard=None, checkpoint=None,
-                 integrity=None, stragglers: StragglerMonitor | None = None):
+                 integrity=None, stragglers: StragglerMonitor | None = None,
+                 registry=None):
         self.engine = engine
         self.shard = shard
         self.checkpoint = checkpoint
         self.integrity = integrity
+        #: serving-plane snapshot registry (repro.serve): when attached —
+        #: usually by ``serve.ViewServer`` — every segment boundary
+        #: publishes a generation-stamped device copy of the read-visible
+        #: views, after the audit hook (a repaired state, never a drifted
+        #: one, is what readers see) and before the next segment's
+        #: donation; the boundary checkpoint reuses the same copies
+        self.registry = registry
         self.stragglers = (stragglers if stragglers is not None
                            else StragglerMonitor())
         self._compiled: dict[Any, Any] = {}
@@ -672,8 +680,15 @@ class StreamExecutor:
                     # engines): cap segment length like the checkpointer
                     segments = split_segments(
                         segments, self.integrity.segment_updates)
+                if self.registry is not None:
+                    assert update_engine, (
+                        "a registry-attached run must update the engine — "
+                        "published generations snapshot the engine's state")
+                    segments = split_segments(
+                        segments, self.registry.segment_updates)
                 if (self.checkpoint is not None or len(segments) > 1
-                        or segments[0][1] or self._integrity_active()):
+                        or segments[0][1] or self._integrity_active()
+                        or self.registry is not None):
                     saved = None
                     if not update_engine:
                         # snapshot the container dicts, not just the live
@@ -915,6 +930,7 @@ class StreamExecutor:
             offset += len(sub)
             faults.crossing("mid_segment", segment=i, offset=offset)
             audit_s = 0.0
+            audit_meta: dict = {}
             if cfg is not None and cfg.audit_due(i):
                 from repro.runtime import integrity as integrity_mod
 
@@ -925,12 +941,28 @@ class StreamExecutor:
                     # the repair replaced engine views; the boundary
                     # snapshot (and the next segment) must see it
                     state = self.engine.state
+                audit_meta = integrity_mod.publish_meta(records)
                 audit_s = time.perf_counter() - t1
+            publish_s = 0.0
+            snap = None
+            if self.registry is not None:
+                # publish *after* the audit hook (readers must see a
+                # repaired state, never a drifted one) and *before* the
+                # next segment's admission can dispatch the program that
+                # donates these buffers — jnp.copy dispatches without a
+                # host sync, exactly like the async checkpoint save
+                t1 = time.perf_counter()
+                snap = self.registry.publish(self.engine.views,
+                                             offset=offset, segment=i,
+                                             meta=audit_meta)
+                publish_s = time.perf_counter() - t1
             save_s = 0.0
             if ck is not None:
                 t1 = time.perf_counter()
                 ck.save_boundary(self.engine, offset=offset, segment=i,
-                                 blocking=not pipeline)
+                                 blocking=not pipeline,
+                                 view_copies=(snap.views if snap is not None
+                                              else None))
                 if i + 1 == len(queue):
                     ck.wait()  # a finished run is durably checkpointed
                 save_s = time.perf_counter() - t1
@@ -938,6 +970,10 @@ class StreamExecutor:
             stats.append(dict(segment=i, n_steps=n_steps,
                               admit_s=admit_s, dispatch_s=dispatch_s,
                               save_s=save_s, audit_s=audit_s,
+                              publish_s=publish_s,
+                              generation=(self.registry.generation
+                                          if self.registry is not None
+                                          else None),
                               straggler=straggler,
                               straggler_baseline=self.stragglers.baseline))
             if i + 1 < len(queue):
@@ -1002,6 +1038,13 @@ class StreamExecutor:
         if meta is None:
             ck.save_boundary(self.engine, offset=0, segment=-1,
                              blocking=True)
+        if self.registry is not None:
+            # readers of a restarted process must see the restored
+            # (committed) state, never whatever the engine held before
+            # the restore; generations stay monotonic across restarts
+            # within this registry's lifetime
+            self.registry.publish(self.engine.views, offset=offset,
+                                  segment=-1, meta=dict(restored=True))
         remaining = stream[offset:]
         assert 0 <= offset <= len(stream), (
             f"snapshot offset {offset} exceeds the replayed stream "

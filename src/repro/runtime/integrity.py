@@ -512,6 +512,19 @@ def audit_engine(engine, cfg: IntegrityConfig,
     return records
 
 
+def publish_meta(records: list[AuditRecord]) -> dict:
+    """Audit provenance for a snapshot publication (repro.serve): the
+    serving plane publishes *after* the boundary audit, and this stamps
+    the generation with what that audit found — readers of a generation
+    can tell whether it was audited clean, repaired in place, or never
+    audited at all (empty meta)."""
+    if not records:
+        return {}
+    return dict(audited=True,
+                audit_exact=all(r.exact for r in records),
+                repaired=sorted(r.view for r in records if r.repaired))
+
+
 def reevaluate_from_base(engine) -> dict[str, float]:
     """Full self-heal: rebuild *every* materialized view from the stored
     base relations, preserving each view's storage backend (and sparse

@@ -1,0 +1,32 @@
+"""Snapshot-consistent serving plane over the maintained view hierarchy.
+
+The canonical serving entry point (DESIGN.md §12): batched point /
+range / top-k lookups against version-stamped view snapshots published
+at segment boundaries by the stream executor, concurrent with fused
+segment execution.
+
+    from repro.serve import ViewServer
+
+    server = ViewServer(executor, views=("Q",))
+    executor.run(stream)               # publishes a generation/boundary
+    res = server.point("Q", keys)      # device-resident, newest gen
+    with server.pin() as snap:         # multi-query consistency
+        a = snap.point("Q", keys)
+        b = snap.top_k("Q", 10)
+    print(res.host(), server.stats())
+"""
+from .lookup import point, range_scan, range_sum, top_k
+from .registry import Snapshot, SnapshotRegistry
+from .server import PinnedGeneration, ReadResult, ViewServer
+
+__all__ = [
+    "PinnedGeneration",
+    "ReadResult",
+    "Snapshot",
+    "SnapshotRegistry",
+    "ViewServer",
+    "point",
+    "range_scan",
+    "range_sum",
+    "top_k",
+]

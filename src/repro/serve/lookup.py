@@ -1,0 +1,164 @@
+"""Jitted batched lookup kernels over both storage backends.
+
+Every kernel takes a view snapshot (a ``DenseRelation`` or
+``SparseRelation`` copy published by the :class:`~repro.serve.registry.
+SnapshotRegistry`) as a jit pytree argument — schema/ring/domains ride
+in the aux data, so one compilation serves every generation of a view
+(same layout ⇒ cache hit; a sparse rehash recompiles once).  Results
+stay device-resident; nothing here blocks on a host sync.
+
+Lowering per backend (DESIGN.md §12):
+
+* **point** — dense: the vectorized tuple-index gather.  sparse: the
+  Knuth-hash probe lowered as a batched ``vmap``'d per-row kernel
+  (``storage._probe_slots``) — missing keys read ring zero, zombie
+  slots (deleted keys still holding their slot with ring-zero payload)
+  are read-transparent.
+* **range** — over *linearized* key order (``storage.linear_ids``
+  row-major ids), with dynamic ``[lo, hi)`` bounds so one compilation
+  serves all ranges.  ``range_sum`` is the masked ⊕ over the range
+  (every jax ring's ⊕ is componentwise addition — the same invariant
+  the scatter-⊎ kernels rely on); ``range_scan`` returns the first
+  ``k`` *live* keys of the range in ascending linearized order (live =
+  non-zero payload: zombies and free slots never surface).  Dense
+  masks the flat ``[S]`` id axis; sparse masks the slot axis by the
+  stored table ids and compacts via ``lax.top_k`` on negated ids —
+  a segmented scan over an unordered table in one fused reduction.
+* **top_k** — masked ``lax.top_k`` over one scalar entry of a payload
+  plane (component + index into its shape); dead keys score -inf/min.
+
+``k`` and the component selector are static (shape-defining); ``lo`` /
+``hi`` are traced scalars.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.relations import DenseRelation
+from repro.core.storage import (SparseRelation, comp_width, linear_ids,
+                                unlinearize_ids)
+
+
+def _domain_product(view) -> int:
+    return comp_width(view.domains)
+
+
+def _flat_leaf(view, comp: str) -> jnp.ndarray:
+    """Payload leaf with key dims flattened to one leading axis
+    (``[S, *comp]`` dense, ``[C, *comp]`` sparse — the *position* axis
+    the range/top-k kernels index)."""
+    shp = view.ring.components[comp]
+    leaf = view.payload[comp]
+    return leaf.reshape((-1,) + tuple(shp))
+
+
+def _position_ids_alive(view):
+    """(ids [P], alive [P]) over the backend's position axis: the
+    linearized key stored at each position and whether it is live
+    (non-zero payload; sparse additionally requires an occupied slot)."""
+    ring = view.ring
+    if isinstance(view, SparseRelation):
+        ids = view.table
+        flat = {c: _flat_leaf(view, c) for c in ring.components}
+        alive = (ids >= 0) & ~ring.is_zero(flat)
+    else:
+        S = _domain_product(view)
+        ids = jnp.arange(S, dtype=jnp.int32)
+        alive = ~ring.is_zero(view.payload).reshape(S)
+    return ids, alive
+
+
+# ---------------------------------------------------------------------- point
+@jax.jit
+def point(view, keys: jnp.ndarray):
+    """Batched point lookup: keys [B, k] -> payload leaves [B, *comp].
+
+    Absent (and zombied) keys read ring zero; keys with any negative
+    column are treated as padding and read ring zero too."""
+    pad = jnp.any(keys < 0, axis=1) if keys.shape[1] else jnp.zeros(
+        (keys.shape[0],), bool)
+    safe = jnp.maximum(keys, 0)
+    out = view.gather_batched(safe)
+    ring = view.ring
+    return {c: jnp.where(pad.reshape((-1,) + (1,) * len(shp)),
+                         jnp.zeros((), ring.dtype), out[c])
+            for c, shp in ring.components.items()}
+
+
+# ---------------------------------------------------------------------- range
+@jax.jit
+def range_sum(view, lo, hi):
+    """⊕ of all payloads with linearized key id in [lo, hi).
+
+    Returns a scalar-key payload dict.  Componentwise addition is every
+    jax ring's ⊕ (sum / count / degree-m / matrix — the same invariant
+    the scatter-⊎ kernels build on), so a masked sum over the position
+    axis is the ring fold.  Zombies hold ring zero and contribute
+    nothing."""
+    ids, _ = _position_ids_alive(view)
+    in_range = (ids >= lo) & (ids < hi)
+    if isinstance(view, SparseRelation):
+        in_range &= ids >= 0
+    out = {}
+    for c, shp in view.ring.components.items():
+        leaf = _flat_leaf(view, c)
+        mask = in_range.reshape((-1,) + (1,) * len(shp))
+        out[c] = jnp.sum(jnp.where(mask, leaf, 0), axis=0)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def range_scan(view, lo, hi, k: int):
+    """First ``k`` live keys with linearized id in [lo, hi), ascending.
+
+    Returns ``(keys [k, nk], payload leaves [k, *comp], valid [k])``;
+    rows past the range's live population have valid=False and ring-zero
+    payload.  Live means non-zero payload: free slots, zombies, and
+    dense zero entries never surface."""
+    ids, alive = _position_ids_alive(view)
+    sel = alive & (ids >= lo) & (ids < hi)
+    big = jnp.int32(_domain_product(view))
+    score = jnp.where(sel, ids, big)
+    neg_top, pos = jax.lax.top_k(-score, k)  # k smallest ids + positions
+    got = -neg_top
+    valid = got < big
+    keys = unlinearize_ids(jnp.where(valid, got, 0), view.domains)
+    out = {}
+    for c, shp in view.ring.components.items():
+        rows = _flat_leaf(view, c)[pos]
+        mask = valid.reshape((-1,) + (1,) * len(shp))
+        out[c] = jnp.where(mask, rows, jnp.zeros((), view.ring.dtype))
+    return keys, out, valid
+
+
+# ---------------------------------------------------------------------- top-k
+@functools.partial(jax.jit, static_argnames=("k", "component", "index"))
+def top_k(view, k: int, component: str | None = None, index: tuple = ()):
+    """Top-``k`` live keys by one scalar entry of a payload plane.
+
+    ``component`` picks the ring component (default: the ring's first);
+    ``index`` indexes into that component's payload shape (e.g. one
+    entry of a degree-m ``Q`` matrix); scalar components need none.
+    Returns ``(keys [k, nk], values [k], valid [k])`` sorted descending;
+    dead keys (absent / zombied / zero) never place."""
+    ring = view.ring
+    comp = next(iter(ring.components)) if component is None else component
+    shp = ring.components[comp]
+    assert len(index) == len(shp), (
+        f"component {comp!r} has payload shape {shp}; index {index} "
+        "must fully select one scalar entry")
+    ids, alive = _position_ids_alive(view)
+    scores = _flat_leaf(view, comp)[(slice(None),) + tuple(index)]
+    lowest = (jnp.finfo(scores.dtype).min
+              if jnp.issubdtype(scores.dtype, jnp.floating)
+              else jnp.iinfo(scores.dtype).min)
+    masked = jnp.where(alive, scores, lowest)
+    vals, pos = jax.lax.top_k(masked, k)
+    valid = vals > lowest
+    got = ids[pos] if isinstance(view, SparseRelation) else pos.astype(
+        jnp.int32)
+    keys = unlinearize_ids(jnp.where(valid, got, 0), view.domains)
+    return keys, jnp.where(valid, vals, 0), valid

@@ -157,6 +157,58 @@ def test_fused_gather_mul_scatter_dedups_duplicate_keys():
     assert float(out.gather(keys[:1])["v"][0]) == 9.0
 
 
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_batched_probe_matches_lockstep_probe(seed):
+    """The serving plane's vmap'd per-row probe (``probe`` /
+    ``gather_batched``) is bit-identical to the lockstep write-path probe
+    (``lookup`` / ``gather``) — present, absent, and sentinel keys."""
+    rng = np.random.default_rng(seed)
+    ring = sum_ring()
+    keys, vals = _rand_batch(rng, 24)
+    sparse = SparseRelation.from_coo(SCHEMA, ring, DOMS, keys,
+                                     {"v": vals}, capacity=64)
+    probe_keys = jnp.concatenate([
+        keys[:8],
+        jnp.asarray(np.stack([rng.integers(0, d, size=16)
+                              for d in DOMS], 1).astype(np.int32)),
+    ])
+    slot_a, found_a = sparse.lookup(probe_keys)
+    slot_b, found_b = sparse.probe(probe_keys)
+    np.testing.assert_array_equal(np.asarray(found_a), np.asarray(found_b))
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(found_a, slot_a, -1)),
+        np.asarray(jnp.where(found_b, slot_b, -1)))
+    np.testing.assert_array_equal(
+        np.asarray(sparse.gather(probe_keys)["v"]),
+        np.asarray(sparse.gather_batched(probe_keys)["v"]))
+
+
+def test_read_after_delete_returns_ring_zero_on_both_probe_paths():
+    """Read-after-delete regression (serving-plane satellite): a deleted
+    key keeps its table slot (zombie) but must read ring zero — never the
+    stale pre-delete payload — through the legacy lockstep gather AND the
+    batched vmap'd probe kernel."""
+    ring = sum_ring()
+    sparse = SparseRelation.zeros(("A",), ring, (64,), capacity=16)
+    keys = jnp.asarray(np.array([[7], [9], [23]], np.int32))
+    sparse = sparse.scatter_add(keys, {"v": jnp.asarray([2.0, 3.0, 5.0],
+                                                        jnp.float32)})
+    # delete key 9: negative multiplicity drives its payload to ring zero
+    sparse = sparse.scatter_add(keys[1:2], {"v": jnp.asarray([-3.0],
+                                                             jnp.float32)})
+    assert sparse.num_slots_used_sync() == 3  # the slot is still occupied
+    assert sparse.num_keys_sync() == 2        # ...but the key is dead
+    for read in (sparse.gather, sparse.gather_batched):
+        got = np.asarray(read(keys)["v"])
+        np.testing.assert_array_equal(got, [2.0, 0.0, 5.0])
+    # both probes still *find* the zombie slot — transparency is the
+    # ring-zero payload invariant, not a probe miss
+    for probe in (sparse.lookup, sparse.probe):
+        _, found = probe(keys)
+        assert bool(found[1])
+
+
 def test_num_keys_is_device_scalar():
     ring = sum_ring()
     dense = DenseRelation.zeros(("A",), ring, (8,))
