@@ -79,6 +79,56 @@ def _ring_scatter_sweep(rng, rows, results):
                  f"compact_xla_us={case['compact_xla']*1e6:.1f}"))
 
 
+def _crossover_sweep(rng, rows, results):
+    """Measure the onehot/compact crossover: for each batch size, the
+    smallest segment count S where the key-dedup compact path beats the
+    full-domain one-hot sweep.  On CPU the one-hot side runs as its XLA
+    emulation (same S·B·d work and memory traffic as the TPU kernel's
+    one-hot matmul); ``compact_xla`` is the real compact path.  The points
+    land in BENCH_kernels.json next to the modeled ``max(4096, 8·B)``
+    constant, and ``scatter_ops.load_measured_crossover`` feeds them back
+    into the auto-resolution heuristic."""
+    import jax.numpy as jnp
+
+    def onehot_xla(view, ids, vals):
+        onehot = (ids[:, None] == jnp.arange(view.shape[0])[None, :]
+                  ).astype(jnp.float32)
+        return view + onehot.T @ vals
+
+    j_onehot = jax.jit(onehot_xla)
+    points = []
+    d = 8
+    for B in (256, 1024):
+        crossover = None
+        sweep = []
+        for S in (512, 2048, 4096, 8192, 16384, 32768, 65536):
+            view = jnp.asarray(rng.standard_normal((S, d)).astype(np.float32))
+            ids = jnp.asarray(rng.integers(0, min(S, 256), size=B)
+                              .astype(np.int32))
+            vals = jnp.asarray(rng.standard_normal((B, d)).astype(np.float32))
+            t_oh = _time(lambda: j_onehot(view, ids, vals))
+            t_cp = _time(lambda: scatter_ops.scatter_add_flat(
+                view, ids, vals, backend="compact_xla"))
+            sweep.append((S, t_oh, t_cp))
+            if crossover is None and t_cp < t_oh:
+                crossover = S
+        modeled = max(4096, 8 * B)
+        points.append(dict(batch=B, measured_crossover=crossover,
+                           modeled=modeled,
+                           sweep=[dict(segments=S,
+                                       onehot_us=round(a * 1e6, 1),
+                                       compact_us=round(b * 1e6, 1))
+                                  for S, a, b in sweep]))
+        rows.append((f"kernels/onehot_compact_crossover/B={B}",
+                     crossover if crossover is not None else -1,
+                     f"modeled={modeled}"))
+    results.append(dict(name="onehot_compact_crossover", points=points))
+    # feed the measurement straight back into the dispatch heuristic
+    scatter_ops.set_measured_crossover(
+        {p["batch"]: p["measured_crossover"] for p in points
+         if p["measured_crossover"] is not None} or None)
+
+
 def _sparse_storage_sweep(rng, rows, results):
     """Hashed-COO ViewStorage ops vs their dense counterparts at housing
     scale: ⊎ (hash insert + slot scatter) and gather (probe) on a 65536-key
@@ -140,6 +190,7 @@ def run(seed: int = 0, json_path: str | None = JSON_PATH):
     rows = []
     results: list[dict] = []
     _ring_scatter_sweep(rng, rows, results)
+    _crossover_sweep(rng, rows, results)
     _sparse_storage_sweep(rng, rows, results)
     if json_path is not None:
         with open(json_path, "w") as f:

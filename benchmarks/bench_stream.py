@@ -567,6 +567,159 @@ def _integrity_leg(results, rows, seed: int = 0):
         assert len(cfgs["validate"].dead_letters) == 0  # clean stream
 
 
+def _copy_bandwidth_bytes_per_s() -> float:
+    """Measured streaming bandwidth of this host (one big f32 add: read +
+    write) — the denominator of the fusion leg's roofline model."""
+    import jax
+    import jax.numpy as jnp
+    x = jnp.ones((64, 1 << 20), jnp.float32)  # 256 MB
+    f = jax.jit(lambda a: a + 1.0)
+    jax.block_until_ready(f(x))
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        out = f(x)
+    jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / reps
+    return 2 * x.size * 4 / dt
+
+
+def _plan_traffic_bytes(eng, stream) -> int:
+    """Minimal memory traffic of replaying ``stream`` through ``eng``'s
+    trigger plans: every delta hop reads its [B, d] plane once, every
+    gather reads B rows of its source, every ⊎ read-modify-writes B rows.
+    The roofline floor a perfectly fused trigger cannot beat."""
+    from repro.core import plan as plan_mod
+    from repro.core.storage import payload_width
+
+    w = payload_width(eng.query.ring) * 4
+    total = 0
+    for rel, upd in stream:
+        plan = eng.trigger_plan(rel, upd)
+        b = upd.batch
+        for op in plan_mod.iter_flat_ops(plan.ops + plan.ind_ops):
+            if isinstance(op, (plan_mod.Gather, plan_mod.LeafDelta,
+                               plan_mod.Lift, plan_mod.JoinContract)):
+                total += b * w
+            elif isinstance(op, plan_mod.ScatterAccum):
+                total += 3 * b * w  # gather-add-scatter of touched rows
+    return total
+
+
+def _fusion_leg(results, rows, seed: int = 0, repeats: int = 5):
+    """Plan-level fusion on vs off (DESIGN.md §13) on the housing
+    ``pc=65536`` sparse stream and the degree-m cofactor stream: same
+    prepared streams, fused plans replace each Gather→Lift→…→ScatterAccum
+    chain with one megakernel dispatch.  Reports the on/off throughput
+    ratio (gate: fused must not lose to unfused) and the roofline
+    fraction — minimal-traffic time over measured wall — per stream."""
+    from repro.core import plan as plan_mod
+
+    ring = sum_ring()
+    big = dict(HOUSING_DOMS_BIG)
+    sq = Query(relations=HOUSING_RELATIONS, free_vars=(), ring=ring,
+               domains=big, lifts={"h2": ("value",)})
+    sdb, active = synth_low_fill_db(HOUSING_RELATIONS, big, ring,
+                                    np.random.default_rng(seed), "pc",
+                                    n_active=512)
+    sstream = update_stream(HOUSING_RELATIONS, big, ring,
+                            np.random.default_rng(seed + 1), 64, 20,
+                            key_pools={"pc": active})
+    cq = regression.cofactor_query(RETAILER_RELATIONS, RETAILER_DOMS)
+    cdb = synth_db(RETAILER_RELATIONS, RETAILER_DOMS, cq.ring,
+                   np.random.default_rng(seed))
+    cstream = update_stream(RETAILER_RELATIONS, RETAILER_DOMS, cq.ring,
+                            np.random.default_rng(seed + 2), 256, 10)
+    # (name, query, db, var order, stream, hard gate, target ratio) — the
+    # hard gate is parity (the flat-XLA lowering must not lose to op-by-op
+    # replay); the target is what the VMEM-resident megakernel aims for on
+    # TPU, reported alongside so the gap is visible per run.
+    datasets = (("housing_sparse_pc65536", sq, sdb, housing_vo(), sstream,
+                 1.0, 1.0),
+                ("retailer_cofactor_degree_m", cq, cdb, retailer_vo(),
+                 cstream, 1.0, 1.5))
+    bw = _copy_bandwidth_bytes_per_s()
+
+    for dataset, q, db, vo, stream, min_ratio, target in datasets:
+        import jax
+
+        from repro.core import StreamExecutor, prepare_stream
+
+        n_tuples = sum(u.batch for _, u in stream)
+        # build + warm both modes first, then interleave the timed passes
+        # (off, on, off, on, …): host-load drift hits both modes alike
+        # instead of systematically penalizing whichever runs second
+        runs = {}
+        for mode in ("off", "on"):
+            with plan_mod.use_fusion(mode):
+                eng = IVMEngine.build(q, db, var_order=vo, strategy="fivm")
+                ex = StreamExecutor(eng)
+                prepared = prepare_stream(eng, stream)
+                state = ex.run(prepared, update_engine=False)
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+                runs[mode] = dict(
+                    eng=eng, ex=ex, prepared=prepared, state=state,
+                    best=float("inf"),
+                    chains=sum(isinstance(op, plan_mod.FusedChain)
+                               for p in eng.plans.plans.values()
+                               for op in p.ops),
+                    traffic=_plan_traffic_bytes(eng, stream))
+        for _ in range(repeats):
+            for mode in ("off", "on"):
+                r = runs[mode]
+                with plan_mod.use_fusion(mode):
+                    t0 = time.perf_counter()
+                    r["state"] = r["ex"].run(
+                        r["prepared"], state=r["state"],
+                        update_engine=False, donate_input=True)
+                    jax.block_until_ready(jax.tree.leaves(r["state"])[0])
+                    r["best"] = min(r["best"],
+                                    time.perf_counter() - t0)
+        leg = {}
+        for mode, r in runs.items():
+            r["eng"].set_state(r["state"])
+            res = r["eng"].result()
+            res = res.to_dense() if hasattr(res, "to_dense") else res
+            leg[mode] = dict(
+                tps=n_tuples / r["best"], wall=r["best"],
+                chains=r["chains"],
+                roofline_frac=(r["traffic"] / bw) / r["best"],
+                result={c: np.asarray(v)
+                        for c, v in res.payload.items()})
+        assert leg["on"]["chains"] > 0, f"{dataset}: nothing fused"
+        assert leg["off"]["chains"] == 0
+        ref, got = leg["off"]["result"], leg["on"]["result"]
+        max_rel = float(max(
+            np.abs(ref[c] - got[c]).max()
+            / max(float(np.abs(ref[c]).max()), 1e-30) for c in ref))
+        assert max_rel <= 1e-6, f"{dataset}: fused diverged ({max_rel})"
+        ratio = leg["on"]["tps"] / leg["off"]["tps"]
+        results.append(dict(
+            dataset=dataset, strategy="fivm", batch=stream[0][1].batch,
+            n_batches=len(stream), leg="fusion",
+            fusion_on_tuples_per_s=round(leg["on"]["tps"]),
+            fusion_off_tuples_per_s=round(leg["off"]["tps"]),
+            fusion_on_over_off=round(ratio, 3),
+            target_on_over_off=target,
+            fused_chains=leg["on"]["chains"],
+            roofline_frac_on=round(leg["on"]["roofline_frac"], 4),
+            roofline_frac_off=round(leg["off"]["roofline_frac"], 4),
+            max_rel_diff=max_rel))
+        rows.append((
+            f"stream/fusion/{dataset}/b={stream[0][1].batch}",
+            round(1e6 * n_tuples / len(stream) / leg["on"]["tps"], 1),
+            f"fusion_on_tps={leg['on']['tps']:.0f};"
+            f"fusion_off_tps={leg['off']['tps']:.0f};"
+            f"on_over_off={ratio:.2f}x;"
+            f"target={target:.1f}x;"
+            f"chains={leg['on']['chains']};"
+            f"roofline_frac_on={leg['on']['roofline_frac']:.4f};"
+            f"roofline_frac_off={leg['off']['roofline_frac']:.4f}"))
+        assert ratio >= min_ratio * 0.95, (
+            f"{dataset}: fused plans lose to unfused: {ratio:.2f}x "
+            f"(gate {min_ratio}x, 5% noise allowance)")
+
+
 def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
         strategies=("fivm", "fivm_1", "dbt", "reeval"), repeats: int = 5,
         json_path: str | None = JSON_PATH,
@@ -716,6 +869,9 @@ def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
 
     # -- integrity: admission-validation + audit-interval overhead ---------
     _integrity_leg(results, rows, seed=seed)
+
+    # -- plan-level fusion: megakernel chains on vs op-by-op replay --------
+    _fusion_leg(results, rows, seed=seed)
 
     # refactor guard: fused throughput vs the previous BENCH_stream.json
     if baseline_ratios:

@@ -43,7 +43,9 @@ the delta algebra makes is known — and recorded — at compile time.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import os
 import time
 from typing import Any, Mapping, Sequence
 
@@ -225,6 +227,40 @@ class Reevaluate(PlanOp):
         return f"Reevaluate[{self.scope}]"
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedChain(PlanOp):
+    """A Gather→Lift→(Marginalize)→Emit→ScatterAccum subsequence fused
+    into one megakernel dispatch (``repro.kernels.ring_fused``): every
+    gathered payload plane and lifted ring component stays in VMEM across
+    the chain, the ring product runs as one fused flat formula, and the
+    terminal ⊎ scatters with per-tile dedup instead of the sort/rank
+    prepass.  Legality is decided at plan time (:func:`fuse_trigger_ops`);
+    the recorded ``reads``/``writes`` keep the chain transparent to the
+    collective-placement and CSE passes, and ``vmem_bytes`` is the tile
+    model's footprint bound (golden-plan tests pin it)."""
+
+    ops: tuple  # the fused op subsequence, in original plan order
+    reads: tuple  # view names gathered inside the chain (lifts excluded)
+    writes: tuple  # view names ⊎-written by the chain's terminal scatter
+    vmem_bytes: int
+    spec: tuple  # fused ring spec, e.g. ("degree", 2) | ("scalar",)
+
+    def label(self):
+        return (f"Fused[{len(self.ops)} ops → {','.join(self.writes)}"
+                f" ring={'.'.join(str(s) for s in self.spec)}"
+                f" vmem={self.vmem_bytes}B]")
+
+
+def iter_flat_ops(ops):
+    """Iterate an op sequence with FusedChain subsequences expanded — the
+    view every structural pass (CSE, goldens) that predates fusion sees."""
+    for op in ops:
+        if isinstance(op, FusedChain):
+            yield from op.ops
+        else:
+            yield op
+
+
 # ---------------------------------------------------------------------------
 # TriggerPlan
 # ---------------------------------------------------------------------------
@@ -257,7 +293,7 @@ class TriggerPlan:
         gather at arbitrary delta keys must see the view's whole key
         axis, so reading a sharded view lowers to a collective."""
         out = set()
-        for op in self.ops + self.ind_ops:
+        for op in iter_flat_ops(self.ops + self.ind_ops):
             if isinstance(op, (Gather, JoinContract)):
                 out.add(op.view)
         return frozenset(out)
@@ -272,6 +308,9 @@ class TriggerPlan:
         lines = [head]
         for op in self.ops:
             lines.append(f"  {op.label()}")
+            if isinstance(op, FusedChain):
+                for inner in op.ops:
+                    lines.append(f"    {inner.label()}")
         for op in self.ind_ops:
             pad = "  " if isinstance(op, IndicatorBump) else "    "
             lines.append(f"{pad}{op.label()}")
@@ -411,6 +450,52 @@ def active_backend_override() -> str | None:
     from repro.kernels import scatter_ops
 
     return scatter_ops.active_override()
+
+
+# ---------------------------------------------------------------------------
+# Plan-level fusion mode (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+FUSION_ENV_VAR = "REPRO_PLAN_FUSION"
+
+FUSION_MODES = ("on", "off", "auto")
+
+_fusion_override: str | None = None
+
+
+def set_fusion(mode: str | None) -> None:
+    """Process-wide fusion-mode override (None restores env/auto)."""
+    global _fusion_override
+    assert mode is None or mode in FUSION_MODES, mode
+    _fusion_override = mode
+
+
+@contextlib.contextmanager
+def use_fusion(mode: str | None):
+    """Scoped fusion override — the fused-vs-unfused benches and the
+    equivalence sweeps flip this per run."""
+    global _fusion_override
+    prev = _fusion_override
+    set_fusion(mode)
+    try:
+        yield
+    finally:
+        _fusion_override = prev
+
+
+def active_fusion_override() -> str | None:
+    return _fusion_override or os.environ.get(FUSION_ENV_VAR) or None
+
+
+def fusion_mode() -> str:
+    """Resolved fusion mode: explicit override / env > auto.  Auto fuses
+    only on TPU — the megakernel is a VMEM/launch-overhead play; on CPU
+    the XLA fused lowering is roughly cost-neutral, so auto keeps the
+    bit-exact op-by-op path (and the existing goldens) stable."""
+    mode = active_fusion_override() or "auto"
+    assert mode in FUSION_MODES, mode
+    if mode != "auto":
+        return mode
+    return "on" if jax.default_backend() == "tpu" else "off"
 
 
 def _resolve_scatter_backend(num_segments: int, batch: int, width: int):
@@ -808,6 +893,147 @@ def path_to_root(tree: ViewNode, name: str) -> list[ViewNode]:
 
 
 # ---------------------------------------------------------------------------
+# The plan-level fusion pass (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def _try_fuse_chain(ops, start: int, coo: tuple, views: Mapping,
+                    query: Query, written, spec, width: int):
+    """Try to grow a fused chain from ``ops[start]`` to the first terminal
+    ScatterAccum.  Returns ``(FusedChain, coo_after)`` or None when any op
+    on the way is outside the fused vocabulary or violates the tile/VMEM
+    model (the fallback matrix in DESIGN.md §13)."""
+    from repro.kernels import ring_fused
+
+    cur = list(coo)
+    src_rows: list[int] = []
+    reads: list[str] = []
+    n_mul = 0
+    collapsed = False
+    j = start
+    while j < len(ops):
+        op = ops[j]
+        if isinstance(op, Gather):
+            # indicator planes and views this plan already wrote stay
+            # unfused (read-after-write inside one trigger must see the
+            # op-by-op ordering); source planes ride whole in VMEM, so
+            # their row count is bounded
+            if collapsed or op.view.startswith(IND_PREFIX) \
+                    or op.view in written or op.view not in views:
+                return None
+            view = views[op.view]
+            if _storage_kind(view) == "sparse":
+                rows = int(view.capacity) + 1
+            else:
+                rows = _domain_extent(query, op.vars)
+            if rows > ring_fused.MAX_FUSED_PLANE:
+                return None
+            src_rows.append(rows)
+            reads.append(op.view)
+            n_mul += 1
+        elif isinstance(op, Lift):
+            if collapsed:
+                return None
+            src_rows.append(int(query.domains[op.var]))
+            n_mul += 1
+        elif isinstance(op, Marginalize):
+            # only COO marginalization stays a key-column drop (+ lift
+            # source) inside the chain; dense-axis contraction falls back
+            if op.axis != "coo" or op.var not in cur:
+                return None
+            cur.remove(op.var)
+            if op.collapses:
+                collapsed = True
+        elif isinstance(op, Emit):
+            pass
+        elif isinstance(op, ScatterAccum):
+            # terminal ⊎: dense or hashed-COO slot scatter fits the tile
+            # model; mixed (dense-axes) applies don't.  A chain with no
+            # gather/lift source is just a scatter — no fusion win.
+            if op.mixed or op.view.startswith(IND_PREFIX) or n_mul == 0:
+                return None
+            vmem = ring_fused.chain_vmem_bytes(src_rows, width)
+            if vmem > ring_fused.VMEM_BUDGET:
+                return None
+            fused = FusedChain(ops=tuple(ops[start:j + 1]),
+                               reads=tuple(reads), writes=(op.view,),
+                               vmem_bytes=vmem, spec=spec)
+            return fused, tuple(cur)
+        else:  # LeafDelta / JoinContract / BaseBump / ... : not fusable
+            return None
+        j += 1
+    return None
+
+
+def fuse_trigger_ops(plan: TriggerPlan, query: Query,
+                     views: Mapping) -> TriggerPlan:
+    """The plan-level fusion pass: collapse maximal
+    Gather→Lift→(Marginalize)→Emit→ScatterAccum subsequences of a COO
+    trigger plan into :class:`FusedChain` ops lowered by
+    ``repro.kernels.ring_fused``.
+
+    Legality is decided here, at plan time: commutative-bilinear f32 ring
+    (``ring_fused.fused_ring_spec``), pure-COO delta state at the chain
+    boundary (no dense axes, no carried pending gather), gathered source
+    planes bounded by the VMEM tile model, and a terminal non-mixed
+    scatter whose write set is disjoint from the chain's reads.
+    Everything else falls back op-by-op — the unfused interpreter remains
+    the oracle.  Indicator sections never fuse (they read views updated
+    in place mid-trigger)."""
+    if plan.kind != "coo" or plan.densify:
+        return plan
+    from repro.kernels import ring_fused
+
+    spec = ring_fused.fused_ring_spec(query.ring)
+    if spec is None:
+        return plan
+    width = _payload_width(query.ring)
+    ops = list(plan.ops)
+    out: list = []
+    # symbolic mirror of the runtime delta state at each op boundary —
+    # chains may only start where the delta is pure-COO with no pending
+    # gather, so the flat-plane product model is exact
+    coo: tuple = ()
+    pending = False
+    dense = False
+    written: set[str] = set()
+    i = 0
+    while i < len(ops):
+        fused = None
+        if not pending and not dense and coo:
+            fused = _try_fuse_chain(ops, i, coo, views, query, written,
+                                    spec, width)
+        if fused is not None:
+            chain, coo = fused
+            out.append(chain)
+            written.add(chain.writes[0])
+            pending = False
+            i += len(chain.ops)
+            continue
+        op = ops[i]
+        if isinstance(op, LeafDelta):
+            coo = () if op.densify else tuple(op.schema)
+            dense = bool(op.densify)
+            pending = False
+        elif isinstance(op, Gather):
+            pending = True
+        elif isinstance(op, JoinContract):
+            pending = False
+            if op.grows or op.densifies:
+                dense = True
+        elif isinstance(op, Marginalize):
+            if op.forces:
+                pending = False
+            if op.axis == "coo":
+                coo = tuple(v for v in coo if v != op.var)
+        elif isinstance(op, ScatterAccum):
+            written.add(op.view)
+        out.append(op)
+        i += 1
+    if not any(isinstance(op, FusedChain) for op in out):
+        return plan
+    return dataclasses.replace(plan, ops=tuple(out))
+
+
+# ---------------------------------------------------------------------------
 # The plan cache
 # ---------------------------------------------------------------------------
 def storage_signature(views: Mapping) -> tuple:
@@ -830,17 +1056,28 @@ class PlanCache:
     """Per-engine trigger-plan cache with op interning.
 
     Keys: (rel, update signature, storage layout, scatter-backend
-    override).  ``hits``/``misses``/``compile_seconds`` feed the bench
-    telemetry; interned ops let sibling triggers share structurally
-    identical subtrees (the plan-level CSE substrate)."""
+    override, fusion mode).  ``hits``/``miss_new``/``miss_invalidated``/
+    ``compile_seconds`` feed the bench telemetry — ``miss_new`` counts
+    first compiles of a (rel, update-signature) trigger, while
+    ``miss_invalidated`` counts recompiles of a previously-seen trigger
+    forced by a layout / backend-override / fusion-mode change, so the
+    on/off sweeps report honest cache behavior.  Interned ops let sibling
+    triggers share structurally identical subtrees (the plan-level CSE
+    substrate)."""
 
     def __init__(self):
         self.plans: dict = {}
         self.hits = 0
-        self.misses = 0
+        self.miss_new = 0
+        self.miss_invalidated = 0
         self.compile_seconds = 0.0
         self._interned: dict = {}
         self._write_sets: dict = {}
+        self._seen: set = set()
+
+    @property
+    def misses(self) -> int:
+        return self.miss_new + self.miss_invalidated
 
     def intern(self, op: PlanOp) -> PlanOp:
         return self._interned.setdefault(op, op)
@@ -849,15 +1086,22 @@ class PlanCache:
                    views=None) -> TriggerPlan:
         views = engine.views if views is None else views
         key = (rel, upd_sig, storage_signature(views),
-               active_backend_override())
+               active_backend_override(), fusion_mode())
         plan = self.plans.get(key)
         if plan is not None:
             self.hits += 1
             return plan
-        self.misses += 1
+        trigger = (rel, upd_sig)
+        if trigger in self._seen:
+            self.miss_invalidated += 1
+        else:
+            self.miss_new += 1
+            self._seen.add(trigger)
         t0 = time.perf_counter()
         plan = compile_trigger(engine, rel, upd_sig, intern=self.intern,
                                views=views)
+        if fusion_mode() == "on":
+            plan = fuse_trigger_ops(plan, engine.query, views)
         self.compile_seconds += time.perf_counter() - t0
         self.plans[key] = plan
         return plan
@@ -889,6 +1133,8 @@ class PlanCache:
             plans=n,
             hits=self.hits,
             misses=self.misses,
+            miss_new=self.miss_new,
+            miss_invalidated=self.miss_invalidated,
             hit_rate=round(self.hits / total, 4) if total else 0.0,
             #: cumulative across every compile on this engine
             compile_ms_total=round(1e3 * self.compile_seconds, 3),
@@ -955,9 +1201,191 @@ def run_coo_ops(ops, views: Mapping, query: Query, upd: COOUpdate,
         elif isinstance(op, ScatterAccum):
             updated[op.view] = delta.apply_to(views[op.view],
                                               backend=op.backend)
+        elif isinstance(op, FusedChain):
+            delta = _run_fused_chain(op, delta, views, query, ind_dense,
+                                     memo, deltas, updated)
         else:  # pragma: no cover
             raise TypeError(op)
     return PropagationResult(deltas, updated)
+
+
+def _run_fused_chain(chain: FusedChain, delta: BatchedDelta, views: Mapping,
+                     query: Query, ind_dense: Mapping, memo, deltas: dict,
+                     updated: dict) -> BatchedDelta:
+    """Interpret a :class:`FusedChain`.
+
+    Two lowerings, resolved once from the chain's terminal ScatterAccum:
+
+    * **megakernel** (TPU real / interpret) — gather/lift sources
+      accumulate as flat ``(plane [Sg, d], ids [B])`` pairs; the whole
+      product + ⊎ runs through one ``ring_fused.fused_apply`` dispatch at
+      the terminal scatter, source planes resident in VMEM.
+    * **flat-XLA** (CPU/GPU) — sources gather as per-component payload
+      dicts (``view.gather``; no flat-plane concats at all), the running
+      product is one ``Ring.mul`` per hop (``ring_mul_flat`` is its flat
+      mirror, term order and add association identical), and the ⊎
+      scatters B rows per component — the same adds element-for-element
+      as the megakernel, so results agree bit for bit on integer-valued
+      payloads.
+
+    Either way the materialized end-of-chain delta is returned (the
+    op-by-op continuation state; DCE'd under jit when nothing downstream
+    reads it).  Plan-time legality (:func:`fuse_trigger_ops`) guarantees
+    the entry state: pure-COO delta, no pending gather, fused-ring
+    payload."""
+    from repro.core import storage
+    from repro.kernels import ring_fused
+
+    ring = query.ring
+    spec = chain.spec
+    assert delta.pending_gather is None and not delta.dense_schema, (
+        "fused chain entered with non-pure-COO delta state")
+    term = chain.ops[-1]
+    assert isinstance(term, ScatterAccum)
+    xla = ring_fused.resolve_backend(term.backend) == "fused_xla"
+    coo = list(delta.coo_schema)
+    keys = delta.keys
+    B = delta.batch
+    vals = (None if xla
+            else storage.flatten_payload(ring, delta.payload, (B,)))
+    sources: list = []      # megakernel path: (plane, ids) pairs
+    row_factors: list = []  # flat-XLA path: gathered [B, *comp] payloads
+    lift_rel = None
+    collapsed = False
+    join_cache: dict = {}
+
+    def joined():
+        """Running product over the sources applied so far — a flat
+        ``[B, d]`` plane (megakernel) or a payload dict (flat-XLA) —
+        computed once per source-list state (Emit, the continuation, and
+        the flat-XLA scatter all reuse it)."""
+        n = len(row_factors) if xla else len(sources)
+        if n not in join_cache:
+            if xla:
+                cur = delta.payload
+                for g in row_factors:
+                    cur = ring.mul(cur, g)
+            else:
+                cur = vals
+                for plane, ids in sources:
+                    g = jnp.take(plane, ids, axis=0, mode="clip")
+                    cur = ring_fused.ring_mul_flat(cur, g, spec)
+            join_cache[n] = cur
+        return join_cache[n]
+
+    def materialize() -> BatchedDelta:
+        cur = joined()
+        k = keys if not collapsed else keys[:1]
+        if xla:
+            payload = ({c: jnp.sum(v, axis=0, keepdims=True)
+                        for c, v in cur.items()} if collapsed else cur)
+        else:
+            if collapsed:
+                cur = jnp.sum(cur, axis=0, keepdims=True)
+            payload = storage.unflatten_payload(ring, cur, (k.shape[0],),
+                                                dtype=ring.dtype)
+        return BatchedDelta(coo_schema=tuple(coo), dense_schema=(),
+                            keys=k, ring=ring, payload=payload,
+                            dense_domains=())
+
+    def view_keys(schema):
+        return jnp.stack([keys[:, coo.index(v)] for v in schema], axis=1)
+
+    for op in chain.ops:
+        if isinstance(op, Gather):
+            view = _resolve_view(op.view, views, ind_dense)
+            kv = view_keys(view.schema)
+            plane = memo.get(("plane", op.view)) if memo else None
+            if xla and plane is None:
+                # row gather: per-component takes, no flat-plane concat
+                row_factors.append(view.gather(kv))
+                continue
+            if isinstance(view, storage.SparseRelation):
+                slots, found = view.lookup(kv)
+                if plane is None:
+                    plane = view.gather_plane()
+                ids = jnp.where(found, slots, view.capacity)
+            else:
+                if plane is None:
+                    plane = storage.flatten_payload(ring, view.payload,
+                                                    view.domains)
+                ids = storage.linear_ids(kv, view.domains)
+            if xla:  # memoized plane (stream-step CSE): flat row take
+                rows = jnp.take(plane, ids.astype(jnp.int32), axis=0,
+                                mode="clip")
+                row_factors.append(storage.unflatten_payload(
+                    ring, rows, (B,), dtype=ring.dtype))
+            else:
+                sources.append((plane, ids.astype(jnp.int32)))
+        elif isinstance(op, Lift):
+            lift_rel = query.lift_rel(op.var)
+        elif isinstance(op, Marginalize):
+            i = coo.index(op.var)
+            if lift_rel is not None:
+                ids = keys[:, i].astype(jnp.int32)
+                if xla:
+                    row_factors.append({c: lift_rel.payload[c][ids]
+                                        for c in ring.components})
+                else:
+                    dom = int(lift_rel.payload[
+                        next(iter(ring.components))].shape[0])
+                    sources.append((storage.flatten_payload(
+                        ring, lift_rel.payload, (dom,)), ids))
+                lift_rel = None
+            keys = jnp.delete(keys, i, axis=1, assume_unique_indices=True)
+            coo.pop(i)
+            if op.collapses:
+                collapsed = True
+        elif isinstance(op, Emit):
+            deltas[op.view] = materialize()
+        elif isinstance(op, ScatterAccum):
+            view = views[op.view]
+            if isinstance(view, storage.SparseRelation):
+                table, target = view.fused_slot_targets(
+                    view_keys(view.schema))
+                if xla:  # B-row ⊎ per component, overflow rows drop
+                    safe = jnp.where(target < 0, view.capacity, target)
+                    cur = joined()
+                    updated[op.view] = view.replace_payload(table, {
+                        c: view.payload[c].at[safe].add(cur[c],
+                                                        mode="drop")
+                        for c in ring.components})
+                else:
+                    plane = storage.flatten_payload(ring, view.payload,
+                                                    (view.capacity,))
+                    out = ring_fused.fused_apply(plane, target, vals,
+                                                 sources, spec,
+                                                 backend=op.backend)
+                    updated[op.view] = view.replace_plane(table, out)
+            elif xla:
+                # scatter the joined product per component — B rows of
+                # ``.at[].add`` instead of round-tripping the whole view
+                # plane through a flat copy
+                cur = joined()
+                if view.schema:
+                    updated[op.view] = view.scatter_add(
+                        view_keys(view.schema), cur, backend="jnp")
+                else:  # collapsed-to-scalar view: ⊎ is the batch sum
+                    updated[op.view] = DenseRelation(
+                        view.schema, ring,
+                        {c: view.payload[c] + jnp.sum(cur[c], axis=0)
+                         for c in ring.components})
+            else:
+                if view.schema:
+                    ids = storage.linear_ids(view_keys(view.schema),
+                                             view.domains)
+                else:  # collapsed-to-scalar view: every row hits slot 0
+                    ids = jnp.zeros((keys.shape[0],), jnp.int32)
+                plane = storage.flatten_payload(ring, view.payload,
+                                                view.domains)
+                out = ring_fused.fused_apply(plane, ids, vals, sources,
+                                             spec, backend=op.backend)
+                payload = storage.unflatten_payload(ring, out, view.domains,
+                                                    dtype=ring.dtype)
+                updated[op.view] = DenseRelation(view.schema, ring, payload)
+        else:  # pragma: no cover
+            raise TypeError(op)
+    return materialize()
 
 
 def run_factorized_ops(ops, views: Mapping, query: Query,
@@ -1332,7 +1760,10 @@ def shared_prep_ops(plans: Sequence[TriggerPlan]) -> tuple:
     counts: dict = {}
     for p in plans:
         seen = set()
-        for op in p.ops:
+        # FusedChain subsequences expand: a fused gather still consumes
+        # the memoized plane, so it participates in CSE like its unfused
+        # form (the memo keys are identical)
+        for op in iter_flat_ops(p.ops):
             key = None
             if isinstance(op, Gather) and not op.view.startswith(IND_PREFIX):
                 key = ("plane", op.view)

@@ -22,6 +22,13 @@ The placement is decided entirely at plan time, from the same compiled
   counting), layouts whose leading extent does not divide the mesh —
   stays **replicated**: reads are local and writes broadcast.
 
+Plan-level fusion (DESIGN.md §13) is transparent here: a
+:class:`repro.core.plan.FusedChain` keeps the plan's ``write_views``
+intact and ``TriggerPlan.read_views`` expands fused subsequences, so
+the placement a fused plan derives is identical to its unfused form —
+the megakernel's gathers and slot scatter cross shards exactly where
+the op-by-op replay would.
+
 :func:`plan.collective_placement` performs that classification;
 :func:`plan_shards` turns it into a :class:`ShardPlan` carrying the mesh
 and one :class:`ShardSpec` per state entry.  The storage layer owns the

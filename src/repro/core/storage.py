@@ -509,6 +509,35 @@ class SparseRelation:
         return SparseRelation(self.schema, self.ring, self._domains, table,
                               payload)
 
+    def fused_slot_targets(self, keys: jnp.ndarray):
+        """(table, target [B]) for the fused-chain megakernel: claim slots
+        for ``keys`` (duplicates share one slot via the rank prepass —
+        ``_insert_ids`` needs distinct ids) but do *not* dedup values; the
+        fused kernel accumulates duplicates per tile.  Overflow rows (table
+        full) map to EMPTY and drop."""
+        ids = linear_ids(keys, self._domains)
+        rank, uniq = _rank_ids(ids)
+        table, slots, placed = _insert_ids(self.table, uniq)
+        target = jnp.where(placed, slots, EMPTY)[rank]
+        return table, target
+
+    def replace_plane(self, table: jnp.ndarray,
+                      plane: jnp.ndarray) -> "SparseRelation":
+        """New relation from an updated key table and a flat ``[C, d]``
+        payload plane (the fused-chain writeback)."""
+        payload = unflatten_payload(self.ring, plane, (self.capacity,),
+                                    dtype=self.ring.dtype)
+        return SparseRelation(self.schema, self.ring, self._domains, table,
+                              payload)
+
+    def replace_payload(self, table: jnp.ndarray,
+                        payload: Payload) -> "SparseRelation":
+        """New relation from an updated key table and per-component payload
+        leaves (the fused-chain flat-XLA writeback, which scatters per
+        component instead of through one flat plane)."""
+        return SparseRelation(self.schema, self.ring, self._domains, table,
+                              payload)
+
     def lookup(self, keys: jnp.ndarray):
         """(slots [B], found [B]) for keys [B, k] — the raw probe."""
         return _find_slots(self.table, linear_ids(keys, self._domains))

@@ -125,6 +125,9 @@ class PreparedStream:
     #: scatter-backend override active at prepare time (plans bake the
     #: resolved backends in)
     backend_sig: str | None = None
+    #: plan-fusion mode active at prepare time (fused plans embed
+    #: FusedChain ops; a mode flip must re-prepare, not replay)
+    fusion_sig: str | None = None
     #: mesh-replicated (xs, tail) cache of a sharded executor — the
     #: original xs/tail stay untouched so the same prepared stream can
     #: also feed an unsharded executor
@@ -139,7 +142,7 @@ class PreparedStream:
         backend and must not replay a program built around another."""
         return (self.mode, self.rel_order, self.schemas, self.pattern,
                 self.n_steps, self.buckets, self.tail_len, self.storage_sig,
-                self.backend_sig)
+                self.backend_sig, self.fusion_sig)
 
 
 def _schedule_period(sched: Sequence[str]) -> int | None:
@@ -353,6 +356,7 @@ def prepare_stream(
     comp_names = tuple(ring.components)
     storage_sig = plan_mod.storage_signature(engine.views)
     backend_sig = plan_mod.active_backend_override()
+    fusion_sig = plan_mod.fusion_mode()
 
     def plan_for(rel: str, bucket: int):
         return engine.plans.lookup_sig(
@@ -397,6 +401,7 @@ def prepare_stream(
             plans=tuple(plan_for(r, b) for r, b in zip(pattern, buckets)),
             storage_sig=storage_sig,
             backend_sig=backend_sig,
+            fusion_sig=fusion_sig,
         )
 
     # aperiodic: uniform bucket + key width, switch over the schedule
@@ -423,6 +428,7 @@ def prepare_stream(
         plans=tuple(plan_for(r, bucket) for r in rel_order),
         storage_sig=storage_sig,
         backend_sig=backend_sig,
+        fusion_sig=fusion_sig,
     )
 
 

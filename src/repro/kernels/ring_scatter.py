@@ -62,6 +62,49 @@ def _scatter_kernel(ids_ref, vals_ref, view_ref, out_ref, *, block_s: int):
     )
 
 
+def tile_dedup(ids, vals):
+    """Per-tile key dedup, entirely in VMEM: collapse duplicate ids within
+    one batch tile onto their first occurrence.
+
+    Returns ``(mids, sums)`` where ``sums[i] = Σ_j [ids[j] == ids[i]] ·
+    vals[j]`` for the first occurrence of each id and ``mids`` masks every
+    later duplicate (and padding, ids < 0) to ``-1``.  The duplicate-sum is
+    a 0/1 matmul, so integer-valued f32 payloads dedup exactly — this is
+    the in-kernel replacement for the global sort/rank compaction prepass
+    (``scatter_ops._compact_scatter``) on the fused plan path; the
+    standalone compact backends keep the global prepass, whose O(B log B)
+    sort amortizes when one dedup serves the whole batch."""
+    bk = ids.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (bk, bk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (bk, bk), 1)
+    eq = ids[:, None] == ids[None, :]
+    # row i is its id's tile-first occurrence iff no earlier row matches
+    first = ~jnp.any(eq & (col < row), axis=1)  # [bk]
+    gather = (eq & first[:, None]).astype(jnp.float32)
+    sums = jax.lax.dot_general(
+        gather, vals, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    mids = jnp.where(first & (ids >= 0), ids, -1)
+    return mids, sums
+
+
+def _scatter_dedup_kernel(ids_ref, vals_ref, view_ref, out_ref, *,
+                          block_s: int):
+    si = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = view_ref[...].astype(jnp.float32)
+
+    mids, sums = tile_dedup(ids_ref[...], vals_ref[...].astype(jnp.float32))
+    local = _iota_cols(mids.shape[0], block_s, offset=si * block_s)
+    onehot = (mids[:, None] == local).astype(jnp.float32)  # [bk, bs]
+    out_ref[...] += jax.lax.dot_general(
+        onehot, sums, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 def scatter_add_onehot(
     view: jnp.ndarray,
     seg_ids: jnp.ndarray,
@@ -71,16 +114,20 @@ def scatter_add_onehot(
     block_d: int = 128,
     block_k: int = 512,
     interpret: bool = False,
+    dedup: bool = False,
 ):
     """view [S, d] + scatter of values [B, d] at seg_ids [B] -> [S, d] f32.
-    S, d, B must be multiples of the block sizes (scatter_ops pads)."""
+    S, d, B must be multiples of the block sizes (scatter_ops pads).
+    ``dedup`` runs the per-tile key dedup before the one-hot contraction
+    (the fused-plan variant; bit-identical on integer-valued payloads)."""
     S, d = view.shape
     B, d2 = values.shape
     assert d2 == d, (values.shape, view.shape)
     assert B % block_k == 0 and d % block_d == 0 and S % block_s == 0
     grid = (S // block_s, d // block_d, B // block_k)
+    kernel = _scatter_dedup_kernel if dedup else _scatter_kernel
     return pl.pallas_call(
-        functools.partial(_scatter_kernel, block_s=block_s),
+        functools.partial(kernel, block_s=block_s),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_k,), lambda s, j, k: (k,)),

@@ -29,12 +29,16 @@ bodies and compatible with the stream executor's state donation.  The
 (it *is* the old code), so kernel-off runs are bit-identical to the seed.
 
 Backends:  ``jnp`` | ``onehot`` | ``compact`` | ``compact_xla`` |
-``onehot_interpret`` | ``compact_interpret`` | ``auto``.
+``onehot_interpret`` | ``compact_interpret`` | ``onehot_dedup`` |
+``onehot_dedup_interpret`` | ``auto``.  The ``onehot_dedup`` pair runs the
+per-tile key dedup *inside* the one-hot kernel (the fused-plan variant —
+no global sort/rank prepass); the plain backends keep the prepass.
 """
 from __future__ import annotations
 
 import contextlib
 import functools
+import json
 import os
 
 import jax
@@ -55,7 +59,8 @@ _comp_width = comp_width
 ENV_VAR = "REPRO_SCATTER_BACKEND"
 
 BACKENDS = ("auto", "jnp", "onehot", "compact", "compact_xla",
-            "onehot_interpret", "compact_interpret")
+            "onehot_interpret", "compact_interpret",
+            "onehot_dedup", "onehot_dedup_interpret")
 
 #: largest source segment space the fused gather-multiply-scatter kernel
 #: keeps whole in VMEM; larger sources fall back to gather-then-scatter
@@ -91,6 +96,50 @@ def active_override() -> str | None:
     return _override or os.environ.get(ENV_VAR)
 
 
+#: empirically measured onehot/compact crossovers (batch -> num_segments),
+#: loaded from BENCH_kernels.json's ``onehot_compact_crossover`` row when
+#: present; the cost heuristic prefers these over the modeled constant
+_measured_crossover: dict[int, int] = {}
+
+
+def set_measured_crossover(mapping: dict[int, int] | None) -> None:
+    """Install measured crossover points (batch -> segment-count threshold);
+    None clears back to the modeled constant."""
+    _measured_crossover.clear()
+    if mapping:
+        _measured_crossover.update(
+            {int(k): int(v) for k, v in mapping.items()})
+
+
+def measured_crossover(batch: int) -> int | None:
+    """Measured onehot/compact crossover for the closest benchmarked batch
+    size, or None when no measurement is loaded."""
+    if not _measured_crossover:
+        return None
+    key = min(_measured_crossover, key=lambda b: abs(b - batch))
+    return _measured_crossover[key]
+
+
+def load_measured_crossover(json_path) -> bool:
+    """Load crossover measurements from a BENCH_kernels.json produced by
+    ``benchmarks.bench_kernels`` (its ``onehot_compact_crossover`` result
+    row).  Returns True when measurements were installed."""
+    try:
+        with open(json_path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return False
+    for row in doc.get("results", []):
+        if row.get("name") == "onehot_compact_crossover":
+            pts = {int(p["batch"]): int(p["measured_crossover"])
+                   for p in row.get("points", [])
+                   if p.get("measured_crossover") is not None}
+            if pts:
+                set_measured_crossover(pts)
+                return True
+    return False
+
+
 def resolve_backend(num_segments: int, batch: int, width: int,
                     backend: str | None = None) -> str:
     """Explicit arg > ``use_backend`` override > env var > cost heuristic."""
@@ -102,8 +151,12 @@ def resolve_backend(num_segments: int, batch: int, width: int,
         return "jnp"
     # one-hot sweeps S·d accumulators per batch tile: worth it while the
     # segment space is comparable to the batch; past that, compaction's
-    # O(B log B + B²·d/bk) beats the dead tiles of the full-domain grid
-    return "onehot" if num_segments <= max(4096, 8 * batch) else "compact"
+    # O(B log B + B²·d/bk) beats the dead tiles of the full-domain grid.
+    # A measured crossover (bench_kernels sweep) overrides the model.
+    cross = measured_crossover(batch)
+    if cross is None:
+        cross = max(4096, 8 * batch)
+    return "onehot" if num_segments <= cross else "compact"
 
 
 def kernelable(ring, *payloads) -> bool:
@@ -154,7 +207,7 @@ def _scatter_add_flat(view, seg_ids, values, backend: str,
         return _compact_scatter(view, seg_ids, values, backend,
                                 block_s=block_s, block_d=block_d,
                                 block_k=block_k)
-    interpret = backend == "onehot_interpret"
+    interpret = backend.endswith("_interpret")
     bs = min(block_s, _round_up(S, 8))
     bd = min(block_d, _round_up(d, 8))
     bk = min(block_k, _round_up(B, 8))
@@ -164,6 +217,7 @@ def _scatter_add_flat(view, seg_ids, values, backend: str,
         jnp.pad(seg_ids.astype(jnp.int32), (0, Bp - B), constant_values=-1),
         jnp.pad(values.astype(jnp.float32), ((0, Bp - B), (0, dp - d))),
         block_s=bs, block_d=bd, block_k=bk, interpret=interpret,
+        dedup="dedup" in backend,
     )
     return out[:S, :d]
 

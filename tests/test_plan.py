@@ -38,6 +38,7 @@ def plain_env(monkeypatch):
     whatever lowering the CI matrix forces."""
     monkeypatch.delenv("REPRO_VIEW_STORAGE", raising=False)
     monkeypatch.delenv("REPRO_SCATTER_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_PLAN_FUSION", raising=False)
 
 
 # ---------------------------------------------------------------------------
@@ -117,6 +118,40 @@ trigger R kind=coo strategy=fivm schema=[A,B] batch=2 densify=no cost=6
   writes: views=[R,V2@A,W:V1@B,W:V2@A] base=[] indicators=[]"""
 
 
+GOLDEN_REGRESSION_R_FUSED = """\
+trigger R kind=coo strategy=fivm schema=[A,B] batch=4 densify=no cost=12
+  Leaf rows[A,B; B=4]
+  Fused[5 ops → V0@B ring=degree.3 vmem=929792B]
+    Emit[R]
+    Lift[B degree.1]
+    Marg[B coo]
+    Emit[V0@B]
+    Scatter[V0@B dense jnp]
+  Fused[5 ops → V2@A ring=degree.3 vmem=1073152B]
+    Gather[V1@C dense]
+    Lift[A degree.0]
+    Marg[A coo] collapse !force
+    Emit[V2@A]
+    Scatter[V2@A dense]
+  writes: views=[V0@B,V2@A] base=[] indicators=[]"""
+
+GOLDEN_CONJUNCTIVE_R_FUSED = """\
+trigger R kind=coo strategy=fivm schema=[A,B] batch=2 densify=no cost=6
+  Leaf rows[A,B; B=2]
+  Emit[R]
+  Scatter[R dense jnp]
+  Fused[2 ops → W:V1@B ring=scalar vmem=929792B]
+    Gather[V0@C dense]
+    Scatter[W:V1@B dense jnp fused]
+  Marg[B coo]
+  Emit[V1@B]
+  Scatter[W:V2@A dense jnp fused]
+  Marg[A coo] collapse !force
+  Emit[V2@A]
+  Scatter[V2@A dense]
+  writes: views=[R,V2@A,W:V1@B,W:V2@A] base=[] indicators=[]"""
+
+
 def test_golden_plan_regression_cofactor(plain_env):
     eng = _regression_engine()
     assert eng.plans.lookup_sig(
@@ -148,6 +183,151 @@ def test_golden_plan_conjunctive_factorized_representation(plain_env):
 
 
 # ---------------------------------------------------------------------------
+# golden fused plans (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def test_golden_fused_plan_regression_cofactor(plain_env):
+    """Fusion on: both maintenance chains collapse to FusedChain ops with
+    pinned boundaries, write sets, ring specs, and VMEM estimates; the
+    Leaf stays a fallback op (it constructs the delta, not a hop)."""
+    with plan_mod.use_fusion("on"):
+        eng = _regression_engine()
+        p = eng.plans.lookup_sig(eng, "R", ("coo", ("A", "B"), 4))
+    assert p.pretty() == GOLDEN_REGRESSION_R_FUSED
+    from repro.kernels import ring_fused
+    chains = [op for op in p.ops if isinstance(op, plan_mod.FusedChain)]
+    assert len(chains) == 2
+    assert all(c.vmem_bytes <= ring_fused.VMEM_BUDGET for c in chains)
+    # fused plans report the same structural read/write sets as unfused
+    assert p.read_views() == frozenset({"V1@C"})
+    assert set(p.write_views) == {"V0@B", "V2@A"}
+
+
+def test_golden_fused_plan_conjunctive_partial_chain(plain_env):
+    """Conjunctive app: only the Gather→premarg-Scatter hop is fusible
+    (the base-relation scatter and post-collapse tail stay op-by-op) —
+    the fallback matrix in one golden."""
+    rng = np.random.default_rng(0)
+    rels = {"R": ("A", "B"), "S": ("B", "C")}
+    doms = dict(A=3, B=3, C=3)
+    mult = {n: rng.integers(0, 2, size=tuple(doms[v] for v in sch))
+            .astype(np.float32) for n, sch in rels.items()}
+    with plan_mod.use_fusion("on"):
+        eng, _ = conjunctive.make_factorized_engine(
+            rels, mult, chain(["A", "B", "C"]), doms)
+        p = eng.plans.lookup_sig(eng, "R", ("coo", ("A", "B"), 2))
+    assert p.pretty() == GOLDEN_CONJUNCTIVE_R_FUSED
+
+
+def test_fusion_skips_factorized_and_int_ring_plans(plain_env):
+    """Factorized plans and non-f32 rings are outside the fused algebra:
+    fusion on must leave their plans byte-identical to fusion off."""
+    rng = np.random.default_rng(0)
+    mats = [jnp.asarray(rng.random((4, 3)).astype(np.float32)),
+            jnp.asarray(rng.random((3, 5)).astype(np.float32)),
+            jnp.asarray(rng.random((5, 2)).astype(np.float32))]
+    with plan_mod.use_fusion("on"):
+        eng = matrix_chain.build_chain_engine(mats)
+        p = eng.plans.lookup_sig(eng, "A2", ("factorized", ("X2", "X3")))
+    assert p.pretty() == GOLDEN_CHAIN_A2
+
+
+def test_fusion_mode_resolution(monkeypatch):
+    monkeypatch.delenv(plan_mod.FUSION_ENV_VAR, raising=False)
+    if jax.default_backend() != "tpu":
+        assert plan_mod.fusion_mode() == "off"  # auto keeps CPU unfused
+    with plan_mod.use_fusion("on"):
+        assert plan_mod.fusion_mode() == "on"
+    monkeypatch.setenv(plan_mod.FUSION_ENV_VAR, "on")
+    assert plan_mod.fusion_mode() == "on"
+    with plan_mod.use_fusion("off"):  # explicit override beats env
+        assert plan_mod.fusion_mode() == "off"
+
+
+# ---------------------------------------------------------------------------
+# fused ≡ unfused across dispatch modes × storage backends
+# ---------------------------------------------------------------------------
+def _regression_stream(q, schedule, b=4, seed=42):
+    rng = np.random.default_rng(seed)
+    ring = q.ring
+    out = []
+    for r in schedule:
+        sch = q.relations[r]
+        keys = np.stack([rng.integers(0, q.domains[v], size=b)
+                         for v in sch], 1).astype(np.int32)
+        payload = {**ring.zeros((b,)),
+                   "c": jnp.asarray(rng.integers(-2, 3, b)
+                                    .astype(np.float32))}
+        out.append((r, COOUpdate(sch, jnp.asarray(keys), payload)))
+    return out
+
+
+@pytest.mark.parametrize("storage", ["dense", "sparse"])
+@pytest.mark.parametrize("schedule,mode", [
+    (["R"] * 6, "scan"),
+    (["R", "S"] * 3, "rounds"),
+    (["R", "S", "R", "R", "S"], "switch"),
+])
+def test_fused_stream_matches_unfused_oracle(schedule, mode, storage):
+    """Every fused-stream dispatch mode must replay fused plans
+    bit-identically to the unfused sequential oracle, dense and sparse
+    (integer-valued f32 payloads ⇒ bitwise equality)."""
+    def build():
+        rng = np.random.default_rng(0)
+        rels = {"R": ("A", "B"), "S": ("A", "C")}
+        doms = dict(A=3, B=4, C=5)
+        mult = {n: jnp.asarray(
+            rng.integers(0, 2, size=tuple(doms[v] for v in sch))
+            .astype(np.float32)) for n, sch in rels.items()}
+        return regression.build_cofactor_engine(
+            rels, doms, mult, var_order=chain(["A"], {"A": [["B"], ["C"]]}),
+            storage=storage)
+
+    with plan_mod.use_fusion("off"):
+        oracle = build()
+        stream = _regression_stream(oracle.query, schedule)
+        for r, u in stream:
+            oracle.apply_update(r, u)
+
+    with plan_mod.use_fusion("on"):
+        fused = build()
+        prepared = prepare_stream(fused, stream)
+        assert prepared.mode == mode
+        assert prepared.fusion_sig == "on"
+        assert any(isinstance(op, plan_mod.FusedChain)
+                   for p in prepared.plans for op in p.ops)
+        StreamExecutor(fused).run(prepared)
+
+    for name in oracle.views:
+        a, b = oracle.views[name], fused.views[name]
+        da = a.to_dense() if isinstance(a, SparseRelation) else a
+        db = b.to_dense() if isinstance(b, SparseRelation) else b
+        for comp in da.payload:
+            np.testing.assert_array_equal(
+                np.asarray(da.payload[comp]), np.asarray(db.payload[comp]),
+                err_msg=f"{name}/{comp} [{mode} {storage}]")
+
+
+def test_fused_eager_interpreter_matches_unfused():
+    """The eager per-update path replays FusedChain ops too."""
+    with plan_mod.use_fusion("off"):
+        oracle = _regression_engine()
+        stream = _regression_stream(oracle.query, ["R", "S"] * 2, b=3)
+        for r, u in stream:
+            oracle.apply_update(r, u)
+    with plan_mod.use_fusion("on"):
+        fused = _regression_engine()
+        for r, u in stream:
+            fused.apply_update(r, u)
+        assert any(isinstance(op, plan_mod.FusedChain)
+                   for p in fused.plans.plans.values() for op in p.ops)
+    for name in oracle.views:
+        for comp in oracle.views[name].payload:
+            np.testing.assert_array_equal(
+                np.asarray(oracle.views[name].payload[comp]),
+                np.asarray(fused.views[name].payload[comp]))
+
+
+# ---------------------------------------------------------------------------
 # plan cache
 # ---------------------------------------------------------------------------
 def test_plan_cache_second_update_compiles_nothing():
@@ -173,6 +353,39 @@ def test_plan_cache_second_update_compiles_nothing():
     assert stats["plans"] == len(eng.plans.plans)
     assert 0.0 <= stats["hit_rate"] <= 1.0
     assert stats["compile_ms_total"] >= stats["compile_ms_per_plan"] >= 0.0
+
+
+def test_plan_cache_splits_new_vs_invalidated_misses():
+    """A first-ever (rel, signature) is a ``miss_new``; recompiling the
+    same trigger under a different plan environment (here: a fusion-mode
+    flip, same as a storage rehash or backend override) is a
+    ``miss_invalidated`` — the fusion on/off sweeps read these to tell
+    fresh compiles from honest invalidations."""
+    eng = _regression_engine()
+    ring = eng.query.ring
+
+    def upd(b):
+        keys = np.stack([np.arange(b) % 3, np.arange(b) % 4], 1)
+        payload = {**ring.zeros((b,)),
+                   "c": jnp.asarray(np.ones(b, np.float32))}
+        return COOUpdate(("A", "B"), jnp.asarray(keys.astype(np.int32)),
+                         payload)
+
+    with plan_mod.use_fusion("off"):
+        eng.apply_update("R", upd(4))
+    new0, inv0 = eng.plans.miss_new, eng.plans.miss_invalidated
+    assert new0 >= 1 and inv0 == 0
+    with plan_mod.use_fusion("off"):  # same key: pure hit
+        eng.apply_update("R", upd(4))
+    assert (eng.plans.miss_new, eng.plans.miss_invalidated) == (new0, 0)
+    with plan_mod.use_fusion("on"):  # same triggers, new plan environment
+        eng.apply_update("R", upd(4))
+    assert eng.plans.miss_new == new0
+    assert eng.plans.miss_invalidated >= 1
+    assert eng.plans.misses == eng.plans.miss_new + eng.plans.miss_invalidated
+    stats = eng.plans.stats()
+    assert stats["miss_new"] == eng.plans.miss_new
+    assert stats["miss_invalidated"] == eng.plans.miss_invalidated
 
 
 def test_stream_prepare_embeds_cached_plans():

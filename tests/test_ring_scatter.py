@@ -58,6 +58,39 @@ def test_scatter_add_flat_duplicate_and_padding_rows(backend):
     np.testing.assert_array_equal(np.asarray(got_p), np.asarray(exp))
 
 
+@given(seed=st.integers(0, 2**31 - 1), S=st.integers(1, 40),
+       B=st.integers(1, 48), d=st.integers(1, 17))
+@settings(max_examples=8, deadline=None)
+def test_scatter_dedup_variant_matches_oracle_and_plain(seed, S, B, d):
+    """The per-tile-dedup one-hot variant (the fused-chain scatter, which
+    drops the global sort/rank prepass) and the plain one-hot kernel must
+    both be bit-identical to the ``.at[].add`` oracle — ids are drawn from
+    a tiny range so most tiles carry heavy duplicates."""
+    rng = np.random.default_rng(seed)
+    view = _int_floats(rng, (S, d))
+    ids = jnp.asarray(rng.integers(0, min(S, 3), size=B).astype(np.int32))
+    vals = _int_floats(rng, (B, d))
+    exp = view.at[ids].add(vals)
+    for backend in ("onehot_interpret", "onehot_dedup_interpret"):
+        got = scatter_ops.scatter_add_flat(view, ids, vals, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp),
+                                      err_msg=backend)
+
+
+def test_scatter_dedup_padding_rows_drop():
+    rng = np.random.default_rng(11)
+    S, B, d = 9, 20, 5
+    view = _int_floats(rng, (S, d))
+    ids = jnp.asarray(rng.integers(0, S, size=B).astype(np.int32))
+    vals = _int_floats(rng, (B, d))
+    exp = view.at[ids].add(vals)
+    ids_p = jnp.concatenate([ids, jnp.full((7,), -1, jnp.int32)])
+    vals_p = jnp.concatenate([vals, jnp.zeros((7, d), jnp.float32)])
+    got = scatter_ops.scatter_add_flat(view, ids_p, vals_p,
+                                       backend="onehot_dedup_interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
 def test_scatter_add_flat_all_one_segment():
     """Worst-case duplication: the compact path collapses to one row."""
     rng = np.random.default_rng(1)
@@ -133,6 +166,29 @@ def test_linear_ids_row_major():
     keys = jnp.asarray([[0, 0], [1, 2], [2, 3]], jnp.int32)
     ids = scatter_ops.linear_ids(keys, (3, 4))
     np.testing.assert_array_equal(np.asarray(ids), [0, 6, 11])
+
+
+def test_measured_crossover_roundtrip(tmp_path):
+    """bench_kernels' crossover row feeds the dispatch heuristic: nearest
+    benchmarked batch wins, clearing restores the modeled constant."""
+    import json
+    try:
+        scatter_ops.set_measured_crossover({256: 8192, 1024: 16384})
+        assert scatter_ops.measured_crossover(200) == 8192
+        assert scatter_ops.measured_crossover(900) == 16384
+        scatter_ops.set_measured_crossover(None)
+        assert scatter_ops.measured_crossover(256) is None
+        p = tmp_path / "BENCH_kernels.json"
+        p.write_text(json.dumps({"results": [
+            {"name": "onehot_compact_crossover",
+             "points": [{"batch": 512, "measured_crossover": 4096,
+                         "modeled": 4096},
+                        {"batch": 64, "measured_crossover": None}]}]}))
+        assert scatter_ops.load_measured_crossover(p)
+        assert scatter_ops.measured_crossover(512) == 4096
+        assert not scatter_ops.load_measured_crossover(tmp_path / "nope.json")
+    finally:
+        scatter_ops.set_measured_crossover(None)
 
 
 def test_backend_resolution_precedence():
