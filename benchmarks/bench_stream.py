@@ -754,6 +754,7 @@ def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
                 plan_compile_ms_total=plan_stats["compile_ms_total"],
                 plan_compile_ms_per_plan=plan_stats["compile_ms_per_plan"],
                 plan_cache_hit_rate=plan_stats["hit_rate"],
+                plan_verify_ms=plan_stats["verify_ms_total"],
                 plans_compiled=plan_stats["plans"])
             derived += (f";plan_compile_ms={plan_stats['compile_ms_total']};"
                         f"plan_hit_rate={plan_stats['hit_rate']}")
@@ -840,7 +841,8 @@ def run(batches=(16, 64, 256), n_batches: int = 30, seed: int = 0,
             bit_identical_to_dense=bit_identical,
             plan_compile_ms_total=e["pstats"]["compile_ms_total"],
             plan_compile_ms_per_plan=e["pstats"]["compile_ms_per_plan"],
-            plan_cache_hit_rate=e["pstats"]["hit_rate"]))
+            plan_cache_hit_rate=e["pstats"]["hit_rate"],
+            plan_verify_ms=e["pstats"]["verify_ms_total"]))
     assert bit_identical, "sparse housing run diverged from dense"
     assert mem_ratio >= 10, f"sparse memory win below 10x: {mem_ratio:.1f}"
 

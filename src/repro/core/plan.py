@@ -1071,6 +1071,7 @@ class PlanCache:
         self.miss_new = 0
         self.miss_invalidated = 0
         self.compile_seconds = 0.0
+        self.verify_seconds = 0.0
         self._interned: dict = {}
         self._write_sets: dict = {}
         self._seen: set = set()
@@ -1103,6 +1104,15 @@ class PlanCache:
         if fusion_mode() == "on":
             plan = fuse_trigger_ops(plan, engine.query, views)
         self.compile_seconds += time.perf_counter() - t0
+        # static invariant verification (DESIGN.md §14) rides the compile
+        # miss only: a verified plan is cached as verified, so replay —
+        # every cache hit above — pays nothing
+        from repro.analysis import verifier as verifier_mod
+
+        if verifier_mod.verify_mode() == "on":
+            t1 = time.perf_counter()
+            verifier_mod.check_plan(engine, plan, views=views)
+            self.verify_seconds += time.perf_counter() - t1
         self.plans[key] = plan
         return plan
 
@@ -1117,14 +1127,21 @@ class PlanCache:
         """Structural write sets for ``rel`` (independent of batch size and
         storage layout): the views/base/indicator entries any trigger for
         ``rel`` may replace.  Drives eager-path growth and the stream
-        executor's mutable/const state partition."""
-        if rel not in self._write_sets:
+        executor's mutable/const state partition.
+
+        Memoized under the same environment key as the plan cache itself
+        (storage layout, backend override, fusion mode) — keying by ``rel``
+        alone let a mid-session layout or fusion-mode flip serve a
+        write-set derived from an invalidated plan."""
+        key = (rel, storage_signature(engine.views),
+               active_backend_override(), fusion_mode())
+        if key not in self._write_sets:
             # representative signature: write sets do not depend on the
             # update's batch or on densification
             sig = ("coo", tuple(engine.query.relations[rel]), 1)
             plan = self.lookup_sig(engine, rel, sig)
-            self._write_sets[rel] = plan.write_sets()
-        return self._write_sets[rel]
+            self._write_sets[key] = plan.write_sets()
+        return self._write_sets[key]
 
     def stats(self) -> dict:
         total = self.hits + self.misses
@@ -1141,6 +1158,9 @@ class PlanCache:
             #: average per compiled trigger plan
             compile_ms_per_plan=round(1e3 * self.compile_seconds / n, 3)
             if n else 0.0,
+            #: compile-time static verification (DESIGN.md §14); cache
+            #: hits never re-verify, so this amortizes to zero on replay
+            verify_ms_total=round(1e3 * self.verify_seconds, 3),
             interned_ops=len(self._interned),
         )
 

@@ -209,7 +209,16 @@ def plan_shards(engine, rels: Sequence[str] | None = None,
                       else "scatter-written, never read by key")
             specs[name] = ShardSpec(name, "shard", axis, place,
                                     v.shard_extent(), reason)
-    return ShardPlan(mesh=mesh, axis_name=axis_name, specs=specs)
+    shard_plan = ShardPlan(mesh=mesh, axis_name=axis_name, specs=specs)
+
+    # static multi-device race check (DESIGN.md §14, rule race/shard-spec):
+    # every sharded spec must agree with the plans' re-derived read/write
+    # sets before any state is placed under it
+    from repro.analysis import verifier as verifier_mod
+
+    if verifier_mod.verify_mode() == "on":
+        verifier_mod.check_shard(shard_plan, plans, views)
+    return shard_plan
 
 
 def replan_shards(engine, old_plan: ShardPlan | None = None,

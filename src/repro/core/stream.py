@@ -362,6 +362,17 @@ def prepare_stream(
         return engine.plans.lookup_sig(
             engine, rel, ("coo", schemas[rel], bucket))
 
+    def verified(plans: tuple):
+        """Step-level static race check (DESIGN.md §14, rule
+        race/memo-write): the CSE memo a fused step builds once must not
+        name a view any plan in the step writes.  Rides stream
+        preparation, not replay — compiled programs re-run free."""
+        from repro.analysis import verifier as verifier_mod
+
+        if verifier_mod.verify_mode() == "on":
+            verifier_mod.check_step(plans)
+        return plans
+
     def stack(upds: list[COOUpdate], bucket: int):
         padded = [u.pad_to(ring, bucket) for u in upds]
         keys = jnp.stack([u.keys for u in padded])  # [n, B, k]
@@ -398,7 +409,8 @@ def prepare_stream(
             n_tuples=n_tuples,
             tail=tail,
             tail_len=tail_len,
-            plans=tuple(plan_for(r, b) for r, b in zip(pattern, buckets)),
+            plans=verified(tuple(plan_for(r, b)
+                                 for r, b in zip(pattern, buckets))),
             storage_sig=storage_sig,
             backend_sig=backend_sig,
             fusion_sig=fusion_sig,
@@ -425,7 +437,7 @@ def prepare_stream(
         n_steps=len(stream),
         buckets=(bucket,),
         n_tuples=n_tuples,
-        plans=tuple(plan_for(r, bucket) for r in rel_order),
+        plans=verified(tuple(plan_for(r, bucket) for r in rel_order)),
         storage_sig=storage_sig,
         backend_sig=backend_sig,
         fusion_sig=fusion_sig,

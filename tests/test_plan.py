@@ -388,6 +388,28 @@ def test_plan_cache_splits_new_vs_invalidated_misses():
     assert stats["miss_invalidated"] == eng.plans.miss_invalidated
 
 
+def test_write_sets_track_fusion_mode_flip(plain_env):
+    """Regression: ``PlanCache.write_sets`` used to memoize by rel alone,
+    so a mid-session ``REPRO_PLAN_FUSION`` flip kept serving write sets
+    derived from an invalidated plan.  The memo now shares the plan
+    cache's environment key: the flip must force a fresh derivation
+    (visible as a new plan-cache miss), and — since fusion preserves the
+    op multiset — the re-derived sets must come out equal."""
+    eng = _regression_engine()
+    with plan_mod.use_fusion("off"):
+        off_sets = eng.plans.write_sets(eng, "R")
+        misses0 = eng.plans.misses
+        # memoized: a repeat under the same environment is free
+        assert eng.plans.write_sets(eng, "R") == off_sets
+        assert eng.plans.misses == misses0
+    with plan_mod.use_fusion("on"):
+        on_sets = eng.plans.write_sets(eng, "R")
+        assert eng.plans.misses == misses0 + 1  # fresh derivation
+        assert eng.plans.write_sets(eng, "R") == on_sets
+        assert eng.plans.misses == misses0 + 1
+    assert on_sets == off_sets
+
+
 def test_stream_prepare_embeds_cached_plans():
     rng = np.random.default_rng(3)
     q = Query(relations={"R": ("A", "B"), "S": ("A", "C")},

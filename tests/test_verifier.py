@@ -1,0 +1,388 @@
+"""Static plan verification (DESIGN.md §14): golden/app plans are clean,
+every deliberately-broken plan fires its rule, and the compile-time gate
+is free on cache hits.
+
+* **Clean sweep** — one parametrized test runs the full rule set over
+  the compiled plans of all three app builders (the same engines whose
+  plans the golden tests pin) across storage modes and fusion — zero
+  violations anywhere.
+* **Broken-plan corpus** — fixtures that surgically corrupt a real
+  compiled plan (schema mismatch, memo-plane write race, illegal fused
+  ring, shard/read-set disagreement, capacity under-budget, ...) and
+  assert the verifier names the rule, the op, and the view.
+* **Gating** — ``REPRO_PLAN_VERIFY`` override precedence, the
+  compile-miss-only cost model (cache hits never re-verify), and the
+  ``verify_ms_total`` stat.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import verifier
+from repro.core import plan as plan_mod
+from repro.core import shard as shard_mod
+from repro.core.apps import conjunctive, matrix_chain, regression
+from repro.core.plan import (
+    FusedChain, Gather, Marginalize, ScatterAccum)
+from repro.core.rings import MatrixRing
+from repro.core.variable_orders import chain
+
+
+@pytest.fixture
+def plain_env(monkeypatch):
+    monkeypatch.delenv("REPRO_VIEW_STORAGE", raising=False)
+    monkeypatch.delenv("REPRO_SCATTER_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_PLAN_FUSION", raising=False)
+    monkeypatch.delenv("REPRO_PLAN_VERIFY", raising=False)
+
+
+def _regression_engine(**kw):
+    rng = np.random.default_rng(0)
+    rels = {"R": ("A", "B"), "S": ("A", "C")}
+    doms = dict(A=3, B=4, C=5)
+    mult = {n: jnp.asarray(rng.integers(0, 2,
+                                        size=tuple(doms[v] for v in sch))
+                           .astype(np.float32))
+            for n, sch in rels.items()}
+    return regression.build_cofactor_engine(
+        rels, doms, mult, var_order=chain(["A"], {"A": [["B"], ["C"]]}),
+        **kw)
+
+
+def _chain_engine(**kw):
+    rng = np.random.default_rng(0)
+    mats = [jnp.asarray(rng.random((4, 3)).astype(np.float32)),
+            jnp.asarray(rng.random((3, 5)).astype(np.float32)),
+            jnp.asarray(rng.random((5, 2)).astype(np.float32))]
+    return matrix_chain.build_chain_engine(mats, **kw)
+
+
+def _conjunctive_engine(**kw):
+    rng = np.random.default_rng(0)
+    rels = {"R": ("A", "B"), "S": ("B", "C")}
+    doms = dict(A=3, B=3, C=3)
+    mult = {n: rng.integers(0, 2, size=tuple(doms[v] for v in sch))
+            .astype(np.float32) for n, sch in rels.items()}
+    eng, _ = conjunctive.make_factorized_engine(
+        rels, mult, chain(["A", "B", "C"]), doms, **kw)
+    return eng
+
+
+_BUILDERS = {
+    "regression": _regression_engine,
+    "matrix_chain": _chain_engine,
+    "conjunctive": _conjunctive_engine,
+}
+
+
+# ---------------------------------------------------------------------------
+# Satellite: every golden/app plan verifies clean
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fusion", ["off", "on"])
+@pytest.mark.parametrize("storage", ["dense", "sparse"])
+@pytest.mark.parametrize("app", sorted(_BUILDERS))
+def test_app_plans_verify_clean(plain_env, app, storage, fusion):
+    """The full rule set over every trigger plan of every app builder —
+    the same configurations whose plan texts the golden tests pin — and
+    the step/shard-level rules on top.  Zero violations anywhere."""
+    eng = _BUILDERS[app](storage=storage)
+    with plan_mod.use_fusion(fusion):
+        plans = []
+        for rel in eng.updatable:
+            for batch in (1, 4):
+                sig = ("coo", tuple(eng.query.relations[rel]), batch)
+                with verifier.use_verify("off"):
+                    plan = eng.plans.lookup_sig(eng, rel, sig)
+                violations = verifier.verify_trigger_plan(eng, plan)
+                assert violations == [], "\n".join(
+                    v.label() for v in violations)
+                if batch == 4:
+                    plans.append(plan)
+        assert verifier.verify_step_plans(plans) == []
+        with verifier.use_verify("off"):
+            splan = shard_mod.plan_shards(eng)
+        assert verifier.verify_shard_plan(splan, plans, eng.views) == []
+
+
+def test_factorized_and_first_order_plans_verify_clean(plain_env):
+    eng = _chain_engine()
+    for rel in eng.updatable:
+        sig = ("factorized", tuple(eng.query.relations[rel]))
+        with verifier.use_verify("off"):
+            plan = eng.plans.lookup_sig(eng, rel, sig)
+        assert verifier.verify_trigger_plan(eng, plan) == []
+    eng1 = _regression_engine(strategy="fivm_1")
+    engr = _regression_engine(strategy="reeval")
+    for eng in (eng1, engr):
+        for rel in eng.updatable:
+            sig = ("coo", tuple(eng.query.relations[rel]), 2)
+            with verifier.use_verify("off"):
+                plan = eng.plans.lookup_sig(eng, rel, sig)
+            assert verifier.verify_trigger_plan(eng, plan) == [], \
+                eng.strategy
+
+
+# ---------------------------------------------------------------------------
+# Broken-plan corpus: each rule fires with its id + a readable message
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def dense_engine():
+    return _regression_engine(storage="dense")
+
+
+def _coo_plan(eng, rel="R", batch=2):
+    sig = ("coo", tuple(eng.query.relations[rel]), batch)
+    with verifier.use_verify("off"):
+        return eng.plans.lookup_sig(eng, rel, sig)
+
+
+def _replace_op(plan, pred, fn):
+    """Rebuild a plan with ``fn(op)`` applied to the first op matching
+    ``pred`` (the corpus' surgical corruption helper)."""
+    done = False
+    ops = []
+    for op in plan.ops:
+        if not done and pred(op):
+            ops.append(fn(op))
+            done = True
+        else:
+            ops.append(op)
+    assert done, "no op matched the corruption predicate"
+    return dataclasses.replace(plan, ops=tuple(ops))
+
+
+def _rules(violations):
+    return {v.rule for v in violations}
+
+
+def test_broken_schema_mismatch(plain_env, dense_engine):
+    """A Gather whose vars disagree with the stored view's schema."""
+    eng = dense_engine
+    broken = _replace_op(
+        _coo_plan(eng), lambda op: isinstance(op, Gather),
+        lambda op: dataclasses.replace(op, vars=("A", "Z")))
+    violations = verifier.verify_trigger_plan(eng, broken)
+    assert "schema/view-schema" in _rules(violations)
+    v = next(v for v in violations if v.rule == "schema/view-schema")
+    assert v.view in broken.read_views()  # names the gathered view
+    assert "Z" in v.message and v.view in v.message
+    assert v.op.startswith("Gather")
+
+
+def test_broken_unknown_view(plain_env, dense_engine):
+    eng = dense_engine
+    broken = _replace_op(
+        _coo_plan(eng), lambda op: isinstance(op, Gather),
+        lambda op: dataclasses.replace(op, view="NOPE"))
+    violations = verifier.verify_trigger_plan(eng, broken)
+    assert "schema/view-unknown" in _rules(violations)
+    v = next(v for v in violations if v.rule == "schema/view-unknown")
+    assert "NOPE" in v.message
+
+
+def test_broken_write_set(plain_env, dense_engine):
+    eng = dense_engine
+    plan = _coo_plan(eng)
+    broken = dataclasses.replace(
+        plan, write_views=plan.write_views | {"V1@C"})
+    violations = verifier.verify_trigger_plan(eng, broken)
+    assert "schema/write-set" in _rules(violations)
+    v = next(v for v in violations if v.rule == "schema/write-set")
+    assert "V1@C" in v.message
+
+
+def test_broken_backend(plain_env, dense_engine):
+    eng = dense_engine
+    broken = _replace_op(
+        _coo_plan(eng), lambda op: isinstance(op, ScatterAccum),
+        lambda op: dataclasses.replace(op, backend="warp_drive"))
+    violations = verifier.verify_trigger_plan(eng, broken)
+    assert "schema/backend" in _rules(violations)
+    assert "warp_drive" in next(
+        v for v in violations if v.rule == "schema/backend").message
+
+
+def test_broken_state_flags(plain_env, dense_engine):
+    """Flipping a Marginalize collapse flag disagrees with the replayed
+    delta state machine."""
+    eng = dense_engine
+    broken = _replace_op(
+        _coo_plan(eng),
+        lambda op: isinstance(op, Marginalize) and op.collapses,
+        lambda op: dataclasses.replace(op, collapses=False))
+    violations = verifier.verify_trigger_plan(eng, broken)
+    assert "schema/state" in _rules(violations)
+
+
+def test_broken_memo_plane_write_race(plain_env, dense_engine):
+    """A plan that ⊎-writes a view the step's CSE memo shares — with a
+    write_views that hides it, so only the op-derived union can catch
+    the race."""
+    eng = dense_engine
+    plan_r = _coo_plan(eng, "R", 2)
+    gathered = sorted(plan_r.read_views())[0]
+    # a second plan in the step gathers the same plane (so the memo is
+    # shared) and ALSO scatter-writes it, while its declared write_views
+    # stays silent about the write
+    sneaky = dataclasses.replace(
+        plan_r,
+        ops=plan_r.ops + (
+            ScatterAccum(gathered, "dense", backend="jnp"),))
+    violations = verifier.verify_step_plans([plan_r, sneaky])
+    assert "race/memo-write" in _rules(violations)
+    v = next(v for v in violations if v.rule == "race/memo-write")
+    assert v.view == gathered and gathered in v.message
+
+
+def test_broken_fused_ring_spec(plain_env):
+    """A FusedChain whose recorded ring spec disagrees with the
+    independent fused_ring_spec re-derivation."""
+    eng = _regression_engine(storage="dense")
+    with plan_mod.use_fusion("on"):
+        plan = _coo_plan(eng, "R", 4)
+    chains = [op for op in plan.ops if isinstance(op, FusedChain)]
+    assert chains, "regression cofactor plan must fuse under 'on'"
+    broken = _replace_op(
+        plan, lambda op: isinstance(op, FusedChain),
+        lambda op: dataclasses.replace(op, spec=("degree", 7)))
+    violations = verifier.verify_trigger_plan(eng, broken)
+    assert "fusion/ring" in _rules(violations)
+    assert "degree" in next(
+        v for v in violations if v.rule == "fusion/ring").message
+
+
+def test_broken_fused_read_set_and_vmem(plain_env):
+    eng = _regression_engine(storage="dense")
+    with plan_mod.use_fusion("on"):
+        plan = _coo_plan(eng, "R", 4)
+    broken = _replace_op(
+        plan, lambda op: isinstance(op, FusedChain),
+        lambda op: dataclasses.replace(op, reads=("GHOST",),
+                                       vmem_bytes=op.vmem_bytes + 64))
+    violations = verifier.verify_trigger_plan(eng, broken)
+    assert "race/fused-read-set" in _rules(violations)
+    assert "fusion/vmem" in _rules(violations)
+    v = next(v for v in violations if v.rule == "race/fused-read-set")
+    assert "GHOST" in v.message
+
+
+def test_broken_ring_commutativity_witness():
+    """A ring *claiming* commutativity whose ⊗ is not commutative in
+    practice is caught by the sample-payload witness."""
+    ring = MatrixRing(2)
+    assert verifier.commutativity_witness(ring) is False
+    claimed = MatrixRing(3)
+    claimed.commutative = True  # lie about it
+    assert verifier.commutativity_witness(claimed) is False
+
+
+def test_broken_shard_read_set_disagreement(plain_env, dense_engine):
+    """A shard spec routing a by-key-read view without an all_gather —
+    the multi-device race the placement pass must never produce."""
+    eng = _regression_engine(storage="sparse")
+    plans = [_coo_plan(eng, rel, 2) for rel in eng.updatable]
+    with verifier.use_verify("off"):
+        splan = shard_mod.plan_shards(eng)
+    assert verifier.verify_shard_plan(splan, plans, eng.views) == []
+    read = sorted(set(plan_mod.read_sets(plans))
+                  & set(splan.specs))[0]
+    view = eng.views[read]
+    splan.specs[read] = shard_mod.ShardSpec(
+        read, "shard", "slot", "scatter", int(view.shard_extent()),
+        "corrupted")
+    violations = verifier.verify_shard_plan(splan, plans, eng.views)
+    assert "race/shard-spec" in _rules(violations)
+    v = next(v for v in violations if v.rule == "race/shard-spec")
+    assert read in v.message and "all_gather" in v.message
+
+
+def test_broken_capacity_under_budget(plain_env, monkeypatch):
+    """An engine budget model that under-provisions a sparse ⊎ against
+    the plan-derived worst case."""
+    eng = _regression_engine(storage="sparse")
+    plan = _coo_plan(eng, "R", 2)
+    assert verifier.verify_trigger_plan(eng, plan) == []
+    monkeypatch.setattr(type(eng), "_insert_budget",
+                        lambda self, view, rel, upd: 1)
+    violations = verifier.verify_trigger_plan(eng, plan)
+    assert "capacity/under-budget" in _rules(violations)
+    v = next(v for v in violations if v.rule == "capacity/under-budget")
+    assert v.view and v.view in v.message
+
+
+# ---------------------------------------------------------------------------
+# Gating + cost model
+# ---------------------------------------------------------------------------
+def test_verify_mode_precedence(plain_env, monkeypatch):
+    with verifier.use_verify("off"):
+        assert verifier.verify_mode() == "off"
+        with verifier.use_verify("on"):
+            assert verifier.verify_mode() == "on"
+    monkeypatch.setenv("REPRO_PLAN_VERIFY", "off")
+    assert verifier.verify_mode() == "off"
+    monkeypatch.delenv("REPRO_PLAN_VERIFY")
+    # auto: on under pytest (PYTEST_CURRENT_TEST is set by the harness)
+    assert verifier.verify_mode() == "on"
+
+
+def test_gate_raises_and_does_not_cache_bad_plans(plain_env, monkeypatch):
+    """The compile-time gate rejects a violating plan and leaves it out
+    of the cache (the next lookup retries)."""
+    eng = _regression_engine(storage="dense")
+    orig = plan_mod.compile_trigger
+
+    def corrupting(engine, rel, upd_sig, intern=None, views=None):
+        plan = orig(engine, rel, upd_sig, intern=intern, views=views)
+        return dataclasses.replace(
+            plan, write_views=plan.write_views | {"V1@C"})
+
+    monkeypatch.setattr(plan_mod, "compile_trigger", corrupting)
+    sig = ("coo", ("A", "B"), 3)
+    with verifier.use_verify("on"):
+        with pytest.raises(verifier.PlanVerificationError) as ei:
+            eng.plans.lookup_sig(eng, "R", sig)
+    assert any(v.rule == "schema/write-set" for v in ei.value.violations)
+    assert not any(key[0] == "R" and key[1] == sig
+                   for key in eng.plans.plans)
+    monkeypatch.setattr(plan_mod, "compile_trigger", orig)
+    with verifier.use_verify("on"):
+        plan = eng.plans.lookup_sig(eng, "R", sig)
+    assert plan is not None
+
+
+def test_verify_amortized_to_zero_on_cache_hits(plain_env):
+    """Verification rides the compile miss only: a cache hit re-pays
+    neither compile nor verify time."""
+    eng = _regression_engine(storage="dense")
+    sig = ("coo", ("A", "B"), 5)
+    with verifier.use_verify("on"):
+        eng.plans.lookup_sig(eng, "R", sig)
+        spent = eng.plans.verify_seconds
+        assert spent > 0.0
+        hits0 = eng.plans.hits
+        eng.plans.lookup_sig(eng, "R", sig)
+    assert eng.plans.hits == hits0 + 1
+    assert eng.plans.verify_seconds == spent  # bit-identical: no re-verify
+    stats = eng.plans.stats()
+    assert stats["verify_ms_total"] == round(1e3 * spent, 3)
+
+
+def test_verify_overhead_small_vs_compile(plain_env):
+    """REPRO_PLAN_VERIFY=on must stay a sub-0.1 ms/plan pure-Python
+    replay (measured ~0.05–0.07 ms/plan, DESIGN.md §14) — this is the
+    regression guard against reintroducing device dispatch (the capacity
+    proto and witness memos are host-only by construction) or a
+    super-linear rule into the per-compile path."""
+    eng = _regression_engine(storage="dense")
+    with verifier.use_verify("on"):
+        eng.plans.lookup_sig(eng, "R", ("coo", ("A", "B"), 2))  # warmup
+        v0 = eng.plans.verify_seconds
+        n = 0
+        for b in range(3, 23):
+            eng.plans.lookup_sig(eng, "R", ("coo", ("A", "B"), b))
+            eng.plans.lookup_sig(eng, "S", ("coo", ("A", "C"), b))
+            n += 2
+    per_plan = (eng.plans.verify_seconds - v0) / n
+    assert per_plan < 1e-4, eng.plans.stats()

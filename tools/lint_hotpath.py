@@ -1,0 +1,235 @@
+#!/usr/bin/env python
+"""AST lint for the replay/serve hot path (DESIGN.md §14).
+
+The fused stream executor and the serving plane promise that steady-state
+work is *pure device compute*: replaying a compiled program must never
+block on a device→host sync, and traced code must never read host state
+that varies between traces.  Those promises are easy to break silently —
+one stray ``.item()`` in a scan body serializes the whole pipeline; one
+``time.time()`` under ``jit`` bakes a constant into the compiled program.
+
+This tool enforces them statically over the hot-path modules:
+
+``HP001`` device→host sync calls — ``.item()``, ``.tolist()``,
+    ``.block_until_ready()``, ``host_payload()``, ``payload_sync()``,
+    ``num_keys_sync()``, ``num_slots_used_sync()``.
+``HP002`` host materialization of device values — ``np.asarray`` /
+    ``np.array`` / ``jax.device_get`` / ``float(...)`` over a
+    non-literal argument.
+``HP003`` impure-under-trace constructs — any ``time.*``, ``random.*``
+    or ``np.random.*`` call.
+``HP004`` iteration over unordered containers — ``for _ in set(...)`` /
+    set literals / ``frozenset(...)``: set iteration order is
+    insertion-history dependent, so op order (and with it compiled
+    programs and float reduction order) would vary run to run.
+
+Hot-path modules legitimately contain *host-side* admission, compile and
+growth code (plan compilation timing, capacity checks, eager growth);
+those sites are suppressed either inline (`# hotpath: allow`) or in the
+central allowlist ``tools/hotpath_allowlist.txt`` with one
+``path::qualname[::CODE]`` entry per function scope — the allowlist is
+the audited registry of every host touchpoint in the hot path.
+
+Usage: ``python tools/lint_hotpath.py [--root REPO] [--list]``
+Exit status 1 when any unallowlisted finding remains (the CI gate).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+#: replay/serve hot-path modules (repo-relative).  Compile-time-only
+#: modules (plan compilation, storage planning) are included on purpose:
+#: their host calls must be individually audited into the allowlist so a
+#: refactor cannot silently move one into a replay body.
+HOT_MODULES = (
+    "src/repro/core/plan.py",
+    "src/repro/core/stream.py",
+    "src/repro/core/contraction.py",
+    "src/repro/core/storage.py",
+    "src/repro/core/relations.py",
+    "src/repro/core/indicators.py",
+    "src/repro/kernels/scatter_ops.py",
+    "src/repro/kernels/ring_scatter.py",
+    "src/repro/kernels/ring_fused.py",
+    "src/repro/serve/lookup.py",
+    "src/repro/serve/registry.py",
+    "src/repro/serve/server.py",
+)
+
+SYNC_METHODS = frozenset({
+    "item", "tolist", "block_until_ready", "host_payload", "payload_sync",
+    "num_keys_sync", "num_slots_used_sync",
+})
+
+ALLOW_COMMENT = "# hotpath: allow"
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'np.random.default_rng' for nested Attribute/Name chains."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class Finding:
+    def __init__(self, path: str, line: int, code: str, qualname: str,
+                 message: str):
+        self.path, self.line, self.code = path, line, code
+        self.qualname, self.message = qualname, message
+
+    def key(self) -> str:
+        return f"{self.path}::{self.qualname}"
+
+    def label(self) -> str:
+        return (f"{self.path}:{self.line}: {self.code} "
+                f"[{self.qualname}] {self.message}")
+
+
+class HotPathVisitor(ast.NodeVisitor):
+    def __init__(self, relpath: str, source_lines: list[str]):
+        self.relpath = relpath
+        self.lines = source_lines
+        self.scope: list[str] = []
+        self.findings: list[Finding] = []
+
+    # ------------------------------------------------------------ scoping
+    def _qual(self) -> str:
+        return ".".join(self.scope) if self.scope else "<module>"
+
+    def visit_FunctionDef(self, node):
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_ClassDef(self, node):
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    # ----------------------------------------------------------- findings
+    def _flag(self, node: ast.AST, code: str, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if 0 < line <= len(self.lines) \
+                and ALLOW_COMMENT in self.lines[line - 1]:
+            return
+        self.findings.append(
+            Finding(self.relpath, line, code, self._qual(), message))
+
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        if isinstance(func, ast.Attribute) and func.attr in SYNC_METHODS:
+            self._flag(node, "HP001",
+                       f".{func.attr}() is a device→host sync")
+        name = _dotted(func)
+        if name:
+            root = name.split(".", 1)[0]
+            if name in ("np.asarray", "np.array", "numpy.asarray",
+                        "numpy.array", "jax.device_get"):
+                self._flag(node, "HP002",
+                           f"{name}(...) materializes on host")
+            elif root == "time" or root == "random" \
+                    or name.startswith(("np.random.", "numpy.random.",
+                                        "jax.random.PRNGKey")):
+                self._flag(node, "HP003",
+                           f"{name}(...) is impure under trace")
+        if isinstance(func, ast.Name) and func.id == "float" \
+                and node.args \
+                and not isinstance(node.args[0], ast.Constant):
+            self._flag(node, "HP002",
+                       "float(x) forces a scalar device→host transfer")
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For):
+        self._check_unordered_iter(node.iter)
+        self.generic_visit(node)
+
+    def visit_comprehension(self, node: ast.comprehension):
+        self._check_unordered_iter(node.iter)
+        # comprehensions have no generic_visit of their own fields' scopes
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+
+    def _check_unordered_iter(self, it: ast.AST) -> None:
+        if isinstance(it, ast.Set):
+            self._flag(it, "HP004", "iteration over a set literal has "
+                       "no deterministic order")
+        elif isinstance(it, ast.Call):
+            name = _dotted(it.func)
+            if name in ("set", "frozenset"):
+                self._flag(it, "HP004", f"iteration over {name}(...) has "
+                           "no deterministic order")
+
+
+def load_allowlist(path: Path) -> set[str]:
+    entries: set[str] = set()
+    if not path.exists():
+        return entries
+    for raw in path.read_text().splitlines():
+        line = raw.split("#", 1)[0].strip()
+        if line:
+            entries.add(line)
+    return entries
+
+
+def allowed(f: Finding, allowlist: set[str]) -> bool:
+    return (f"{f.path}::{f.qualname}" in allowlist
+            or f"{f.path}::{f.qualname}::{f.code}" in allowlist)
+
+
+def lint(root: Path, allowlist: set[str]) -> tuple[list[Finding], int]:
+    findings: list[Finding] = []
+    checked = 0
+    for rel in HOT_MODULES:
+        path = root / rel
+        if not path.exists():
+            continue
+        checked += 1
+        src = path.read_text()
+        tree = ast.parse(src, filename=str(path))
+        v = HotPathVisitor(rel, src.splitlines())
+        v.visit(tree)
+        findings.extend(f for f in v.findings if not allowed(f, allowlist))
+    return findings, checked
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path,
+                    default=Path(__file__).resolve().parent.parent,
+                    help="repo root (default: this tool's parent repo)")
+    ap.add_argument("--allowlist", type=Path, default=None,
+                    help="allowlist file (default: tools/hotpath_allowlist"
+                         ".txt under --root)")
+    ap.add_argument("--list", action="store_true",
+                    help="print every finding's allowlist key and exit 0 "
+                         "(triage mode)")
+    args = ap.parse_args(argv)
+    allow_path = args.allowlist or args.root / "tools/hotpath_allowlist.txt"
+    allowlist = load_allowlist(allow_path) if not args.list else set()
+    findings, checked = lint(args.root, allowlist)
+    for f in sorted(findings, key=lambda f: (f.path, f.line)):
+        print(f.key() + f"::{f.code}" if args.list else f.label())
+    if args.list:
+        return 0
+    if findings:
+        print(f"\nhot-path lint: {len(findings)} finding(s) across "
+              f"{checked} modules (allowlist: {allow_path})",
+              file=sys.stderr)
+        return 1
+    print(f"hot-path lint: clean ({checked} modules, "
+          f"{len(allowlist)} allowlisted scopes)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Standalone plan-verification gate (DESIGN.md §14) — the CI
+``verify-plans`` step.
+
+Builds every app configuration (``repro.core.apps``: degree-m regression
+cofactors, factorized matrix chain, count-ring conjunctive queries) under
+both storage modes, compiles every trigger plan the engines can serve,
+and runs the full static rule set over each:
+
+* per-plan rules (``verify_trigger_plan``): schema/dataflow typing,
+  state-machine replay, fusion legality oracle, capacity soundness;
+* step-level CSE race rule (``verify_step_plans``) over the all-triggers
+  pattern of each engine;
+* shard-placement race rule (``verify_shard_plan``) over the engine's
+  derived single-host shard plan.
+
+Honors ``REPRO_SCATTER_BACKEND`` / ``REPRO_PLAN_FUSION`` /
+``REPRO_VIEW_STORAGE``, so the CI matrix sweeps it across the same legs
+as the test matrix.  Exit status 1 on any violation; per-plan verify
+wall time is printed (the bench counterpart is ``plan_verify_ms`` in
+BENCH_stream.json).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.analysis import verifier  # noqa: E402
+from repro.core import shard as shard_mod  # noqa: E402
+from repro.core.apps import conjunctive, matrix_chain, regression  # noqa: E402
+from repro.core.variable_orders import chain  # noqa: E402
+
+
+def _engines():
+    """(label, engine) per app × storage configuration."""
+    rng = np.random.default_rng(0)
+    storages = [None, "dense", "sparse"]
+    env_storage = os.environ.get("REPRO_VIEW_STORAGE")
+    if env_storage:
+        storages = [None]  # the env override already picks the layout
+
+    rels = {"R": ("A", "B"), "S": ("A", "C")}
+    doms = dict(A=3, B=4, C=5)
+    mult = {n: jnp.asarray(
+        rng.integers(0, 2, size=tuple(doms[v] for v in sch))
+        .astype(np.float32)) for n, sch in rels.items()}
+    for storage in storages:
+        kw = {} if storage is None else {"storage": storage}
+        label = f"regression[{storage or env_storage or 'auto'}]"
+        yield label, regression.build_cofactor_engine(
+            rels, doms, mult,
+            var_order=chain(["A"], {"A": [["B"], ["C"]]}), **kw)
+
+    mats = [jnp.asarray(rng.random((4, 3)).astype(np.float32)),
+            jnp.asarray(rng.random((3, 5)).astype(np.float32)),
+            jnp.asarray(rng.random((5, 2)).astype(np.float32))]
+    for storage in storages:
+        kw = {} if storage is None else {"storage": storage}
+        label = f"matrix_chain[{storage or env_storage or 'auto'}]"
+        yield label, matrix_chain.build_chain_engine(mats, **kw)
+
+    crels = {"R": ("A", "B"), "S": ("B", "C")}
+    cdoms = dict(A=3, B=3, C=3)
+    cmult = {n: rng.integers(0, 2, size=tuple(cdoms[v] for v in sch))
+             .astype(np.float32) for n, sch in crels.items()}
+    for storage in storages:
+        kw = {} if storage is None else {"storage": storage}
+        label = f"conjunctive[{storage or env_storage or 'auto'}]"
+        eng, _ = conjunctive.make_factorized_engine(
+            crels, cmult, chain(["A", "B", "C"]), cdoms, **kw)
+        yield label, eng
+
+
+def main() -> int:
+    n_plans = 0
+    n_violations = 0
+    t_total = 0.0
+    for label, eng in _engines():
+        plans = []
+        for rel in eng.updatable:
+            for batch in (1, 4):
+                sig = ("coo", tuple(eng.query.relations[rel]), batch)
+                # compile outside the gate so the timed section below is
+                # verification alone
+                with verifier.use_verify("off"):
+                    plans.append(eng.plans.lookup_sig(eng, rel, sig))
+        step_plans = []
+        for plan in plans:
+            t0 = time.perf_counter()
+            violations = verifier.verify_trigger_plan(eng, plan)
+            dt = 1e3 * (time.perf_counter() - t0)
+            t_total += dt
+            n_plans += 1
+            status = "ok" if not violations else f"{len(violations)} VIOLATION(S)"
+            print(f"  {label:28s} δ{plan.rel} batch="
+                  f"{plan.batch}: {status}  ({dt:.2f} ms)")
+            for v in violations:
+                n_violations += 1
+                print(f"    {v.label()}")
+            if plan.batch == 4:
+                step_plans.append(plan)
+        for v in verifier.verify_step_plans(step_plans):
+            n_violations += 1
+            print(f"    {v.label()}")
+        with verifier.use_verify("off"):
+            splan = shard_mod.plan_shards(eng)
+        for v in verifier.verify_shard_plan(splan, step_plans, eng.views):
+            n_violations += 1
+            print(f"    {v.label()}")
+    print(f"verify-plans: {n_plans} plans, {n_violations} violations, "
+          f"{t_total:.1f} ms verify time "
+          f"({t_total / max(n_plans, 1):.2f} ms/plan)")
+    return 1 if n_violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
